@@ -1,0 +1,64 @@
+"""Pallas kernel micro-benchmarks (interpret mode on CPU; TPU is the target).
+
+Reports wall time of the interpret-mode kernels (correctness path) and the
+dense-matmul JAX fallback, plus the TPU roofline projection for the resident
+kernel (the number that matters for deployment).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gset
+from repro.kernels import ref, ssa_update
+
+from .common import emit, time_call
+
+
+def run(csv_prefix: str = "kernels"):
+    p = gset.load("G11")
+    model = p.to_ising()
+    N = model.n
+    J = jnp.asarray(model.dense_J(), jnp.float32)
+    h = jnp.asarray(model.h, jnp.int32)
+    rng = np.random.default_rng(0)
+    R, C = 8, 4
+    m = jnp.asarray(rng.choice([-1.0, 1.0], size=(R, N)).astype(np.float32))
+    it = jnp.zeros((R, N), jnp.int32)
+    noise = jnp.asarray(rng.choice([-1, 1], size=(C, R, N)).astype(np.int8))
+    bH = jnp.full((R,), 2**30, jnp.int32)
+    bm = m.astype(jnp.int8)
+
+    us = time_call(lambda: ref.local_field_ref(m, h, J))
+    emit(f"{csv_prefix}/local_field_jnp", us, f"R={R};N={N}")
+    us = time_call(
+        lambda: ssa_update.local_field(m, h, J, block_r=8, block_n=128, block_k=128)
+    )
+    emit(f"{csv_prefix}/local_field_pallas_interp", us, "interpret=True")
+
+    us = time_call(
+        lambda: ssa_update.ssa_plateau(m, it, J, h, noise, jnp.int32(8), bH, bm,
+                                       n_rnd=2, eligible=True, block_r=8)
+    )
+    emit(f"{csv_prefix}/ssa_plateau_pallas_interp", us, f"C={C}_cycles_fused")
+
+    # TPU v5e projection for the resident kernel (per cycle, per chip):
+    flops = 2 * R * N * N
+    t_mxu = flops / 197e12
+    hbm = R * N * (1 + 4 + 4)  # noise + state rw (J resident in VMEM)
+    t_mem = hbm / 819e9
+    emit(f"{csv_prefix}/resident_tpu_model_per_cycle", 0.0,
+         f"t_compute={t_mxu*1e9:.1f}ns;t_memory={t_mem*1e9:.1f}ns;"
+         f"bound={'compute' if t_mxu > t_mem else 'memory'}")
+    # non-resident comparison: J re-read from HBM each cycle
+    t_mem_nores = (hbm + 2 * N * N) / 819e9
+    emit(f"{csv_prefix}/nonresident_tpu_model_per_cycle", 0.0,
+         f"t_memory={t_mem_nores*1e9:.1f}ns;residency_gain="
+         f"{t_mem_nores/max(t_mem, t_mxu):.1f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Paper Table VII: HA-SSA vs parallel tempering (IPAPT-class baseline).
+
+The paper: IPAPT reaches best-known G11 with avg 561 in 2.64 ms; HA-SSA
+reaches best-known with avg 558 in 1.00 ms (2.64× faster).  We compare the
+algorithms at matched cycle budgets on the same instance.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import PTHyperParams, SSAHyperParams, anneal, anneal_pt, gset
+
+from .common import emit
+
+
+def run(problem: str = "G11", trials: int = 8, m_shot: int = 15,
+        csv_prefix: str = "table7_pt"):
+    p = gset.load(problem)
+    hp = SSAHyperParams(n_trials=trials, m_shot=m_shot)
+    cycles = hp.total_cycles
+
+    t0 = time.perf_counter()
+    r_ha = anneal(p, hp, seed=0, track_energy=False, noise="xorshift")
+    t_ha = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    r_pt = anneal_pt(p, PTHyperParams(n_replicas=8, n_cycles=cycles), seed=0,
+                     track_energy=False)
+    t_pt = time.perf_counter() - t0
+
+    emit(f"{csv_prefix}/{problem}/hassa", t_ha * 1e6,
+         f"best={r_ha.overall_best_cut};avg={r_ha.mean_best_cut:.1f}")
+    emit(f"{csv_prefix}/{problem}/pt", t_pt * 1e6, f"best={r_pt.best_cut}")
+    emit(f"{csv_prefix}/{problem}/hassa_vs_pt_cut", 0.0,
+         f"{r_ha.overall_best_cut - r_pt.best_cut:+d}")
+    return dict(ha=r_ha, pt=r_pt, t_ha=t_ha, t_pt=t_pt)
+
+
+if __name__ == "__main__":
+    run()

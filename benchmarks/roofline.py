@@ -1,0 +1,60 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and emits
+one row per (arch × shape × mesh): the three terms, the dominant bound, the
+MODEL/HLO flops ratio, and whether the step fits 16 GB/device.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_records(dryrun_dir: str = DRYRUN_DIR):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(csv_prefix: str = "roofline", dryrun_dir: str = DRYRUN_DIR):
+    recs = load_records(dryrun_dir)
+    if not recs:
+        emit(f"{csv_prefix}/missing", 0.0,
+             "run `python -m repro.launch.dryrun --all` first")
+        return []
+    for r in recs:
+        name = f"{csv_prefix}/{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r.get("rules", "baseline") != "baseline":
+            name += f"/{r['rules']}"
+        if r["status"] == "skipped":
+            emit(name, 0.0, f"SKIP:{r['reason'][:60]}")
+            continue
+        if r["status"] != "ok":
+            emit(name, 0.0, f"ERROR:{r.get('error', '?')[:60]}")
+            continue
+        if "t_compute_s" not in r:
+            emit(name, 0.0, f"compiled_only;peak_GB={r['peak_bytes_per_device']/1e9:.2f}")
+            continue
+        bound = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        frac = r["t_compute_s"] / bound if bound else 0.0
+        emit(
+            name,
+            bound * 1e6,
+            f"dom={r['dominant']};tc_ms={r['t_compute_s']*1e3:.2f};"
+            f"tm_ms={r['t_memory_s']*1e3:.2f};tx_ms={r['t_collective_s']*1e3:.2f};"
+            f"roofline_frac={frac:.3f};useful={r['useful_flops_ratio'] or 0:.3f};"
+            f"peak_GB={r['peak_bytes_per_device']/1e9:.2f};"
+            f"fits16G={r['fits_hbm_16g']}",
+        )
+    return recs
+
+
+if __name__ == "__main__":
+    run()

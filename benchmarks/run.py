@@ -1,0 +1,57 @@
+"""Benchmark harness entry point: ``python -m benchmarks.run [--full]``.
+
+One module per paper table/figure (see DESIGN.md §5):
+  convergence  — Fig. 7/9    energy-vs-cycles, HA-SSA/SSA/SA
+  histograms   — Fig. 8/10   cut-value distributions over trials
+  memory_table — Table IV    Eq.(5)/(6) memory model + structural witness
+  timing       — Table V     annealing time vs SA (+ HW models)
+  pt_compare   — Table VII   vs parallel tempering
+  equal_temp   — Fig. 12     equivalent-temperature-control comparison
+  other_problems — Sec. VI-B  TSP / partitioning / graph isomorphism
+  kernel_bench — (HW)        Pallas kernel timings + TPU projections
+  roofline     — (framework) per-(arch×shape×mesh) roofline terms
+
+Output: ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale trials/cycles (slow: ~100 trials × 90k cycles)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benchmark names")
+    args = ap.parse_args()
+
+    from . import (convergence, equal_temp, histograms, kernel_bench,
+                   memory_table, other_problems, pt_compare, roofline, timing)
+
+    full = args.full
+    jobs = {
+        "memory_table": lambda: memory_table.run(),
+        "convergence": lambda: convergence.run(
+            trials=100 if full else 8, m_shot=150 if full else 20),
+        "histograms": lambda: histograms.run(
+            trials=100 if full else 16, m_shot=150 if full else 15),
+        "timing": lambda: timing.run(
+            trials=100 if full else 8, m_shot=150 if full else 10),
+        "pt_compare": lambda: pt_compare.run(
+            trials=100 if full else 8, m_shot=150 if full else 15),
+        "equal_temp": lambda: equal_temp.run(trials=100 if full else 8),
+        "other_problems": lambda: other_problems.run(),
+        "kernel_bench": lambda: kernel_bench.run(),
+        "roofline": lambda: roofline.run(),
+    }
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    for name, job in jobs.items():
+        if only and name not in only:
+            continue
+        job()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Paper Table V: annealing time, HA-SSA hardware vs SA (CPU).
+
+The paper's FPGA does 90,000 cycles at 100 MHz = 0.9 ms.  We report:
+  * measured JAX wall-time per trial batch (this container's CPU),
+  * per-cycle throughput,
+  * the modeled 100 MHz-equivalent (cycles × 10 ns) for comparability,
+  * the TPU-projected time from the resident-kernel roofline
+    (dense J resident in VMEM: per cycle ≈ max(matmul flops / 197 TF,
+    noise+state HBM traffic / 819 GB/s) per chip).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import SAHyperParams, SSAHyperParams, anneal, anneal_sa, gset
+
+from .common import emit
+
+
+def run(problems=("G11", "King1"), trials: int = 8, m_shot: int = 10,
+        csv_prefix: str = "table5_timing"):
+    out = {}
+    for name in problems:
+        p = gset.load(name)
+        hp = SSAHyperParams(n_trials=trials, m_shot=m_shot)
+        cycles = hp.total_cycles
+
+        t0 = time.perf_counter()
+        r_ha = anneal(p, hp, seed=0, track_energy=False, noise="xorshift")
+        t_ha = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        r_sa = anneal_sa(
+            p, SAHyperParams(n_trials=trials, n_cycles=cycles), seed=0,
+            track_energy=False,
+        )
+        t_sa = time.perf_counter() - t0
+
+        hw_ms = cycles * 10e-9 * 1e3  # 100 MHz FPGA model
+        # TPU v5e resident-kernel model (batched trials, one chip):
+        n = p.n
+        flops_per_cycle = 2 * trials * n * n
+        bytes_per_cycle = trials * n * (1 + 4 + 4)  # noise int8 + state rw
+        t_tpu = cycles * max(flops_per_cycle / 197e12, bytes_per_cycle / 819e9)
+
+        emit(f"{csv_prefix}/{name}/hassa_jax", t_ha * 1e6,
+             f"best={r_ha.overall_best_cut};avg={r_ha.mean_best_cut:.1f};"
+             f"cycles={cycles}")
+        emit(f"{csv_prefix}/{name}/sa_cpu", t_sa * 1e6,
+             f"best={r_sa.overall_best_cut};avg={r_sa.mean_best_cut:.1f}")
+        emit(f"{csv_prefix}/{name}/fpga_100mhz_model_ms", 0.0, f"{hw_ms:.2f}")
+        emit(f"{csv_prefix}/{name}/tpu_v5e_model_ms", 0.0, f"{t_tpu*1e3:.3f}")
+        emit(f"{csv_prefix}/{name}/jax_speedup_vs_sa", 0.0, f"{t_sa/t_ha:.1f}x")
+        out[name] = dict(t_ha=t_ha, t_sa=t_sa, hw_ms=hw_ms)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Beyond-paper feature: HA-SSA optimizes MoE expert placement (EP sharding).
+
+Generates synthetic-but-structured co-activation statistics for an
+olmoe-style 64-expert layer, then anneals the balanced-min-cut placement
+onto 16 devices and compares modeled all-to-all cost vs round-robin.
+
+    PYTHONPATH=src python examples/expert_placement.py
+"""
+import numpy as np
+
+from repro.core.placement import coactivation_stats, expert_placement
+
+E, K, T = 64, 8, 4000
+rng = np.random.default_rng(0)
+
+# structured routing: experts cluster into 8 cliques that co-fire
+cliques = np.arange(E).reshape(8, 8)
+routing = np.zeros((T, K), dtype=np.int64)
+for t in range(T):
+    c = rng.integers(0, 8)
+    members = cliques[c]
+    routing[t] = rng.choice(members, size=K, replace=False) if K <= 8 else members
+    if rng.random() < 0.3:  # cross-clique noise
+        routing[t, 0] = rng.integers(0, E)
+
+coact, load = coactivation_stats(routing, E)
+res = expert_placement(coact, load, n_devices=16, seed=0)
+print(f"experts={E} devices=16 tokens={T}")
+print(f"round-robin traffic cost : {res.baseline_cost:.0f}")
+print(f"HA-SSA placement cost    : {res.cost:.0f}")
+print(f"improvement              : {100*res.improvement:.1f}%")
+print(f"assignment (expert -> device): {res.assignment.tolist()}")

@@ -1,0 +1,39 @@
+"""Serving example: batched prefill + greedy decode with a KV cache.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch granite-3-8b]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import model_defs
+from repro.models.params import init_params
+from repro.serve.engine import ServeConfig, generate
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="granite-3-8b")
+ap.add_argument("--batch", type=int, default=4)
+ap.add_argument("--prompt-len", type=int, default=16)
+ap.add_argument("--new-tokens", type=int, default=24)
+args = ap.parse_args()
+
+cfg = get_config(args.arch, reduced=True)
+params = init_params(model_defs(cfg), jax.random.PRNGKey(0))
+prompts = jax.random.randint(jax.random.PRNGKey(1),
+                             (args.batch, args.prompt_len), 0, cfg.vocab)
+batch = {"tokens": prompts}
+if cfg.frontend == "vision":
+    batch["patches"] = jax.random.normal(
+        jax.random.PRNGKey(2), (args.batch, cfg.n_patches, cfg.d_model)) * 0.02
+if cfg.encoder_layers:
+    batch["frames"] = jax.random.normal(
+        jax.random.PRNGKey(2), (args.batch, cfg.n_frames, cfg.d_model)) * 0.1
+
+out = generate(params, batch, cfg,
+               ServeConfig(max_seq=args.prompt_len + args.new_tokens),
+               n_new_tokens=args.new_tokens)
+print(f"arch={cfg.name} batch={args.batch}")
+for b in range(args.batch):
+    print(f"  request {b}: {out[b].tolist()}")

@@ -1,0 +1,48 @@
+"""End-to-end training driver: train a LM on the synthetic pipeline with
+checkpointing; resumes if interrupted (kill it mid-run and re-run).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200] [--arch qwen3-1.7b]
+                                               [--scale reduced|full]
+
+'reduced' trains the smoke-scale config (CPU-friendly); 'full' is the real
+config (use on a TPU host via launch/train.py).
+"""
+import argparse
+
+import jax
+
+from repro.checkpoint.ckpt import CheckpointManager
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, synthetic_batch
+from repro.ft.resilience import run_training
+from repro.optim.adamw import AdamWConfig
+from repro.train.step import TrainConfig, init_train_state, make_train_step
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=120)
+ap.add_argument("--arch", default="qwen3-1.7b")
+ap.add_argument("--scale", default="reduced", choices=("reduced", "full"))
+ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--seq", type=int, default=64)
+args = ap.parse_args()
+
+cfg = get_config(args.arch, reduced=(args.scale == "reduced"))
+tc = TrainConfig(opt=AdamWConfig(lr_peak=3e-3, warmup_steps=10,
+                                 total_steps=args.steps), loss_chunk=64)
+dc = DataConfig(vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch,
+                n_patches=cfg.n_patches if cfg.frontend == "vision" else 0,
+                d_model=cfg.d_model,
+                n_frames=cfg.n_frames if cfg.encoder_layers else 0)
+
+step_fn = jax.jit(make_train_step(cfg, tc))
+state, losses = run_training(
+    init_state_fn=lambda: init_train_state(cfg, tc, jax.random.PRNGKey(0)),
+    train_step=step_fn,
+    batch_fn=lambda s: synthetic_batch(dc, s),
+    n_steps=args.steps,
+    ckpt=CheckpointManager(args.ckpt_dir, save_interval=20, keep=2),
+    log_every=10,
+)
+print(f"\ntrained {args.arch} ({args.scale}) for {args.steps} steps: "
+      f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")

@@ -1,0 +1,108 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+"""§Perf hillclimb driver: runs the variant ladder for the three chosen
+cells and writes experiments/perf/<arch>__<shape>__<tag>.json.
+
+Cells (from the baseline roofline table):
+  A jamba-1.5-large-398b × long_500k  — worst roofline fraction (0.0016)
+  B olmoe-1b-7b × train_4k            — most collective-bound (share 0.485)
+  C mistral-large-123b × train_4k     — paper-representative: reduce stored
+                                        intermediate state to fit HBM
+
+Each variant is a (hypothesis, change) pair; see EXPERIMENTS.md §Perf for
+the napkin math and confirm/refute log.
+"""
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import traceback  # noqa: E402
+
+sys.path.insert(0, "src")
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.launch.dryrun import run_cell  # noqa: E402
+from repro.sharding import (DEFAULT_RULES, SERVE_WEIGHT_STATIONARY_RULES,  # noqa: E402
+                            TRAIN_FSDP_SP_RULES)
+from repro.train.step import TrainConfig  # noqa: E402
+from repro.optim.adamw import AdamWConfig  # noqa: E402
+
+OUT = "experiments/perf"
+os.makedirs(OUT, exist_ok=True)
+
+
+def save(rec, tag):
+    path = os.path.join(OUT, f"{rec['arch']}__{rec['shape']}__{tag}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    if rec.get("status") == "ok" and "t_compute_s" in rec:
+        print(f"== {tag}: tc={rec['t_compute_s']*1e3:.2f}ms "
+              f"tm={rec['t_memory_s']*1e3:.2f}ms tx={rec['t_collective_s']*1e3:.2f}ms "
+              f"dom={rec['dominant']} peak={rec['peak_bytes_per_device']/1e9:.1f}GB "
+              f"useful={rec.get('useful_flops_ratio') or 0:.3f}", flush=True)
+
+
+VARIANTS = {
+    # ---- Cell A: jamba long_500k (decode) --------------------------------
+    "A1": lambda: run_cell(
+        "jamba-1.5-large-398b", "long_500k", "single",
+        rules_tag="A1_bf16_params", param_dtype=jnp.bfloat16),
+    "A2": lambda: run_cell(
+        "jamba-1.5-large-398b", "long_500k", "single",
+        rules_tag="A2_bf16+weight_stationary",
+        param_dtype=jnp.bfloat16, rules=SERVE_WEIGHT_STATIONARY_RULES),
+    # ---- Cell B: olmoe train_4k ------------------------------------------
+    "B1": lambda: run_cell(
+        "olmoe-1b-7b", "train_4k", "single",
+        rules_tag="B1_gather_moe",
+        cfg_transform=lambda c: dataclasses.replace(c, moe_impl="gather")),
+    "B2": lambda: run_cell(
+        "olmoe-1b-7b", "train_4k", "single",
+        rules_tag="B2_gather+mb4+bf16grad",
+        cfg_transform=lambda c: dataclasses.replace(c, moe_impl="gather"),
+        train_cfg=TrainConfig(opt=AdamWConfig(), microbatches=4,
+                              grad_accum_dtype=jnp.bfloat16)),
+    "B3": lambda: run_cell(
+        "olmoe-1b-7b", "train_4k", "single",
+        rules_tag="B3_gather+mb4+bf16grad+sp",
+        cfg_transform=lambda c: dataclasses.replace(c, moe_impl="gather"),
+        rules=TRAIN_FSDP_SP_RULES,
+        train_cfg=TrainConfig(opt=AdamWConfig(), microbatches=4,
+                              grad_accum_dtype=jnp.bfloat16)),
+    # ---- Cell C: mistral train_4k ----------------------------------------
+    "C1": lambda: run_cell(
+        "mistral-large-123b", "train_4k", "single",
+        rules_tag="C1_mb16",
+        train_cfg=TrainConfig(opt=AdamWConfig(), microbatches=16,
+                              grad_accum_dtype=jnp.bfloat16)),
+    "C2": lambda: run_cell(
+        "mistral-large-123b", "train_4k", "single",
+        rules_tag="C2_mb16+fsdp_sp",
+        rules=TRAIN_FSDP_SP_RULES,
+        train_cfg=TrainConfig(opt=AdamWConfig(), microbatches=16,
+                              grad_accum_dtype=jnp.bfloat16)),
+    "C3": lambda: run_cell(
+        "mistral-large-123b", "train_4k", "single",
+        rules_tag="C3_mb4+fsdp_sp",
+        rules=TRAIN_FSDP_SP_RULES,
+        train_cfg=TrainConfig(opt=AdamWConfig(), microbatches=4,
+                              grad_accum_dtype=jnp.bfloat16)),
+}
+
+
+def main():
+    which = sys.argv[1:] or list(VARIANTS)
+    for tag in which:
+        try:
+            rec = VARIANTS[tag]()
+            save(rec, rec["rules"])
+        except Exception:
+            traceback.print_exc()
+            print(f"variant {tag} FAILED", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+"""Round 3: bf16-compute-params variants + corrected gather-MoE re-judgment."""
+import dataclasses, json, sys, traceback
+sys.path.insert(0, "src")
+import jax.numpy as jnp
+from repro.launch.dryrun import run_cell
+from repro.sharding import TRAIN_FSDP_SP_RULES
+from repro.train.step import TrainConfig
+from repro.optim.adamw import AdamWConfig
+
+OUT = "experiments/perf"; os.makedirs(OUT, exist_ok=True)
+
+def mb(n, **kw):
+    return TrainConfig(opt=AdamWConfig(), microbatches=n,
+                       grad_accum_dtype=jnp.bfloat16, **kw)
+
+V = [
+  ("C4r_mb4+fsdp_sp+bf16compute", lambda: run_cell(
+      "mistral-large-123b","train_4k","single",
+      rules_tag="C4r_mb4+fsdp_sp+bf16compute", rules=TRAIN_FSDP_SP_RULES,
+      train_cfg=mb(4, param_compute_dtype=jnp.bfloat16))),
+  ("B4r_mb4+sp+bf16compute", lambda: run_cell(
+      "olmoe-1b-7b","train_4k","single",
+      rules_tag="B4r_mb4+sp+bf16compute", rules=TRAIN_FSDP_SP_RULES,
+      train_cfg=mb(4, param_compute_dtype=jnp.bfloat16))),
+  # re-judge gather-MoE with corrected metrology (mb=1, deployment chunking)
+  ("B0r_gather_moe", lambda: run_cell(
+      "olmoe-1b-7b","train_4k","single", rules_tag="B0r_gather_moe",
+      cfg_transform=lambda c: dataclasses.replace(c, moe_impl="gather"))),
+]
+for tag, fn in V:
+    try:
+        rec = fn()
+        path = os.path.join(OUT, f"{rec['arch']}__{rec['shape']}__{rec['rules']}.json")
+        json.dump(rec, open(path, "w"), indent=1)
+        if "t_compute_s" in rec:
+            print(f"== {tag}: tc={rec['t_compute_s']*1e3:.2f}ms tm={rec['t_memory_s']*1e3:.2f}ms "
+                  f"tx={rec['t_collective_s']*1e3:.2f}ms dom={rec['dominant']} "
+                  f"peak={rec['peak_bytes_per_device']/1e9:.1f}GB "
+                  f"useful={rec.get('useful_flops_ratio') or 0:.3f}", flush=True)
+    except Exception:
+        traceback.print_exc(); print(f"{tag} FAILED", flush=True)
+print("round 3 done", flush=True)

@@ -1,0 +1,1 @@
+from .ckpt import *  # noqa: F401,F403

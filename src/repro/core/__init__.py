@@ -1,0 +1,24 @@
+"""repro.core — the paper's contribution: HA-SSA / SSA / SA / PT annealers.
+
+Public API:
+  IsingModel, MaxCutProblem           — problem substrate (ising.py)
+  gset.load                           — benchmark instances (gset.py)
+  SSAHyperParams, anneal, solve_maxcut— SSA + HA-SSA (ssa.py)
+  SAHyperParams, anneal_sa            — conventional SA baseline (sa.py)
+  PTHyperParams, anneal_pt            — parallel-tempering baseline (pt.py)
+  memory                              — Eq.(5)/(6) memory models
+"""
+from . import gset, memory  # noqa: F401
+from .ising import IsingModel, MaxCutProblem, fig4_example, ising_energy  # noqa: F401
+from .pt import PTHyperParams, PTResult, anneal_pt  # noqa: F401
+from .sa import SAHyperParams, SAResult, anneal_sa  # noqa: F401
+from .schedule import Schedule, hassa_schedule, n_temp_steps, ssa_schedule  # noqa: F401
+from .ssa import (  # noqa: F401
+    AnnealResult,
+    SSAHyperParams,
+    anneal,
+    pack_spins,
+    solve_maxcut,
+    ssa_cycle_update,
+    unpack_spins,
+)

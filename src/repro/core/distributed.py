@@ -1,0 +1,96 @@
+"""Distributed SSA/HA-SSA: the paper's annealer on the production mesh.
+
+Parallel axes (DESIGN.md §2):
+  * replicas (independent trials) → `data`  (the paper runs trials
+    sequentially on one FPGA; a pod runs thousands at once),
+  * spins → `model` for dense instances (K2000-class): the per-cycle local
+    field is a (T, N)·(N, N) matmul with J's rows sharded over `model`;
+    GSPMD turns the contraction into partial-sum all-reduces — the only
+    collective in the loop, exactly the FPGA's "all spins talk to all
+    spin-gates" wiring mapped onto ICI.
+
+``anneal_step_lowering`` builds the pjit'd one-iteration step (full
+I0min→I0max sweep with the HA-SSA storage policy fused as a running
+arg-best) for the dry-run; the same step runs for real on any mesh.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .rng import xorshift_next_bits
+from .ssa import SSAHyperParams, ssa_cycle_update
+
+__all__ = ["make_iteration_step", "anneal_step_lowering"]
+
+
+def make_iteration_step(hp: SSAHyperParams, mesh: Optional[Mesh] = None):
+    """One full I0min→I0max iteration (HA-SSA storage policy fused).
+
+    step(rng (4,T,N) u32, m (T,N) f32, itanh (T,N) i32, best_H (T,) i32,
+         best_m (T,N) i8, J (N,N) f32, h (N,) i32) → updated state tuple.
+    """
+    sched = hp.schedule("hassa")
+    i0_seq = jnp.asarray(sched.i0_per_cycle, jnp.int32)
+    elig = jnp.asarray(sched.store_mask)
+
+    def constrain(x, spec):
+        if mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    def step(rng, m, itanh, best_H, best_m, J, h):
+        def cycle(carry, xs):
+            rng, m, itanh, best_H, best_m = carry
+            i0, el = xs
+            field = (h + jnp.matmul(m, J)).astype(jnp.int32)
+            rng, r = xorshift_next_bits(rng)
+            m_new, it_new = ssa_cycle_update(field, itanh, r, i0, hp.n_rnd)
+            m_new = constrain(m_new.astype(jnp.float32), P("data", "model"))
+            field_new = (h + jnp.matmul(m_new, J)).astype(jnp.int32)
+            m_i = m_new.astype(jnp.int32)
+            H = -(jnp.sum(h * m_i, axis=-1) + jnp.sum(m_i * field_new, axis=-1)) // 2
+            better = el & (H < best_H)
+            best_H = jnp.where(better, H, best_H)
+            best_m = jnp.where(better[:, None], m_new.astype(jnp.int8), best_m)
+            return (rng, m_new, it_new, best_H, best_m), None
+
+        m = constrain(m, P("data", "model"))
+        carry = (rng, m, itanh, best_H, best_m)
+        carry, _ = jax.lax.scan(cycle, carry, (i0_seq, elig))
+        return carry
+
+    return step
+
+
+def anneal_step_lowering(
+    mesh: Mesh,
+    n_spins: int = 2000,
+    n_trials: int = 4096,
+    hp: Optional[SSAHyperParams] = None,
+):
+    """Lower+compile the distributed iteration step (dry-run, no allocation)."""
+    hp = hp or SSAHyperParams(n_trials=n_trials)
+    step = make_iteration_step(hp, mesh)
+    T, N = n_trials, n_spins
+    dm = NamedSharding(mesh, P("data", "model"))
+    dd = NamedSharding(mesh, P("data"))
+    rep = NamedSharding(mesh, P())
+    jm = NamedSharding(mesh, P("model"))
+    shapes = (
+        jax.ShapeDtypeStruct((4, T, N), jnp.uint32),   # rng lanes
+        jax.ShapeDtypeStruct((T, N), jnp.float32),     # m
+        jax.ShapeDtypeStruct((T, N), jnp.int32),       # itanh
+        jax.ShapeDtypeStruct((T,), jnp.int32),         # best_H
+        jax.ShapeDtypeStruct((T, N), jnp.int8),        # best_m
+        jax.ShapeDtypeStruct((N, N), jnp.float32),     # J
+        jax.ShapeDtypeStruct((N,), jnp.int32),         # h
+    )
+    rng_sh = NamedSharding(mesh, P(None, "data", "model"))
+    shardings = (rng_sh, dm, dm, dd, dm, jm, rep)
+    jitted = jax.jit(step, in_shardings=shardings, donate_argnums=(0, 1, 2, 3, 4))
+    with mesh:
+        return jitted.lower(*shapes)

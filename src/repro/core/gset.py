@@ -1,0 +1,131 @@
+"""G-set benchmark instances (Sec. II-C, Table I) and structure-faithful stand-ins.
+
+The paper evaluates on G11, G12, G13 (800 vertices, 1600 edges, ±1 weights,
+toroidal 4-regular topology) plus a custom 'King1' (800 vertices, 3200 edges,
+king's-graph 8-neighbor topology, ±1 uniform weights).
+
+This container has no network access, so the exact Stanford G-set files may be
+absent.  :func:`load` first looks for real instance files under
+``data/gset/<name>`` (standard G-set text format: ``n m`` header then
+``i j w`` rows, 1-indexed); if absent it deterministically *generates* an
+instance with the published topology and weight distribution.  Generated
+instances carry ``best_known=None`` — relative claims (HA-SSA ≡ SSA, memory
+ratio, speedup vs SA) are instance-independent and are what the tests assert.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import numpy as np
+
+from .ising import MaxCutProblem
+
+__all__ = [
+    "load",
+    "parse_gset_text",
+    "toroidal_grid",
+    "king_graph",
+    "complete_graph",
+    "GSET_DIR",
+]
+
+GSET_DIR = os.environ.get(
+    "REPRO_GSET_DIR", os.path.join(os.path.dirname(__file__), "..", "..", "..", "data", "gset")
+)
+
+_BEST_KNOWN = {"G11": 564, "G12": 556, "G13": 582}
+
+
+def parse_gset_text(text: str, name: str = "gset") -> MaxCutProblem:
+    """Parse the standard G-set format: 'n m' header, then 'i j w' (1-indexed)."""
+    lines = [ln for ln in text.strip().splitlines() if ln.strip()]
+    n, m = map(int, lines[0].split()[:2])
+    edges = np.zeros((m, 2), dtype=np.int64)
+    weights = np.zeros(m, dtype=np.int64)
+    for k, ln in enumerate(lines[1 : m + 1]):
+        i, j, w = map(int, ln.split()[:3])
+        edges[k] = (i - 1, j - 1)
+        weights[k] = w
+    return MaxCutProblem(
+        n=n, edges=edges, weights=weights, name=name, best_known=_BEST_KNOWN.get(name)
+    )
+
+
+def _torus_coords(n: int) -> Tuple[int, int]:
+    """Pick a near-square (rows, cols) factorization for an n-vertex torus."""
+    r = int(np.sqrt(n))
+    while n % r:
+        r -= 1
+    return r, n // r
+
+
+def toroidal_grid(n: int = 800, seed: int = 11, name: str = "toroidal") -> MaxCutProblem:
+    """4-regular 2-D torus with ±1 uniform weights (G11/G12/G13 family).
+
+    800 vertices ⇒ 1600 edges, matching Table I.
+    """
+    rows, cols = _torus_coords(n)
+    rng = np.random.default_rng(seed)
+    edges = []
+    for r in range(rows):
+        for c in range(cols):
+            v = r * cols + c
+            edges.append((v, r * cols + (c + 1) % cols))          # right
+            edges.append((v, ((r + 1) % rows) * cols + c))        # down
+    edges = np.asarray(edges, dtype=np.int64)
+    weights = rng.choice(np.array([-1, 1], dtype=np.int64), size=len(edges))
+    return MaxCutProblem(n=n, edges=edges, weights=weights, name=name)
+
+
+def king_graph(n: int = 800, seed: int = 1, name: str = "King1") -> MaxCutProblem:
+    """8-neighbor king's graph on a torus, ±1 uniform weights (King1 family).
+
+    800 vertices ⇒ 3200 edges (4 undirected edge classes per vertex:
+    E, S, SE, SW), matching Table I.
+    """
+    rows, cols = _torus_coords(n)
+    rng = np.random.default_rng(seed)
+    edges = []
+    for r in range(rows):
+        for c in range(cols):
+            v = r * cols + c
+            rn, cn = (r + 1) % rows, (c + 1) % cols
+            cp = (c - 1) % cols
+            edges.append((v, r * cols + cn))    # E
+            edges.append((v, rn * cols + c))    # S
+            edges.append((v, rn * cols + cn))   # SE
+            edges.append((v, rn * cols + cp))   # SW
+    edges = np.asarray(edges, dtype=np.int64)
+    weights = rng.choice(np.array([-1, 1], dtype=np.int64), size=len(edges))
+    return MaxCutProblem(n=n, edges=edges, weights=weights, name=name)
+
+
+def complete_graph(n: int = 2000, seed: int = 2000, name: str = "K-like") -> MaxCutProblem:
+    """Fully-connected ±1 instance (K2000 family, Sec. VI-B / [28])."""
+    rng = np.random.default_rng(seed)
+    ii, jj = np.triu_indices(n, k=1)
+    edges = np.stack([ii, jj], axis=1)
+    weights = rng.choice(np.array([-1, 1], dtype=np.int64), size=len(edges))
+    return MaxCutProblem(n=n, edges=edges, weights=weights, name=name)
+
+
+_GENERATORS = {
+    "G11": lambda: toroidal_grid(800, seed=11, name="G11-like"),
+    "G12": lambda: toroidal_grid(800, seed=12, name="G12-like"),
+    "G13": lambda: toroidal_grid(800, seed=13, name="G13-like"),
+    "King1": lambda: king_graph(800, seed=1, name="King1"),
+    "K2000": lambda: complete_graph(2000, seed=2000, name="K2000-like"),
+}
+
+
+def load(name: str, gset_dir: Optional[str] = None) -> MaxCutProblem:
+    """Load a benchmark instance: real file if available, else generated twin."""
+    d = gset_dir or GSET_DIR
+    path = os.path.join(d, name)
+    if os.path.exists(path):
+        with open(path) as f:
+            return parse_gset_text(f.read(), name=name)
+    if name in _GENERATORS:
+        return _GENERATORS[name]()
+    raise KeyError(f"unknown instance {name!r}; known: {sorted(_GENERATORS)}")

@@ -1,0 +1,237 @@
+"""Ising-model substrate for the HA-SSA/SSA/SA annealers.
+
+The paper (Sec. II-A) represents a combinatorial optimization problem as an
+Ising network: spins m_i ∈ {-1,+1}, biases h_i, couplings J_ij, Hamiltonian
+
+    H = - Σ_i h_i m_i - 1/2 Σ_{i,j} J_ij m_i m_j                       (Eq. 1)
+
+MAX-CUT maps onto it with J_ij = -w_ij, h_i = 0, so that
+cut(m) = (Σ_{i<j} w_ij - Σ_{i<j} w_ij m_i m_j) / 2 = (W_sum + H) / 2 ... see
+:func:`MaxCutProblem.cut_value` for the exact sign bookkeeping.
+
+Representations
+---------------
+Problems in the paper's benchmark set are *sparse* (4- or 8-regular), while
+the SSA literature also targets *dense* instances (K2000).  We keep both:
+
+* **Padded adjacency** ``(nbr_idx, nbr_w)`` of shape ``(N, max_deg)`` — the
+  TPU/CPU-friendly sparse form (pure gathers, no segment ops).  Padding
+  entries point at the row's own vertex with weight 0, so they contribute
+  nothing to local fields.
+* **Dense matrix** ``J`` of shape ``(N, N)`` — fed to the MXU/Pallas path
+  for dense problems and for batched-replica matmuls.
+
+All coupling/bias arithmetic is integer-valued (the paper's hardware uses
+4-bit integers; we use int32 carriers).  The dense matmul path runs in
+float32 for MXU/CPU speed, which is exact for |field| < 2^24 — asserted at
+model construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "IsingModel",
+    "MaxCutProblem",
+    "ising_energy",
+    "local_fields_dense",
+    "local_fields_sparse",
+]
+
+# Exactness bound for the float32 matmul path: fields must stay below 2^24.
+_F32_EXACT_BOUND = 1 << 24
+
+
+@dataclasses.dataclass(frozen=True)
+class IsingModel:
+    """An Ising model with both sparse (padded adjacency) and dense views.
+
+    Attributes:
+      n: number of spins.
+      h: int32[n] biases.
+      nbr_idx: int32[n, max_deg] neighbor indices (padded with self-index).
+      nbr_w: int32[n, max_deg] coupling weights J_ij (padded with 0).
+      name: human-readable instance name.
+    """
+
+    n: int
+    h: np.ndarray
+    nbr_idx: np.ndarray
+    nbr_w: np.ndarray
+    name: str = "ising"
+
+    @property
+    def max_degree(self) -> int:
+        return int(self.nbr_idx.shape[1])
+
+    # -- constructors -----------------------------------------------------
+    @staticmethod
+    def from_edges(
+        n: int,
+        edges: np.ndarray,
+        weights: np.ndarray,
+        h: Optional[np.ndarray] = None,
+        name: str = "ising",
+    ) -> "IsingModel":
+        """Build from an undirected edge list (i, j, J_ij)."""
+        edges = np.asarray(edges, dtype=np.int64)
+        weights = np.asarray(weights, dtype=np.int64)
+        if edges.ndim != 2 or edges.shape[1] != 2:
+            raise ValueError(f"edges must be (E,2), got {edges.shape}")
+        if len(weights) != len(edges):
+            raise ValueError("weights/edges length mismatch")
+        deg = np.zeros(n, dtype=np.int64)
+        for i, j in edges:
+            if i == j:
+                raise ValueError("self-loops are not Ising couplings")
+            deg[i] += 1
+            deg[j] += 1
+        max_deg = int(deg.max()) if len(edges) else 1
+        nbr_idx = np.tile(np.arange(n, dtype=np.int64)[:, None], (1, max_deg))
+        nbr_w = np.zeros((n, max_deg), dtype=np.int64)
+        cursor = np.zeros(n, dtype=np.int64)
+        for (i, j), w in zip(edges, weights):
+            nbr_idx[i, cursor[i]] = j
+            nbr_w[i, cursor[i]] = w
+            cursor[i] += 1
+            nbr_idx[j, cursor[j]] = i
+            nbr_w[j, cursor[j]] = w
+            cursor[j] += 1
+        hh = np.zeros(n, dtype=np.int64) if h is None else np.asarray(h, np.int64)
+        model = IsingModel(
+            n=n,
+            h=hh.astype(np.int32),
+            nbr_idx=nbr_idx.astype(np.int32),
+            nbr_w=nbr_w.astype(np.int32),
+            name=name,
+        )
+        bound = int(np.abs(hh).max(initial=0) + np.abs(nbr_w).sum(axis=1).max(initial=0))
+        if bound >= _F32_EXACT_BOUND:
+            raise ValueError(
+                f"field bound {bound} exceeds float32-exact range; "
+                "use a smaller weight scale"
+            )
+        return model
+
+    @staticmethod
+    def from_dense(J: np.ndarray, h: Optional[np.ndarray] = None, name: str = "ising") -> "IsingModel":
+        J = np.asarray(J)
+        if not np.allclose(J, J.T):
+            raise ValueError("J must be symmetric")
+        if np.any(np.diag(J) != 0):
+            raise ValueError("J must have zero diagonal")
+        n = J.shape[0]
+        ii, jj = np.nonzero(np.triu(J, k=1))
+        edges = np.stack([ii, jj], axis=1)
+        return IsingModel.from_edges(n, edges, J[ii, jj], h=h, name=name)
+
+    # -- views -------------------------------------------------------------
+    def dense_J(self) -> np.ndarray:
+        """Materialize the symmetric dense coupling matrix (int32)."""
+        J = np.zeros((self.n, self.n), dtype=np.int64)
+        rows = np.repeat(np.arange(self.n), self.max_degree)
+        cols = self.nbr_idx.reshape(-1)
+        vals = self.nbr_w.reshape(-1)
+        np.add.at(J, (rows, cols), vals)
+        # padded entries are (i, i, 0): harmless.
+        return J.astype(np.int32)
+
+    def edge_list(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Recover the unique undirected edge list (E,2), weights (E,)."""
+        J = self.dense_J()
+        ii, jj = np.nonzero(np.triu(J, k=1))
+        return np.stack([ii, jj], axis=1), J[ii, jj]
+
+    def device_arrays(self):
+        """jnp copies of (h, nbr_idx, nbr_w) for use inside jitted code."""
+        return (
+            jnp.asarray(self.h, jnp.int32),
+            jnp.asarray(self.nbr_idx, jnp.int32),
+            jnp.asarray(self.nbr_w, jnp.int32),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Local-field + energy math (pure functions usable under jit/vmap/scan).
+# ---------------------------------------------------------------------------
+def local_fields_sparse(m, h, nbr_idx, nbr_w):
+    """h_i + Σ_j J_ij m_j with padded adjacency.  m: int32[..., N] in {-1,+1}."""
+    neigh = jnp.take(m, nbr_idx, axis=-1)  # [..., N, D]
+    return h + jnp.sum(nbr_w * neigh, axis=-1)
+
+
+def local_fields_dense(m, h, J_f32):
+    """Float32 MXU path: exact for |field| < 2^24 (asserted at construction)."""
+    mf = m.astype(jnp.float32)
+    return h + jnp.matmul(mf, J_f32).astype(jnp.int32)
+
+
+def ising_energy(m, h, nbr_idx, nbr_w):
+    """H = -Σ h_i m_i - 1/2 Σ_ij J_ij m_i m_j  (Eq. 1), int32 exact.
+
+    Works on batched m ([..., N]).
+    """
+    fields = local_fields_sparse(m, jnp.zeros_like(h), nbr_idx, nbr_w)
+    pair = jnp.sum(m * fields, axis=-1) // 2  # Σ_ij double-counts; halve (always even)
+    return -(jnp.sum(h * m, axis=-1) + pair)
+
+
+# ---------------------------------------------------------------------------
+# MAX-CUT
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MaxCutProblem:
+    """A MAX-CUT instance G=(V,E,w) and its Ising embedding (Sec. II-C).
+
+    cut(m) = Σ_{(i,j)∈E} w_ij · (1 - m_i m_j) / 2.
+
+    Ising embedding: J = -w, h = 0, so H = Σ_{i<j} w_ij m_i m_j and
+    cut = (W_sum - Σ_{i<j} w_ij m_i m_j) / 2 = (W_sum + H·sign) ... concretely
+    ``cut = (w_total - pair_sum) / 2`` with ``pair_sum = -H`` when h = 0.
+    """
+
+    n: int
+    edges: np.ndarray  # (E, 2) int
+    weights: np.ndarray  # (E,) int
+    name: str = "maxcut"
+    best_known: Optional[int] = None
+
+    @property
+    def w_total(self) -> int:
+        return int(np.sum(self.weights))
+
+    def to_ising(self) -> IsingModel:
+        return IsingModel.from_edges(
+            self.n, self.edges, -np.asarray(self.weights), name=f"{self.name}-ising"
+        )
+
+    def cut_value(self, m) -> jnp.ndarray:
+        """Cut value of spin assignment m (int, [..., N], vals in {-1,+1})."""
+        wi = jnp.asarray(self.weights, jnp.int32)
+        ei = jnp.asarray(self.edges[:, 0], jnp.int32)
+        ej = jnp.asarray(self.edges[:, 1], jnp.int32)
+        mi = jnp.take(m, ei, axis=-1)
+        mj = jnp.take(m, ej, axis=-1)
+        return jnp.sum(wi * (1 - mi * mj), axis=-1) // 2
+
+    def cut_from_energy(self, H) -> jnp.ndarray:
+        """With J = -w, h = 0:  H = +Σ_{i<j} w_ij m_i m_j, so
+        cut = (w_total - H) / 2.  Verified against cut_value in tests."""
+        return (self.w_total - H) // 2
+
+
+def fig4_example() -> MaxCutProblem:
+    """The 4-vertex example of paper Fig. 4 (optimal cut = 3).
+
+    Edges: A-B (w=-1), A-C (+1), A-D (+1), B-C (+1), C-D (-1) reproduce the
+    figure's structure: partition {A,B} | {C,D} cuts A-C, A-D, B-C = 3, while
+    {A} | {B,C,D} cuts A-B, A-C, A-D = 1.
+    """
+    edges = np.array([[0, 1], [0, 2], [0, 3], [1, 2], [2, 3]])
+    weights = np.array([-1, 1, 1, 1, -1])
+    return MaxCutProblem(n=4, edges=edges, weights=weights, name="fig4", best_known=3)

@@ -1,0 +1,50 @@
+"""Trajectory-memory models — paper Eq. (5) and Eq. (6).
+
+SSA must store every spin bitplane of an iteration:
+
+    M  = N · (log2(I0max/I0min)/β + 1) · τ   bits            (Eq. 5, shift form)
+
+HA-SSA stores only the I0 == I0max plateau:
+
+    M' = N · τ                                bits            (Eq. 6)
+
+ratio = steps = log2(I0max/I0min)/β + 1 → 6 for the Table-II hyperparameters
+(I0: 1→32, β=1), i.e. 0.48 Mb vs 0.08 Mb per iteration for N=800 (Table IV)
+and 72 Mb vs 12 Mb per 150-iteration trial.
+"""
+from __future__ import annotations
+
+from .schedule import n_temp_steps
+from .ssa import SSAHyperParams
+
+__all__ = [
+    "ssa_bits_per_iteration",
+    "hassa_bits_per_iteration",
+    "memory_ratio",
+    "bits_per_trial",
+]
+
+
+def ssa_bits_per_iteration(n_spins: int, hp: SSAHyperParams) -> int:
+    """Eq. (5): all plateaus stored."""
+    steps = n_temp_steps(hp.i0_min, hp.i0_max, hp.beta_shift)
+    return n_spins * steps * hp.tau
+
+
+def hassa_bits_per_iteration(n_spins: int, hp: SSAHyperParams) -> int:
+    """Eq. (6): only the I0max plateau stored."""
+    return n_spins * hp.tau
+
+
+def memory_ratio(hp: SSAHyperParams) -> int:
+    """M / M' = number of temperature plateaus (6 for Table II)."""
+    return n_temp_steps(hp.i0_min, hp.i0_max, hp.beta_shift)
+
+
+def bits_per_trial(n_spins: int, hp: SSAHyperParams, hardware_aware: bool = True) -> int:
+    per_iter = (
+        hassa_bits_per_iteration(n_spins, hp)
+        if hardware_aware
+        else ssa_bits_per_iteration(n_spins, hp)
+    )
+    return per_iter * hp.m_shot

@@ -1,0 +1,76 @@
+"""Random noise sources for the annealers.
+
+The FPGA uses a XOR-shift generator [26] to produce one noise bit per
+spin-gate per cycle (r_i(t) ∈ {-1,+1}, Eq. 2a).  We provide:
+
+* :class:`Xorshift128` — Marsaglia xorshift128 (32-bit, 4-word state) with one
+  independent lane per (trial, spin), matching the hardware's per-spin bit
+  streams.  Pure uint32 jnp ops, scan/jit-friendly, deterministic.
+* :func:`threefry_noise` — `jax.random`-based noise (statistically stronger;
+  the framework default).
+
+Both return spins' noise as int32 in {-1,+1}.  The HA-SSA ≡ SSA equivalence
+property holds for *any* shared noise stream, so tests exercise both.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Xorshift128", "xorshift_init", "xorshift_next_bits", "threefry_noise"]
+
+_U32 = jnp.uint32
+
+
+def xorshift_init(seed: int, lanes: Tuple[int, ...]) -> jnp.ndarray:
+    """Seed per-lane xorshift128 states, shape (4,) + lanes, dtype uint32.
+
+    SplitMix-style avalanche over (seed, lane index) so lanes decorrelate.
+    """
+    n = int(np.prod(lanes)) if lanes else 1
+    idx = np.arange(n, dtype=np.uint64)
+    states = []
+    for word in range(4):
+        z = (np.uint64(seed) + np.uint64(0x9E3779B97F4A7C15) * (idx + np.uint64(1 + word * n)))
+        z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+        z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+        z = z ^ (z >> np.uint64(31))
+        states.append((z & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+    st = np.stack(states, axis=0).reshape((4,) + tuple(lanes))
+    # xorshift forbids the all-zero state; nudge any such lane.
+    st[0] = np.where((st == 0).all(axis=0), np.uint32(0x1234567), st[0])
+    return jnp.asarray(st)
+
+
+def xorshift_next_bits(state: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One Marsaglia xorshift128 step per lane.
+
+    Returns (new_state, noise) with noise int32 in {-1,+1} taken from the
+    output word's MSB (an unbiased bit).
+    """
+    x, y, z, w = state[0], state[1], state[2], state[3]
+    t = x ^ (x << _U32(11))
+    t = t & _U32(0xFFFFFFFF)
+    w_new = (w ^ (w >> _U32(19))) ^ (t ^ (t >> _U32(8)))
+    new_state = jnp.stack([y, z, w, w_new], axis=0)
+    noise = jnp.where((w_new >> _U32(31)) & _U32(1), 1, -1).astype(jnp.int32)
+    return new_state, noise
+
+
+class Xorshift128:
+    """Convenience OO wrapper (functional core above stays scan-friendly)."""
+
+    def __init__(self, seed: int, lanes: Tuple[int, ...]):
+        self.state = xorshift_init(seed, lanes)
+
+    def next_bits(self) -> jnp.ndarray:
+        self.state, bits = xorshift_next_bits(self.state)
+        return bits
+
+
+def threefry_noise(key: jax.Array, shape: Tuple[int, ...]) -> jnp.ndarray:
+    """±1 noise from jax.random (framework default)."""
+    return jnp.where(jax.random.bernoulli(key, 0.5, shape), 1, -1).astype(jnp.int32)

@@ -1,0 +1,113 @@
+"""Pseudo-inverse temperature schedules (paper Sec. II-B Eq. 3, Sec. III-A Eq. 4).
+
+SSA (Eq. 3):     I0(t+τ) = I0(t) / β          with real β < 1  (needs an FP divider)
+HA-SSA (Eq. 4):  I0(t+τ) = 2^β · I0(t)        with integer β   (a barrel shift)
+
+Both raise I0 from I0min to I0max in geometric steps held for τ cycles.  When
+β_ssa = 2^{-β_hassa} the two schedules are *identical* (paper Sec. III-A:
+"When β in Eq. (3) is 0.5 and β in Eq. (4) is 1, the temperature control of
+HA-SSA is the same as that of SSA") — property-tested in
+tests/test_core_schedule.py.
+
+HA-SSA also switches duration control from cycle count to **iteration count**
+(m_shot full I0min→I0max sweeps), so the final sweep always completes
+(Sec. III-A's 600-cycle/10,000-cycle example).  Both annealers here are
+iteration-controlled; the conventional-SSA cycle-count mode is exposed for the
+Fig. 12 comparison.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import numpy as np
+
+__all__ = ["Schedule", "hassa_schedule", "ssa_schedule", "n_temp_steps"]
+
+
+def n_temp_steps(i0_min: int, i0_max: int, beta_shift: int = 1) -> int:
+    """Number of distinct temperature plateaus in one iteration.
+
+    For i0_min=1, i0_max=32, β=1: steps = 6 (1,2,4,8,16,32) — the '6' in the
+    paper's 6× memory-efficiency claim (Eq. 5 vs Eq. 6).
+    """
+    if i0_min <= 0 or i0_max < i0_min:
+        raise ValueError("need 0 < i0_min <= i0_max")
+    steps = 1
+    v = i0_min
+    while v < i0_max:
+        v <<= beta_shift
+        steps += 1
+    return steps
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """A per-cycle I0 schedule for one iteration.
+
+    Attributes:
+      i0_per_cycle: int32[cycles_per_iter] pseudo-inverse temperature per cycle.
+      tau: plateau length in cycles.
+      steps: number of plateaus.
+      store_mask: bool[cycles_per_iter] — True where the HA-SSA hardware
+        asserts the BRAM write-enable (I0 == I0max).  Conventional SSA stores
+        every cycle (mask of all-True is used instead by the caller).
+    """
+
+    i0_per_cycle: np.ndarray
+    tau: int
+    steps: int
+    store_mask: np.ndarray
+
+    @property
+    def cycles_per_iter(self) -> int:
+        return int(self.i0_per_cycle.shape[0])
+
+
+def hassa_schedule(i0_min: int, i0_max: int, tau: int, beta_shift: int = 1) -> Schedule:
+    """Eq. (4): integer-only, shift-based plateau sequence."""
+    if beta_shift < 1:
+        raise ValueError("beta_shift must be >= 1")
+    plateaus = []
+    v = int(i0_min)
+    while True:
+        plateaus.append(min(v, int(i0_max)))
+        if plateaus[-1] >= i0_max:
+            break
+        v <<= beta_shift
+    plateaus = np.asarray(plateaus, dtype=np.int32)
+    i0 = np.repeat(plateaus, tau)
+    mask = np.repeat(plateaus == i0_max, tau)
+    return Schedule(i0_per_cycle=i0, tau=tau, steps=len(plateaus), store_mask=mask)
+
+
+def ssa_schedule(i0_min: int, i0_max: int, tau: int, beta: float = 0.5) -> Schedule:
+    """Eq. (3): real-β division-based plateau sequence (conventional SSA).
+
+    The reference implementation keeps integer I0 plateaus (the paper found
+    integer representations sufficient, Sec. III-A); division by β<1 raises I0.
+    """
+    if not (0.0 < beta < 1.0):
+        raise ValueError("ssa beta must be in (0,1)")
+    plateaus = []
+    v = float(i0_min)
+    while True:
+        plateaus.append(min(int(round(v)), int(i0_max)))
+        if plateaus[-1] >= i0_max:
+            break
+        v = v / beta
+    plateaus = np.asarray(plateaus, dtype=np.int32)
+    i0 = np.repeat(plateaus, tau)
+    mask = np.repeat(plateaus == i0_max, tau)
+    return Schedule(i0_per_cycle=i0, tau=tau, steps=len(plateaus), store_mask=mask)
+
+
+def sa_temperature_ladder(t_start: float, t_end: float, n_cycles: int) -> np.ndarray:
+    """Geometric SA cooling from t_start to t_end over n_cycles (Sec. IV-A:
+    'temperature of SA gradually decreases from 10 to 1e-7 during 90,000
+    cycles')."""
+    if n_cycles == 1:
+        return np.asarray([t_start], dtype=np.float32)
+    ratio = (t_end / t_start) ** (1.0 / (n_cycles - 1))
+    return (t_start * ratio ** np.arange(n_cycles)).astype(np.float32)

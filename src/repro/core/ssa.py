@@ -1,0 +1,362 @@
+"""SSA and HA-SSA annealers (paper Sec. II-B and Sec. III) in JAX.
+
+Every spin is a p-bit updated *simultaneously* each cycle (the FPGA spin-gate
+array) by integral stochastic computing:
+
+    I_i(t+1)     = h_i + Σ_j J_ij m_j(t) + n_rnd · r_i(t) + Itanh_i(t)   (2a)
+    Itanh_i(t+1) = clamp(I_i(t+1), -I0(t), I0(t)-1)                       (2b)
+    m_i(t+1)     = +1 if Itanh_i(t+1) >= 0 else -1                        (2c)
+
+The *only* difference between SSA and HA-SSA is outside this update path:
+
+* temperature control — Eq. (3) float-β division (SSA) vs Eq. (4) integer
+  barrel shift (HA-SSA); identical sequences when β_ssa = 2^{-β_hassa};
+* storage policy — SSA stores the spin bitplane every cycle; HA-SSA stores
+  only while I0 == I0max (the FPGA's BRAM write-enable), shrinking trajectory
+  memory by (steps = log2(I0max/I0min)+1)× — Eq. (5) vs Eq. (6);
+* duration control — HA-SSA counts iterations (complete I0min→I0max sweeps),
+  never truncating the final sweep.
+
+TPU adaptation (see DESIGN.md §2): trials are batched on a replica axis so
+the per-cycle local-field computation is a (T,N)·(N,N) MXU matmul for dense
+problems or a padded-adjacency gather for sparse ones; the Itanh FSM is a
+fused elementwise epilogue.  The HA-SSA storage policy becomes *structural*:
+the `lax.scan` over an iteration is split into a heat phase (no outputs) and
+a store phase (bit-packed outputs), so the XLA output buffer itself is
+`steps×` smaller — the BRAM-depth saving, as HBM-buffer shape.
+
+Two recording modes:
+
+* ``record='traj'`` — materialize the stored bitplanes (tests, small runs;
+  this is what the FPGA ships over UART).
+* ``record='best'`` — running arg-best *restricted to storage-eligible
+  cycles*, so HA-SSA's reported solution is computed only from states it
+  would have stored.  On TPU, evaluating the cut on the fly is nearly free
+  next to the field matmul (compute >> memory), which is exactly the
+  opposite trade the FPGA makes — noted in DESIGN.md §8.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .ising import IsingModel, MaxCutProblem, local_fields_dense, local_fields_sparse
+from .rng import threefry_noise, xorshift_init, xorshift_next_bits
+from .schedule import Schedule, hassa_schedule, n_temp_steps, ssa_schedule
+
+__all__ = [
+    "SSAHyperParams",
+    "AnnealResult",
+    "ssa_cycle_update",
+    "anneal",
+    "solve_maxcut",
+    "pack_spins",
+    "unpack_spins",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class SSAHyperParams:
+    """Table II defaults: trial=100, m_shot=150, n_rnd=2, I0: 1→32, τ=100, β=1."""
+
+    n_trials: int = 100
+    m_shot: int = 150
+    n_rnd: int = 2
+    i0_min: int = 1
+    i0_max: int = 32
+    tau: int = 100
+    beta_shift: int = 1  # HA-SSA Eq.(4) β; equivalent SSA Eq.(3) β = 2^-beta_shift
+
+    @property
+    def steps(self) -> int:
+        return n_temp_steps(self.i0_min, self.i0_max, self.beta_shift)
+
+    @property
+    def cycles_per_iter(self) -> int:
+        return self.steps * self.tau
+
+    @property
+    def total_cycles(self) -> int:
+        return self.m_shot * self.cycles_per_iter
+
+    def schedule(self, kind: str = "hassa") -> Schedule:
+        if kind == "hassa":
+            return hassa_schedule(self.i0_min, self.i0_max, self.tau, self.beta_shift)
+        if kind == "ssa":
+            return ssa_schedule(self.i0_min, self.i0_max, self.tau, 2.0 ** (-self.beta_shift))
+        raise ValueError(kind)
+
+
+@dataclasses.dataclass
+class AnnealResult:
+    """Outcome of one annealing run over a batch of trials."""
+
+    best_cut: np.ndarray          # (T,) best cut per trial (maxcut) — under storage policy
+    best_energy: np.ndarray       # (T,) Ising energy of the best stored state
+    best_m: np.ndarray            # (T, N) int8 spins of the best stored state
+    energy_mean: Optional[np.ndarray]  # (total_cycles,) mean H over trials per cycle
+    energy_min: Optional[np.ndarray]   # (total_cycles,) min H over trials per cycle
+    traj: Optional[np.ndarray]    # (m_shot, stored_cycles, T, Nw) uint32 bitplanes
+    stored_bits_per_iter: int     # N × stored_cycles — the Eq.(5)/(6) witness
+    hp: SSAHyperParams
+
+    @property
+    def overall_best_cut(self) -> int:
+        return int(np.max(self.best_cut))
+
+    @property
+    def mean_best_cut(self) -> float:
+        return float(np.mean(self.best_cut))
+
+
+# ---------------------------------------------------------------------------
+# Bit packing (the 800-bit BRAM word, as uint32 lanes)
+# ---------------------------------------------------------------------------
+def packed_words(n: int) -> int:
+    return (n + 31) // 32
+
+
+def pack_spins(m: jnp.ndarray) -> jnp.ndarray:
+    """Pack ±1 spins [..., N] into uint32 bitplanes [..., ceil(N/32)]."""
+    n = m.shape[-1]
+    nw = packed_words(n)
+    pad = nw * 32 - n
+    bits = (m > 0).astype(jnp.uint32)
+    if pad:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros(bits.shape[:-1] + (pad,), jnp.uint32)], axis=-1
+        )
+    bits = bits.reshape(bits.shape[:-1] + (nw, 32))
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_spins(packed: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Inverse of pack_spins; returns int8 spins in {-1,+1}, shape [..., n]."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (packed[..., None] >> shifts) & jnp.uint32(1)
+    flat = bits.reshape(bits.shape[:-2] + (-1,))[..., :n]
+    return jnp.where(flat == 1, 1, -1).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# The p-bit update (Eq. 2a–2c), factored so kernels/ref can share it
+# ---------------------------------------------------------------------------
+def ssa_cycle_update(field, itanh, r, i0, n_rnd):
+    """Elementwise epilogue of one SSA cycle.
+
+    Args:
+      field: int32[..., N]  h_i + Σ_j J_ij m_j(t)      (the matvec part)
+      itanh: int32[..., N]  Itanh_i(t)
+      r:     int32[..., N]  noise in {-1,+1}
+      i0:    int32 scalar   pseudo-inverse temperature I0(t)
+      n_rnd: int            noise magnitude
+    Returns:
+      (m_new int8[...,N], itanh_new int32[...,N])
+    """
+    I = field + n_rnd * r + itanh                       # (2a)
+    itanh_new = jnp.clip(I, -i0, i0 - 1)                # (2b)
+    m_new = jnp.where(itanh_new >= 0, 1, -1).astype(jnp.int8)  # (2c)
+    return m_new, itanh_new
+
+
+def _energy_from_field(m, field, h):
+    """H = -(h·m + m·field)/2, exact int32 (field = h + Jm)."""
+    m32 = m.astype(jnp.int32)
+    hm = jnp.sum(h * m32, axis=-1)
+    mf = jnp.sum(m32 * field, axis=-1)
+    return -(hm + mf) // 2
+
+
+# ---------------------------------------------------------------------------
+# Main annealer
+# ---------------------------------------------------------------------------
+def _make_field_fn(model: IsingModel, backend: str):
+    h, nbr_idx, nbr_w = model.device_arrays()
+    if backend == "sparse":
+        return lambda m: local_fields_sparse(m.astype(jnp.int32), h, nbr_idx, nbr_w), h
+    if backend == "dense":
+        J = jnp.asarray(model.dense_J(), jnp.float32)
+        return lambda m: local_fields_dense(m, h, J), h
+    if backend == "pallas":
+        from repro.kernels import ops as kops  # lazy: optional dependency path
+
+        J = jnp.asarray(model.dense_J(), jnp.float32)
+        return lambda m: kops.local_field(m, h, J), h
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def _make_noise_fn(noise: str, seed: int, lanes: Tuple[int, int]):
+    if noise == "xorshift":
+        state0 = xorshift_init(seed, lanes)
+        return state0, xorshift_next_bits
+    if noise == "threefry":
+        key0 = jax.random.PRNGKey(seed)
+
+        def step(key):
+            key, sub = jax.random.split(key)
+            return key, threefry_noise(sub, lanes)
+
+        return key0, step
+    raise ValueError(f"unknown noise {noise!r}")
+
+
+def _init_state(noise_state, noise_fn, n_trials, n):
+    noise_state, r0 = noise_fn(noise_state)
+    m0 = r0.astype(jnp.int8)  # random ±1
+    itanh0 = jnp.where(m0 > 0, 0, -1).astype(jnp.int32)
+    return noise_state, m0, itanh0
+
+
+def anneal(
+    problem: Union[MaxCutProblem, IsingModel],
+    hp: SSAHyperParams = SSAHyperParams(),
+    seed: int = 0,
+    *,
+    storage: str = "i0max",        # 'i0max' (HA-SSA) | 'all' (conventional SSA)
+    record: str = "best",          # 'best' | 'traj'
+    backend: str = "sparse",       # 'sparse' | 'dense' | 'pallas'
+    noise: str = "threefry",       # 'threefry' | 'xorshift'
+    track_energy: bool = True,
+    schedule_kind: str = "hassa",  # 'hassa' Eq.(4) | 'ssa' Eq.(3)
+    total_cycles: Optional[int] = None,  # cycle-count duration (Fig. 12 mode)
+) -> AnnealResult:
+    """Run SSA/HA-SSA on a MAX-CUT or raw Ising instance.
+
+    ``storage='i0max'`` + ``schedule_kind='hassa'`` is the paper's HA-SSA;
+    ``storage='all'`` + ``schedule_kind='ssa'`` is conventional SSA.  The
+    update path is shared, so with equal hyperparameters and the same noise
+    stream the two produce bit-identical spin sequences (Sec. III-A, V-A) —
+    property-tested.
+    """
+    if isinstance(problem, MaxCutProblem):
+        maxcut: Optional[MaxCutProblem] = problem
+        model = problem.to_ising()
+    else:
+        maxcut = None
+        model = problem
+
+    sched = hp.schedule(schedule_kind)
+    field_fn, h = _make_field_fn(model, backend)
+    lanes = (hp.n_trials, model.n)
+    noise_state0, noise_fn = _make_noise_fn(noise, seed, lanes)
+    w_total = maxcut.w_total if maxcut is not None else 0
+
+    i0_all = jnp.asarray(sched.i0_per_cycle, jnp.int32)
+    mask_all = (
+        jnp.asarray(sched.store_mask) if storage == "i0max"
+        else jnp.ones_like(jnp.asarray(sched.store_mask))
+    )
+    stored_per_iter = int(np.sum(np.asarray(mask_all)))
+
+    def cycle(carry, xs):
+        noise_state, m, itanh = carry
+        i0, eligible = xs
+        field = field_fn(m)
+        noise_state, r = noise_fn(noise_state)
+        m_new, itanh_new = ssa_cycle_update(field, itanh, r, i0, hp.n_rnd)
+        # energy of the *new* state needs the new field; reuse next cycle's
+        # matvec instead: report H(m_new) lazily by computing field(m_new)
+        # only when tracking.  (Cheap relative to clarity at CPU scale; the
+        # Pallas path fuses it.)
+        return (noise_state, m_new, itanh_new), (m_new, eligible)
+
+    def run():
+        noise_state, m0, itanh0 = _init_state(noise_state0, noise_fn, hp.n_trials, model.n)
+
+        if record == "traj":
+            # Iteration-structured: heat phase emits nothing; store phase
+            # emits bit-packed planes → output buffer is structurally
+            # (stored/cpi)× smaller, mirroring the BRAM depth saving.
+            heat_len = int(np.sum(~np.asarray(mask_all)))
+            i0_heat, i0_store = i0_all[:heat_len], i0_all[heat_len:]
+
+            def cyc_nostore(carry, i0):
+                new_carry, _ = cycle(carry, (i0, False))
+                return new_carry, None
+
+            def cyc_store(carry, i0):
+                new_carry, (m_new, _) = cycle(carry, (i0, True))
+                return new_carry, pack_spins(m_new)
+
+            def iteration(carry, _):
+                carry, _ = jax.lax.scan(cyc_nostore, carry, i0_heat)
+                carry, planes = jax.lax.scan(cyc_store, carry, i0_store)
+                return carry, planes
+
+            carry = (noise_state, m0, itanh0)
+            carry, traj = jax.lax.scan(iteration, carry, None, length=hp.m_shot)
+            # Solution = best stored state, scanned outside the hot loop.
+            flat = traj.reshape(-1, hp.n_trials, packed_words(model.n))
+            spins = unpack_spins(flat, model.n)  # (S, T, N)
+            from .ising import ising_energy
+
+            hh, nbr_idx, nbr_w = model.device_arrays()
+            H = ising_energy(spins.astype(jnp.int32), hh, nbr_idx, nbr_w)  # (S, T)
+            if maxcut is not None:
+                cuts = (w_total - H) // 2
+                idx = jnp.argmax(cuts, axis=0)
+            else:
+                idx = jnp.argmin(H, axis=0)
+            tt = jnp.arange(hp.n_trials)
+            best_m = spins[idx, tt]
+            best_H = H[idx, tt]
+            best_cut = ((w_total - best_H) // 2) if maxcut is not None else -best_H
+            return best_cut, best_H, best_m, None, None, traj
+
+        # record == 'best': flat scan over all cycles with running arg-best
+        # restricted to storage-eligible cycles.  Supports cycle-count
+        # duration control (Fig. 12 conventional-SSA mode).
+        if total_cycles is None:
+            i0_seq = jnp.tile(i0_all, hp.m_shot)
+            el_seq = jnp.tile(mask_all, hp.m_shot)
+        else:
+            reps = -(-total_cycles // sched.cycles_per_iter)
+            i0_seq = jnp.tile(i0_all, reps)[:total_cycles]
+            el_seq = jnp.tile(mask_all, reps)[:total_cycles]
+
+        hh, nbr_idx, nbr_w = model.device_arrays()
+
+        def cyc(carry, xs):
+            noise_state, m, itanh, best_H, best_m = carry
+            i0, eligible = xs
+            field = field_fn(m)
+            noise_state, r = noise_fn(noise_state)
+            m_new, itanh_new = ssa_cycle_update(field, itanh, r, i0, hp.n_rnd)
+            field_new = field_fn(m_new)
+            H = _energy_from_field(m_new, field_new, hh)  # (T,)
+            better = eligible & (H < best_H)
+            best_H = jnp.where(better, H, best_H)
+            best_m = jnp.where(better[:, None], m_new, best_m)
+            trace = (jnp.mean(H.astype(jnp.float32)), jnp.min(H)) if track_energy else 0
+            return (noise_state, m_new, itanh_new, best_H, best_m), trace
+
+        big = jnp.int32(2**30)
+        carry0 = (noise_state, m0, itanh0, jnp.full((hp.n_trials,), big, jnp.int32), m0)
+        carry, trace = jax.lax.scan(cyc, carry0, (i0_seq, el_seq))
+        _, _, _, best_H, best_m = carry
+        best_cut = ((w_total - best_H) // 2) if maxcut is not None else -best_H
+        e_mean, e_min = (trace if track_energy else (None, None))
+        return best_cut, best_H, best_m, e_mean, e_min, None
+
+    best_cut, best_H, best_m, e_mean, e_min, traj = jax.jit(run)()
+    return AnnealResult(
+        best_cut=np.asarray(best_cut),
+        best_energy=np.asarray(best_H),
+        best_m=np.asarray(best_m),
+        energy_mean=None if e_mean is None else np.asarray(e_mean),
+        energy_min=None if e_min is None else np.asarray(e_min),
+        traj=None if traj is None else np.asarray(traj),
+        stored_bits_per_iter=model.n * stored_per_iter,
+        hp=hp,
+    )
+
+
+def solve_maxcut(problem: MaxCutProblem, hp: SSAHyperParams = SSAHyperParams(), **kw) -> AnnealResult:
+    """Convenience wrapper with HA-SSA defaults (the paper's configuration)."""
+    return anneal(problem, hp, **kw)

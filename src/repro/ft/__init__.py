@@ -1,0 +1,1 @@
+from .resilience import *  # noqa: F401,F403

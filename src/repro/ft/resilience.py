@@ -1,0 +1,130 @@
+"""Fault tolerance: restartable training, straggler detection, elastic re-mesh.
+
+Three mechanisms (DESIGN.md §6):
+
+1. **Checkpoint/restart** — `run_training` drives (train_step, data(step),
+   CheckpointManager); because the data pipeline is stateless-per-step and
+   the checkpoint holds (params, opt, step), a process killed at any point
+   resumes bit-exact (test_ft.py kills mid-run and compares losses).
+
+2. **Straggler mitigation** — `StragglerMonitor` keeps an EMA of per-host
+   step times and flags hosts slower than `threshold ×` the fleet median;
+   the driver's hook can then re-shard around them (here: logged + surfaced;
+   the decision logic is what's unit-tested).
+
+3. **Elastic re-mesh** — `remesh` moves a TrainState onto a different mesh
+   (e.g. 2 pods → 1 pod after a pod loss) by re-computing NamedShardings
+   from the same logical axes and `jax.device_put`-ing; the dry-run proves
+   the step function re-lowers on the shrunken mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.checkpoint.ckpt import CheckpointManager
+
+__all__ = ["StragglerMonitor", "remesh", "run_training", "SimulatedFailure"]
+
+
+class SimulatedFailure(RuntimeError):
+    """Raised by tests to emulate a node loss mid-training."""
+
+
+# ---------------------------------------------------------------------------
+# Straggler detection
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class StragglerMonitor:
+    n_hosts: int
+    ema_decay: float = 0.9
+    threshold: float = 1.5   # flag if EMA > threshold × median EMA
+    warmup_steps: int = 3
+
+    def __post_init__(self):
+        self._ema = np.zeros(self.n_hosts)
+        self._count = np.zeros(self.n_hosts, dtype=int)
+
+    def record(self, host: int, step_time: float):
+        if self._count[host] == 0:
+            self._ema[host] = step_time
+        else:
+            self._ema[host] = (
+                self.ema_decay * self._ema[host] + (1 - self.ema_decay) * step_time
+            )
+        self._count[host] += 1
+
+    def stragglers(self) -> List[int]:
+        ready = self._count >= self.warmup_steps
+        if not ready.any():
+            return []
+        med = float(np.median(self._ema[ready]))
+        if med <= 0:
+            return []
+        return [
+            h for h in range(self.n_hosts)
+            if ready[h] and self._ema[h] > self.threshold * med
+        ]
+
+
+# ---------------------------------------------------------------------------
+# Elastic re-mesh
+# ---------------------------------------------------------------------------
+def remesh(tree, shardings_fn: Callable[[Any], Any]):
+    """Move a pytree onto new shardings (new mesh).  shardings_fn(tree) →
+    matching pytree of NamedShardings (typically params/opt spec builders
+    re-run against the new mesh)."""
+    shardings = shardings_fn(tree)
+    return jax.tree_util.tree_map(jax.device_put, tree, shardings)
+
+
+# ---------------------------------------------------------------------------
+# Restartable training driver
+# ---------------------------------------------------------------------------
+def run_training(
+    *,
+    init_state_fn: Callable[[], Any],
+    train_step: Callable[[Any, Any], Tuple[Any, Dict]],
+    batch_fn: Callable[[int], Any],
+    n_steps: int,
+    ckpt: CheckpointManager,
+    fail_at_step: Optional[int] = None,
+    monitor: Optional[StragglerMonitor] = None,
+    log_every: int = 0,
+) -> Tuple[Any, List[float]]:
+    """Run (or resume) training to n_steps.  Returns (state, loss history).
+
+    Resume: if the checkpoint dir has a saved state, start from it — the
+    step counter lives in state.opt.step, data is replayed from that cursor.
+    `fail_at_step` raises SimulatedFailure *after* that step's optimizer
+    update but before its checkpoint would complete — the worst-case window.
+    """
+    from repro.checkpoint.ckpt import latest_step
+
+    state = init_state_fn()
+    start = 0
+    if latest_step(ckpt.directory) is not None:
+        state, meta = ckpt.restore_latest(state)
+        start = int(meta["step"])
+
+    losses: List[float] = []
+    for step in range(start, n_steps):
+        t0 = time.perf_counter()
+        batch = batch_fn(step)
+        state, metrics = train_step(state, batch)
+        dt = time.perf_counter() - t0
+        if monitor is not None:
+            monitor.record(0, dt)
+        loss = float(metrics["ce_loss"])
+        losses.append(loss)
+        if log_every and (step + 1) % log_every == 0:
+            print(f"step {step + 1}: loss {loss:.4f} ({dt*1e3:.0f} ms)")
+        if fail_at_step is not None and step + 1 == fail_at_step:
+            raise SimulatedFailure(f"simulated node loss at step {step + 1}")
+        ckpt.maybe_save(step + 1, state, meta={"data_step": step + 1})
+    ckpt.wait()
+    return state, losses

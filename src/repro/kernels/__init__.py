@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the SSA hot path; see ssa_update.py and ops.py.
+
+Validated against ref.py oracles in interpret mode (CPU container);
+TPU (Mosaic) is the compile target.
+"""
+from . import ops, ref, ssa_update  # noqa: F401

@@ -1,0 +1,87 @@
+"""Jit'd public wrappers over the Pallas kernels.
+
+``repro.core.ssa`` consumes :func:`local_field` for its ``backend='pallas'``
+dense path; :func:`anneal_resident` is the fully-fused HA-SSA production
+path (J pinned in VMEM, storage policy on-chip) used by the TPU launcher and
+the perf benchmarks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rng import xorshift_init, xorshift_next_bits
+from repro.core.schedule import Schedule
+
+from . import ssa_update
+
+__all__ = ["local_field", "anneal_resident"]
+
+
+def local_field(m: jnp.ndarray, h: jnp.ndarray, J: jnp.ndarray) -> jnp.ndarray:
+    """Drop-in dense field backend for repro.core.ssa (int32 result)."""
+    return ssa_update.local_field(m, h, J)
+
+
+def anneal_resident(
+    J: jnp.ndarray,        # (N, N) couplings (float32/bfloat16, integer-valued)
+    h: jnp.ndarray,        # (N,) int32
+    schedule: Schedule,    # per-iteration plateau schedule
+    m_shot: int,
+    n_trials: int,
+    *,
+    n_rnd: int = 2,
+    storage: str = "i0max",  # 'i0max' (HA-SSA) | 'all' (SSA)
+    seed: int = 0,
+    block_r: int = 8,
+    interpret: Optional[bool] = None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Run a full HA-SSA schedule through the resident plateau kernel.
+
+    Returns (best_H (T,), best_m (T, N)).  Host-side python drives the
+    plateau sequence (m_shot × steps kernel launches); all cycle-level work
+    is on-chip.
+    """
+    N = J.shape[0]
+    plateaus = np.unique(schedule.i0_per_cycle)  # ascending
+    i0_values = np.sort(plateaus)
+    tau = schedule.tau
+    i0_max = int(i0_values[-1])
+
+    state = xorshift_init(seed, (n_trials, N))
+    state, r0 = xorshift_next_bits(state)
+    m = r0.astype(jnp.float32)
+    itanh = jnp.where(m > 0, 0, -1).astype(jnp.int32)
+    best_H = jnp.full((n_trials,), 2**30, jnp.int32)
+    best_m = m.astype(jnp.int8)
+
+    def make_noise(state, c):
+        outs = []
+        for _ in range(c):
+            state, r = xorshift_next_bits(state)
+            outs.append(r.astype(jnp.int8))
+        return state, jnp.stack(outs)
+
+    for _ in range(m_shot):
+        for i0 in i0_values:
+            eligible = storage == "all" or int(i0) == i0_max
+            state, noise = make_noise(state, tau)
+            m, itanh, best_H, best_m = ssa_update.ssa_plateau(
+                m,
+                itanh,
+                J,
+                h,
+                noise,
+                jnp.int32(int(i0)),
+                best_H,
+                best_m,
+                n_rnd=n_rnd,
+                eligible=eligible,
+                block_r=block_r,
+                interpret=interpret,
+            )
+    return np.asarray(best_H), np.asarray(best_m)

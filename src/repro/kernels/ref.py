@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contract)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["local_field_ref", "ssa_plateau_ref"]
+
+
+def local_field_ref(m: jnp.ndarray, h: jnp.ndarray, J: jnp.ndarray) -> jnp.ndarray:
+    """field = h + m @ J, int32 exact."""
+    acc = jnp.dot(m.astype(jnp.float32), J.astype(jnp.float32))
+    return (acc + h.astype(jnp.float32)).astype(jnp.int32)
+
+
+def ssa_plateau_ref(
+    m: jnp.ndarray,       # (R, N) float32 ±1
+    itanh: jnp.ndarray,   # (R, N) int32
+    J: jnp.ndarray,       # (N, N)
+    h: jnp.ndarray,       # (N,)
+    noise: jnp.ndarray,   # (C, R, N) int8
+    i0,                   # scalar int32
+    best_H: jnp.ndarray,  # (R,) int32
+    best_m: jnp.ndarray,  # (R, N) int8
+    *,
+    n_rnd: int = 2,
+    eligible: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Reference semantics of the resident plateau kernel.
+
+    Runs C cycles of Eq. (2a-2c) at constant I0 and — when ``eligible`` —
+    folds every state *produced by this plateau* (m(t0+1..t0+C)) into the
+    running (best_H, best_m).
+    """
+    C = noise.shape[0]
+    i0 = jnp.asarray(i0, jnp.int32)
+    hf = h.astype(jnp.int32)
+    best_H = best_H.astype(jnp.int32)
+    best_m = best_m.astype(jnp.int8)
+    m = m.astype(jnp.float32)
+
+    def energy(mm, field):
+        m32 = mm.astype(jnp.int32)
+        return -(jnp.sum(hf * m32, axis=-1) + jnp.sum(m32 * field, axis=-1)) // 2
+
+    for c in range(C):
+        field = local_field_ref(m, hf, J)
+        if c >= 1 and eligible:
+            H = energy(m, field)
+            better = H < best_H
+            best_H = jnp.where(better, H, best_H)
+            best_m = jnp.where(better[:, None], m.astype(jnp.int8), best_m)
+        I = field + n_rnd * noise[c].astype(jnp.int32) + itanh
+        itanh = jnp.clip(I, -i0, i0 - 1)
+        m = jnp.where(itanh >= 0, 1.0, -1.0)
+
+    field = local_field_ref(m, hf, J)
+    if eligible:
+        H = energy(m, field)
+        better = H < best_H
+        best_H = jnp.where(better, H, best_H)
+        best_m = jnp.where(better[:, None], m.astype(jnp.int8), best_m)
+    return m, itanh, best_H, best_m

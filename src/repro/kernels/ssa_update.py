@@ -1,0 +1,275 @@
+"""Pallas TPU kernels for the SSA/HA-SSA spin update (DESIGN.md §2).
+
+The FPGA's spin-gate array computes, for all spins in one clock,
+
+    field_i = h_i + Σ_j J_ij m_j        (MUX tree + adder)
+    Itanh   = clamp(field + n·r + Itanh, -I0, I0-1)   (saturating counter)
+    m       = sign(Itanh)
+
+On TPU we batch replicas (trials) on a leading axis so the field computation
+is a (R,N)·(N,N) matmul on the MXU; the FSM is a fused VPU epilogue.  Two
+kernels:
+
+* :func:`local_field_kernel` — tiled matmul ``m @ J + h`` with a standard
+  (R-tile, N-tile, K-tile) grid and a float32 VMEM accumulator.  Used as the
+  drop-in dense-field backend.  Exact: ±1 spins × integer J accumulate in
+  f32 (< 2^24).
+
+* :func:`ssa_plateau_kernel` — the **resident** kernel: one launch executes
+  all C cycles of a temperature plateau with J pinned in VMEM, streaming only
+  noise in and nothing but final state + running best out.  This is the
+  TPU answer to the FPGA's "everything on-chip" design point: per-cycle HBM
+  traffic drops from O(N²) (re-reading J) to O(R·N) (noise), raising
+  arithmetic intensity by ~C×.  It also fuses the solution tracking (energy
+  + arg-best restricted to storage-eligible plateaus), which is HA-SSA's
+  storage policy executed entirely on-chip.
+
+Both are validated against :mod:`.ref` in interpret mode (CPU) over a
+shape/dtype sweep; TPU is the compile target.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["local_field", "ssa_plateau", "pad_to", "DEFAULT_INTERPRET"]
+
+# interpret=True executes the kernel body in Python on CPU — the validation
+# mode for this container; on TPU hosts the same code lowers to Mosaic.
+DEFAULT_INTERPRET = jax.default_backend() == "cpu"
+
+
+def pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    """Zero-pad ``axis`` up to a multiple of ``mult`` (TPU lane alignment)."""
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads)
+
+
+# ---------------------------------------------------------------------------
+# Kernel A: tiled local-field matmul  field = m @ J + h
+# ---------------------------------------------------------------------------
+def _field_kernel(m_ref, j_ref, h_ref, out_ref, acc_ref, *, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        m_ref[...], j_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        out_ref[...] = (acc_ref[...] + h_ref[...].astype(jnp.float32)).astype(
+            jnp.int32
+        )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_r", "block_n", "block_k", "interpret")
+)
+def local_field(
+    m: jnp.ndarray,  # (R, N) ±1, any float/int dtype
+    h: jnp.ndarray,  # (N,) int32
+    J: jnp.ndarray,  # (N, N) float32/bfloat16 (integer-valued)
+    *,
+    block_r: int = 8,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: Optional[bool] = None,
+) -> jnp.ndarray:
+    """field = h + m @ J, int32 exact, via the tiled Pallas kernel."""
+    interpret = DEFAULT_INTERPRET if interpret is None else interpret
+    R, N = m.shape
+    mf = pad_to(pad_to(m.astype(J.dtype), 1, block_k), 0, block_r)
+    Jp = pad_to(pad_to(J, 0, block_k), 1, block_n)
+    hp = pad_to(h.astype(jnp.int32).reshape(1, -1), 1, block_n)
+    Rp, Kp = mf.shape
+    Np = Jp.shape[1]
+    nk = Kp // block_k
+    grid = (Rp // block_r, Np // block_n, nk)
+    out = pl.pallas_call(
+        functools.partial(_field_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_r, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Rp, Np), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((block_r, block_n), jnp.float32)],
+        interpret=interpret,
+    )(mf, Jp, hp)
+    return out[:R, :N]
+
+
+# ---------------------------------------------------------------------------
+# Kernel B: resident plateau kernel — C fused cycles, J pinned in VMEM
+# ---------------------------------------------------------------------------
+def _plateau_kernel(
+    i0_ref,      # (1, 1) int32 SMEM-ish scalar
+    m_ref,       # (bR, N) float32  spins ±1
+    it_ref,      # (bR, N) int32    Itanh state
+    j_ref,       # (N, N)  J dtype  resident couplings
+    h_ref,       # (1, N)  int32    biases
+    noise_ref,   # (C, bR, N) int8  per-cycle ±1 noise
+    bh_ref,      # (bR, 1) int32    running best energy (input)
+    bm_ref,      # (bR, N) int8     running best spins  (input)
+    m_out,       # (bR, N) float32
+    it_out,      # (bR, N) int32
+    bh_out,      # (bR, 1) int32
+    bm_out,      # (bR, N) int8
+    m_s,         # scratch (bR, N) float32
+    it_s,        # scratch (bR, N) int32
+    bh_s,        # scratch (bR, 1) float32 (exact ints)
+    bm_s,        # scratch (bR, N) float32 (±1)
+    *,
+    n_cycles: int,
+    n_rnd: int,
+    eligible: bool,
+):
+    m_s[...] = m_ref[...]
+    it_s[...] = it_ref[...]
+    bh_s[...] = bh_ref[...].astype(jnp.float32)
+    bm_s[...] = bm_ref[...].astype(jnp.float32)
+    i0 = i0_ref[0, 0]
+    hf = h_ref[...].astype(jnp.float32)  # (1, N)
+    jm = j_ref[...]
+
+    def energy(m, field):
+        # H = -(h·m + m·field)/2 ; exact in f32 for |field| < 2^24
+        hm = jnp.sum(hf * m, axis=-1, keepdims=True)
+        mf_ = jnp.sum(m * field, axis=-1, keepdims=True)
+        return -(hm + mf_) * 0.5
+
+    def track_best(c, m, field):
+        if not eligible:
+            return
+        H = energy(m, field)
+        better = H < bh_s[...]
+        bh_s[...] = jnp.where(better, H, bh_s[...])
+        bm_s[...] = jnp.where(better, m, bm_s[...])
+
+    def body(c, _):
+        field = (
+            jnp.dot(m_s[...], jm, preferred_element_type=jnp.float32) + hf
+        )
+        # m_s currently holds m(t0+c): produced by THIS plateau for c >= 1.
+        @pl.when(c >= 1)
+        def _():
+            track_best(c, m_s[...], field)
+
+        r = noise_ref[c].astype(jnp.int32)
+        I = field.astype(jnp.int32) + n_rnd * r + it_s[...]
+        it_new = jnp.clip(I, -i0, i0 - 1)
+        it_s[...] = it_new
+        m_s[...] = jnp.where(it_new >= 0, 1.0, -1.0).astype(jnp.float32)
+        return 0
+
+    jax.lax.fori_loop(0, n_cycles, body, 0)
+    # final state m(t0+C): one more field evaluation for its energy
+    field = jnp.dot(m_s[...], jm, preferred_element_type=jnp.float32) + hf
+    track_best(n_cycles, m_s[...], field)
+
+    m_out[...] = m_s[...]
+    it_out[...] = it_s[...]
+    bh_out[...] = bh_s[...].astype(jnp.int32)
+    bm_out[...] = bm_s[...].astype(jnp.int8)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_rnd", "eligible", "block_r", "interpret"),
+)
+def ssa_plateau(
+    m: jnp.ndarray,       # (R, N) float32 ±1
+    itanh: jnp.ndarray,   # (R, N) int32
+    J: jnp.ndarray,       # (N, N) float32/bfloat16
+    h: jnp.ndarray,       # (N,) int32
+    noise: jnp.ndarray,   # (C, R, N) int8 ±1
+    i0: jnp.ndarray,      # scalar int32
+    best_H: jnp.ndarray,  # (R,) int32
+    best_m: jnp.ndarray,  # (R, N) int8
+    *,
+    n_rnd: int = 2,
+    eligible: bool = True,
+    block_r: int = 8,
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Run one constant-I0 plateau of C cycles fully on-chip.
+
+    Returns (m, itanh, best_H, best_m) after the plateau.  ``eligible``
+    implements HA-SSA's storage policy: only plateaus with I0 == I0max
+    update the running best (Eq. 6); passing eligible=True for every plateau
+    recovers conventional SSA's policy (Eq. 5).
+    """
+    interpret = DEFAULT_INTERPRET if interpret is None else interpret
+    R, N = m.shape
+    C = noise.shape[0]
+    LANE = 128
+    mf = pad_to(pad_to(m.astype(jnp.float32), 1, LANE), 0, block_r)
+    itp = pad_to(pad_to(itanh, 1, LANE), 0, block_r)
+    Jp = pad_to(pad_to(J, 0, LANE), 1, LANE)
+    hp = pad_to(h.astype(jnp.int32).reshape(1, -1), 1, LANE)
+    np_ = pad_to(pad_to(noise, 2, LANE), 1, block_r)
+    bhp = pad_to(best_H.reshape(-1, 1), 0, block_r)
+    bmp = pad_to(pad_to(best_m, 1, LANE), 0, block_r)
+    Rp, Np = mf.shape
+    grid = (Rp // block_r,)
+    i0a = jnp.asarray(i0, jnp.int32).reshape(1, 1)
+
+    kernel = functools.partial(
+        _plateau_kernel, n_cycles=C, n_rnd=n_rnd, eligible=eligible
+    )
+    m_o, it_o, bh_o, bm_o = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((block_r, Np), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, Np), lambda i: (i, 0)),
+            pl.BlockSpec((Np, Np), lambda i: (0, 0)),
+            pl.BlockSpec((1, Np), lambda i: (0, 0)),
+            pl.BlockSpec((C, block_r, Np), lambda i: (0, i, 0)),
+            pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, Np), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_r, Np), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, Np), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, Np), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Rp, Np), jnp.float32),
+            jax.ShapeDtypeStruct((Rp, Np), jnp.int32),
+            jax.ShapeDtypeStruct((Rp, 1), jnp.int32),
+            jax.ShapeDtypeStruct((Rp, Np), jnp.int8),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_r, Np), jnp.float32),
+            pltpu.VMEM((block_r, Np), jnp.int32),
+            pltpu.VMEM((block_r, 1), jnp.float32),
+            pltpu.VMEM((block_r, Np), jnp.float32),
+        ],
+        interpret=interpret,
+    )(i0a, mf, itp, Jp.astype(J.dtype), hp, np_, bhp, bmp)
+    return (
+        m_o[:R, :N],
+        it_o[:R, :N],
+        bh_o[:R, 0],
+        bm_o[:R, :N],
+    )

@@ -1,0 +1,58 @@
+"""Annealing launcher (the paper's own workload, production form).
+
+    PYTHONPATH=src python -m repro.launch.anneal --problem G11 --trials 16 \
+        --m-shot 20 [--storage i0max|all] [--backend sparse|dense|pallas]
+
+Selectable problems: G-set instances (real files if present under
+data/gset/, structure-faithful generated twins otherwise), King1, K2000.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.configs import ANNEAL_PROBLEMS
+from repro.core import SSAHyperParams, anneal, gset, memory
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--problem", choices=ANNEAL_PROBLEMS, default="G11")
+    ap.add_argument("--trials", type=int, default=16)
+    ap.add_argument("--m-shot", type=int, default=20)
+    ap.add_argument("--tau", type=int, default=100)
+    ap.add_argument("--i0-min", type=int, default=1)
+    ap.add_argument("--i0-max", type=int, default=32)
+    ap.add_argument("--n-rnd", type=int, default=2)
+    ap.add_argument("--beta-shift", type=int, default=1)
+    ap.add_argument("--storage", choices=("i0max", "all"), default="i0max")
+    ap.add_argument("--backend", choices=("sparse", "dense", "pallas"),
+                    default="sparse")
+    ap.add_argument("--noise", choices=("xorshift", "threefry"), default="xorshift")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    p = gset.load(args.problem)
+    hp = SSAHyperParams(
+        n_trials=args.trials, m_shot=args.m_shot, n_rnd=args.n_rnd,
+        i0_min=args.i0_min, i0_max=args.i0_max, tau=args.tau,
+        beta_shift=args.beta_shift,
+    )
+    print(f"{p.name}: N={p.n} |E|={len(p.edges)}; {hp.total_cycles} cycles "
+          f"× {hp.n_trials} trials; storage={args.storage} ({'HA-SSA' if args.storage == 'i0max' else 'SSA'})")
+    t0 = time.time()
+    r = anneal(p, hp, seed=args.seed, storage=args.storage,
+               backend=args.backend, noise=args.noise)
+    dt = time.time() - t0
+    print(f"best cut {r.overall_best_cut}  avg {r.mean_best_cut:.1f}  "
+          f"best energy {r.best_energy.min()}  ({dt:.1f}s, "
+          f"{hp.total_cycles*hp.n_trials/dt:.0f} spin-cycles/s×trials)")
+    if p.best_known:
+        print(f"best known {p.best_known} → {100*r.overall_best_cut/p.best_known:.2f}%")
+    print(f"trajectory memory/iter: {memory.hassa_bits_per_iteration(p.n, hp)} bits "
+          f"(SSA would use {memory.ssa_bits_per_iteration(p.n, hp)}; "
+          f"{memory.memory_ratio(hp)}× saving)")
+
+
+if __name__ == "__main__":
+    main()

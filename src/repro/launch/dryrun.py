@@ -1,0 +1,175 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes, and extract the roofline terms.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single --out experiments/dryrun
+
+Per cell this prints compiled.memory_analysis() / cost_analysis() (the
+proof-it-fits and the FLOPs/bytes source) and writes a JSON record consumed
+by EXPERIMENTS.md §Dry-run/§Roofline and benchmarks/roofline.py.
+"""
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import ARCH_NAMES, SHAPES, applicable, get_config  # noqa: E402
+from repro.launch import hlo_analysis as H  # noqa: E402
+from repro.launch import lowering as LOW  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.sharding import DEFAULT_RULES  # noqa: E402
+
+__all__ = ["run_cell", "main"]
+
+
+def _mesh(kind: str):
+    return make_production_mesh(multi_pod=(kind == "pod"))
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *, rules=DEFAULT_RULES,
+             verbose: bool = True, rules_tag: str = "baseline",
+             analysis: bool = True, train_cfg=None, param_dtype=None,
+             cfg_transform=None):
+    """Lower+compile one cell.  Returns the JSON-able record.
+
+    Two artifacts per cell:
+      deployment lowering — the real step (scan+remat+chunked): proves it
+        compiles on the mesh and yields memory_analysis (capacity proof).
+      analysis lowering  — unrolled depth-1/2 extrapolation (see
+        lowering.analysis_costs): exact FLOPs/bytes/collective bytes for the
+        roofline terms (XLA cost analysis counts loop bodies once).
+    """
+    cfg = get_config(arch)
+    if cfg_transform is not None:
+        cfg = cfg_transform(cfg)
+    shape = SHAPES[shape_name]
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "rules": rules_tag,
+        "kind": shape.kind,
+    }
+    ok, reason = applicable(cfg, shape)
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        if verbose:
+            print(f"[{arch} × {shape_name} × {mesh_kind}] SKIP: {reason}")
+        return rec
+
+    mesh = _mesh(mesh_kind)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    lowered = LOW.cell_lowering(cfg, shape, mesh, rules=rules,
+                                train_cfg=train_cfg, param_dtype=param_dtype)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    peak = float(mem.temp_size_in_bytes + mem.argument_size_in_bytes
+                 + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+    if verbose:
+        print(f"[{arch} × {shape_name} × {mesh_kind}] lower {t_lower:.1f}s "
+              f"compile {t_compile:.1f}s")
+        print("  memory_analysis:", mem)
+
+    raw = H.roofline(compiled, n_chips)  # scan-bodies-once (cross-check only)
+    rec.update(
+        status="ok",
+        n_chips=n_chips,
+        t_lower_s=t_lower,
+        t_compile_s=t_compile,
+        peak_bytes_per_device=peak,
+        fits_hbm_16g=bool(peak < 16e9),
+        raw_hlo_flops_per_device=raw.flops,
+        raw_hlo_coll_bytes_per_device=raw.coll_bytes,
+    )
+
+    total_p, active_p = LOW.count_params(cfg)
+    n_tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mf = H.model_flops(active_p, n_tokens, shape.kind)
+    rec.update(params_total=total_p, params_active=active_p,
+               n_tokens=n_tokens, model_flops=mf)
+
+    if analysis:
+        t0 = time.time()
+        ac = LOW.analysis_costs(cfg, shape, mesh, rules=rules,
+                                train_cfg=train_cfg, param_dtype=param_dtype)
+        rec["t_analysis_s"] = time.time() - t0
+        rep = H.RooflineReport(
+            flops=ac["flops"],
+            hbm_bytes=ac["hbm_bytes"],
+            coll_bytes=ac["coll_bytes"],
+            coll_breakdown=ac["coll_breakdown"],
+            n_chips=n_chips,
+            peak_memory_per_device=peak,
+        )
+        rec.update(**rep.asdict())
+        rec["useful_flops_ratio"] = (
+            mf / (rep.flops * n_chips) if rep.flops else None
+        )
+        if verbose:
+            print(f"  roofline (extrapolated, per-device): compute "
+                  f"{rep.t_compute*1e3:.2f} ms | memory {rep.t_memory*1e3:.2f} ms"
+                  f" | collective {rep.t_collective*1e3:.2f} ms → "
+                  f"{rep.dominant}-bound; MODEL/HLO flops "
+                  f"{rec['useful_flops_ratio'] and round(rec['useful_flops_ratio'], 3)}"
+                  f"; peak {peak/1e9:.2f} GB/device")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "pod", "both"), default="single")
+    ap.add_argument("--all", action="store_true", help="every (arch × shape)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = ARCH_NAMES if (args.all or not args.arch) else (args.arch,)
+    shapes = tuple(SHAPES) if (args.all or not args.shape) else (args.shape,)
+    meshes = ("single", "pod") if args.mesh == "both" else (args.mesh,)
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                cells.append((a, s, m))
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for a, s, m in cells:
+        try:
+            # roofline analysis is a single-pod deliverable; the pod pass
+            # proves the "pod" axis shards.
+            rec = run_cell(a, s, m, verbose=not args.quiet,
+                           analysis=(m == "single"))
+        except Exception as e:  # a failure here is a bug in the system
+            traceback.print_exc()
+            rec = {"arch": a, "shape": s, "mesh": m, "status": "error",
+                   "error": f"{type(e).__name__}: {e}"}
+            failures += 1
+        path = os.path.join(args.out, f"{a}__{s}__{m}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    print(f"\n{len(cells)} cells, {failures} failures → {args.out}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,294 @@
+"""Shared step-function lowering builders for the dry-run and benchmarks.
+
+No jax device-state side effects at import — dryrun.py sets XLA_FLAGS before
+importing this.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import shapes as shp
+from repro.models import cache_defs, model_defs
+from repro.models import transformer as T
+from repro.models.params import ParamDef, param_pspecs, param_shapes, tree_defs_map
+from repro.optim.adamw import AdamWConfig, OptState, zero1_spec
+from repro.serve.engine import make_decode_step, make_prefill_step
+from repro.sharding import DEFAULT_RULES, ShardingRules, logical_to_spec
+from repro.train.step import TrainConfig, TrainState, make_train_step
+
+__all__ = [
+    "count_params",
+    "batch_shardings",
+    "train_lowering",
+    "prefill_lowering",
+    "decode_lowering",
+    "cell_lowering",
+]
+
+
+# ---------------------------------------------------------------------------
+# Parameter counting (MODEL_FLOPS)
+# ---------------------------------------------------------------------------
+def count_params(cfg) -> Tuple[int, int]:
+    """(total, active) parameter counts.  Active discounts expert weights by
+    top_k/n_experts (MoE) — used for MODEL_FLOPS = 6·N_active·D."""
+    defs = model_defs(cfg)
+    total = 0
+    active = 0
+    for path, d in jax.tree_util.tree_flatten_with_path(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef)
+    )[0]:
+        n = int(np.prod(d.shape))
+        total += n
+        keys = [str(getattr(p, "key", "")) for p in path]
+        is_expert = (
+            cfg.n_experts > 0
+            and "ffn" in keys
+            and cfg.n_experts in d.shape
+            and "router" not in keys
+        )
+        if is_expert:
+            active += int(n * cfg.top_k / cfg.n_experts)
+        else:
+            active += n
+    return total, active
+
+
+# ---------------------------------------------------------------------------
+# Shardings
+# ---------------------------------------------------------------------------
+def batch_shardings(mesh: Mesh, specs: Dict[str, jax.ShapeDtypeStruct],
+                    rules: ShardingRules = DEFAULT_RULES):
+    out = {}
+    for k, v in specs.items():
+        axes = ("batch",) + (None,) * (len(v.shape) - 1)
+        out[k] = NamedSharding(mesh, logical_to_spec(mesh, v.shape, axes, rules))
+    return out
+
+
+def _opt_shardings(defs, mesh, rules, zero1: bool):
+    pspecs = param_pspecs(defs, mesh, rules)
+
+    def z1(d: ParamDef, spec):
+        sp = zero1_spec(spec, d.shape, mesh) if zero1 else spec
+        return NamedSharding(mesh, sp)
+
+    moments = jax.tree_util.tree_map(
+        z1, defs, pspecs, is_leaf=lambda x: isinstance(x, ParamDef)
+    )
+    return moments
+
+
+def _param_shardings(defs, mesh, rules):
+    return tree_defs_map(
+        lambda d: NamedSharding(mesh, logical_to_spec(mesh, d.shape, d.axes, rules)),
+        defs,
+    )
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# Lowering builders
+# ---------------------------------------------------------------------------
+def train_lowering(
+    cfg,
+    shape: shp.ShapeCell,
+    mesh: Mesh,
+    *,
+    rules: ShardingRules = DEFAULT_RULES,
+    train_cfg: Optional[TrainConfig] = None,
+    donate: bool = True,
+):
+    """Lower train_step for (arch cfg × train shape × mesh).  No allocation."""
+    train_cfg = train_cfg or TrainConfig()
+    defs = model_defs(cfg)
+    pshard = _param_shardings(defs, mesh, rules)
+    mshard = _opt_shardings(defs, mesh, rules, train_cfg.opt.zero1)
+    state_shapes = TrainState(
+        params=param_shapes(defs),
+        opt=OptState(
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+            mu=tree_defs_map(
+                lambda d: jax.ShapeDtypeStruct(d.shape, jnp.float32), defs
+            ),
+            nu=tree_defs_map(
+                lambda d: jax.ShapeDtypeStruct(d.shape, jnp.float32), defs
+            ),
+        ),
+    )
+    state_shard = TrainState(
+        params=pshard,
+        opt=OptState(step=_replicated(mesh), mu=mshard, nu=mshard),
+    )
+    bspecs = shp.train_input_specs(cfg, shape)
+    bshard = batch_shardings(mesh, bspecs, rules)
+    pspecs = param_pspecs(defs, mesh, rules)
+    step = make_train_step(cfg, train_cfg, mesh=mesh, rules=rules, param_specs=pspecs)
+    jitted = jax.jit(
+        step,
+        in_shardings=(state_shard, bshard),
+        donate_argnums=(0,) if donate else (),
+    )
+    with mesh:
+        lowered = jitted.lower(state_shapes, bspecs)
+    return lowered
+
+
+def _cast_shapes(tree, dtype):
+    if dtype is None:
+        return tree
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype)
+        if jnp.issubdtype(s.dtype, jnp.floating) else s,
+        tree,
+    )
+
+
+def prefill_lowering(cfg, shape: shp.ShapeCell, mesh: Mesh, *,
+                     rules: ShardingRules = DEFAULT_RULES, param_dtype=None):
+    defs = model_defs(cfg)
+    pshard = _param_shardings(defs, mesh, rules)
+    bspecs = shp.prefill_input_specs(cfg, shape)
+    bshard = batch_shardings(mesh, bspecs, rules)
+    step = make_prefill_step(cfg, mesh=mesh, rules=rules, max_seq=shape.seq_len)
+    jitted = jax.jit(step, in_shardings=(pshard, bshard))
+    with mesh:
+        lowered = jitted.lower(_cast_shapes(param_shapes(defs), param_dtype), bspecs)
+    return lowered
+
+
+def decode_lowering(cfg, shape: shp.ShapeCell, mesh: Mesh, *,
+                    rules: ShardingRules = DEFAULT_RULES, donate: bool = True,
+                    param_dtype=None):
+    """serve_step: one new token against a KV cache of shape.seq_len.
+
+    param_dtype=jnp.bfloat16 lowers the weight-stationary serving variant
+    (half the parameter HBM traffic per token — §Perf)."""
+    defs = model_defs(cfg)
+    pshard = _param_shardings(defs, mesh, rules)
+    cdefs = cache_defs(cfg, shape.global_batch, shape.seq_len)
+    cshapes = {"decoder": param_shapes(cdefs)["decoder"]}
+    cshard = {"decoder": _param_shardings(cdefs, mesh, rules)["decoder"]}
+    dspecs = shp.decode_input_specs(cfg, shape)
+    tok_shard = NamedSharding(
+        mesh, logical_to_spec(mesh, dspecs["token"].shape, ("batch",), rules)
+    )
+    step = make_decode_step(cfg, mesh=mesh, rules=rules)
+    jitted = jax.jit(
+        step,
+        in_shardings=(pshard, cshard, tok_shard, _replicated(mesh)),
+        donate_argnums=(1,) if donate else (),
+    )
+    with mesh:
+        lowered = jitted.lower(
+            _cast_shapes(param_shapes(defs), param_dtype), cshapes,
+            dspecs["token"], dspecs["pos"]
+        )
+    return lowered
+
+
+def cell_lowering(cfg, shape: shp.ShapeCell, mesh: Mesh, *,
+                  rules: ShardingRules = DEFAULT_RULES,
+                  train_cfg: Optional[TrainConfig] = None,
+                  param_dtype=None):
+    if shape.kind == "train":
+        return train_lowering(cfg, shape, mesh, rules=rules, train_cfg=train_cfg)
+    if shape.kind == "prefill":
+        return prefill_lowering(cfg, shape, mesh, rules=rules,
+                                param_dtype=param_dtype)
+    if shape.kind == "decode":
+        return decode_lowering(cfg, shape, mesh, rules=rules,
+                               param_dtype=param_dtype)
+    raise ValueError(shape.kind)
+
+
+# ---------------------------------------------------------------------------
+# Analysis lowering: exact FLOPs/bytes/collectives despite XLA's
+# count-loop-bodies-once cost model.
+#
+# XLA's HloCostAnalysis counts a while-loop body ONCE regardless of trip
+# count, so the deployment lowering (lax.scan over layer groups + chunked
+# attention/MoE/loss scans) undercounts FLOPs by ~n_groups × n_chunks.  The
+# analysis lowering removes every scan: layers unrolled (scan_layers=False),
+# attention/MoE/loss chunking widened to the full sequence, remat off — then
+# compiles depth-1 and depth-2 variants and extrapolates linearly:
+#
+#     total(G) = f1 + (G - 1) · (f2 - f1)
+#
+# exact for homogeneous groups (per-group cost g = f2 - f1; overhead =
+# embedding/loss/optimizer = f1 - g, which scales correctly because stacked
+# params at depth G enter both f1 and f2 linearly).  Residual undercount:
+# the sequential token scans inside Mamba/RWKV bodies (< 1–2 % of
+# layer FLOPs for the assigned dims — documented in EXPERIMENTS.md).
+# ---------------------------------------------------------------------------
+def analysis_config(cfg, shape: shp.ShapeCell, depth_groups: int):
+    S = shape.seq_len
+    # moe_seq_chunk is NOT widened: capacity scales with the chunk, so a
+    # wider chunk would change dropping semantics and inflate the dispatch
+    # tensors ~(S/chunk)×; instead moe_ffn unrolls its chunk loop when
+    # scan_layers=False.
+    return dataclasses.replace(
+        cfg,
+        n_layers=len(cfg.block) * depth_groups,
+        scan_layers=False,
+        remat="none",
+        q_chunk=S,
+        kv_chunk=S,
+    )
+
+
+def _cost_numbers(cfg, shape, mesh, rules, train_cfg, param_dtype=None):
+    lowered = cell_lowering(cfg, shape, mesh, rules=rules, train_cfg=train_cfg,
+                            param_dtype=param_dtype)
+    compiled = lowered.compile()
+    from repro.launch import hlo_analysis as H
+
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    coll = H.collective_bytes(compiled.as_text())
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "hbm_bytes": float(ca.get("bytes accessed", 0.0)),
+        "coll_bytes": float(coll["total"]),
+        "coll_breakdown": coll,
+    }
+
+
+def analysis_costs(cfg, shape: shp.ShapeCell, mesh: Mesh, *,
+                   rules: ShardingRules = DEFAULT_RULES,
+                   train_cfg: Optional[TrainConfig] = None,
+                   param_dtype=None) -> Dict[str, Any]:
+    """Extrapolated whole-model FLOPs / HBM bytes / collective bytes
+    (per-device numbers, as cost_analysis reports for SPMD modules)."""
+    if shape.kind == "train":
+        train_cfg = dataclasses.replace(
+            train_cfg or TrainConfig(),
+            scan_microbatches=False, scan_loss_chunks=False,
+        )
+    G = cfg.n_groups
+    c1 = _cost_numbers(analysis_config(cfg, shape, 1), shape, mesh, rules,
+                       train_cfg, param_dtype)
+    c2 = _cost_numbers(analysis_config(cfg, shape, 2), shape, mesh, rules,
+                       train_cfg, param_dtype)
+    out = {}
+    for k in ("flops", "hbm_bytes", "coll_bytes"):
+        per_group = c2[k] - c1[k]
+        out[k] = c1[k] + (G - 1) * per_group
+        out[f"{k}_g1"] = c1[k]
+        out[f"{k}_per_group"] = per_group
+    out["coll_breakdown"] = {
+        k: c1["coll_breakdown"][k]
+        + (G - 1) * (c2["coll_breakdown"][k] - c1["coll_breakdown"][k])
+        for k in c1["coll_breakdown"]
+    }
+    return out

@@ -1,0 +1,3 @@
+"""Model zoo substrate: composable transformer/SSM/MoE definitions."""
+from . import layers, mamba, moe, params, rwkv, transformer  # noqa: F401
+from .transformer import ModelConfig, cache_defs, decode_step, forward, model_defs, prefill  # noqa: F401

@@ -1,0 +1,335 @@
+"""Core transformer layers: norms, RoPE, GQA attention (qk-norm, chunked
+flash form, flash-decode), dense MLPs, embeddings.
+
+Conventions:
+  * params fp32; compute bf16 (cast at use); softmax/norm statistics f32.
+  * activations (B, S, M); attention heads layout (B, S, H, D).
+  * every function takes (mesh, rules) and self-constrains its activations —
+    GSPMD propagates the rest.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding import DEFAULT_RULES, ShardingRules, constrain
+
+from .params import ParamDef
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+__all__ = [
+    "rms_norm",
+    "layer_norm",
+    "norm_defs",
+    "apply_norm",
+    "rope",
+    "attn_defs",
+    "attention",
+    "attention_decode",
+    "mlp_defs",
+    "mlp",
+    "embed_defs",
+]
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rms_norm(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32) + bias.astype(
+        jnp.float32
+    )
+    return out.astype(x.dtype)
+
+
+def norm_defs(d_model: int, kind: str) -> Dict[str, ParamDef]:
+    if kind == "rmsnorm":
+        return {"scale": ParamDef((d_model,), ("d_model",), init="ones")}
+    if kind == "layernorm":
+        return {
+            "scale": ParamDef((d_model,), ("d_model",), init="ones"),
+            "bias": ParamDef((d_model,), ("d_model",), init="zeros"),
+        }
+    raise ValueError(kind)
+
+
+def apply_norm(p, x, kind: str):
+    if kind == "rmsnorm":
+        return rms_norm(x, p["scale"])
+    return layer_norm(x, p["scale"], p["bias"])
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope(x, positions, theta: float = 1e4):
+    """Rotary embedding; x (..., S, H, D) or (..., H, D) with matching positions.
+
+    positions: int32 broadcastable to x.shape[:-2].
+    """
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None, None] * freq  # (..., 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+def attn_defs(cfg) -> Dict[str, ParamDef]:
+    M, H, K, D = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    defs = {
+        "wq": ParamDef((M, H, D), ("d_model", "heads", "d_head")),
+        "wk": ParamDef((M, K, D), ("d_model", "kv_heads", "d_head")),
+        "wv": ParamDef((M, K, D), ("d_model", "kv_heads", "d_head")),
+        "wo": ParamDef((H, D, M), ("heads", "d_head", "d_model")),
+    }
+    if cfg.qk_norm:
+        defs["q_norm"] = ParamDef((D,), ("d_head",), init="ones")
+        defs["k_norm"] = ParamDef((D,), ("d_head",), init="ones")
+    return defs
+
+
+def _qkv(p, x, x_kv, cfg, positions, positions_kv):
+    cd = COMPUTE_DTYPE
+    q = jnp.einsum("bsm,mhd->bshd", x.astype(cd), p["wq"].astype(cd))
+    k = jnp.einsum("bsm,mkd->bskd", x_kv.astype(cd), p["wk"].astype(cd))
+    v = jnp.einsum("bsm,mkd->bskd", x_kv.astype(cd), p["wv"].astype(cd))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if cfg.rope_theta > 0:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions_kv, cfg.rope_theta)
+    return q, k, v
+
+
+def _flash(q, k, v, *, causal: bool, q_chunk: int, kv_chunk: int,
+           mesh, rules, kv_len: Optional[jnp.ndarray] = None):
+    """Chunked online-softmax attention with GQA grouping.
+
+    q (B,S,H,D), k/v (B,Skv,KVH,D).  Scans q chunks (outer) and kv chunks
+    (inner); never materializes more than (B,KVH,G,Cq,Ck) scores.
+    """
+    B, S, H, D = q.shape
+    Skv, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, Skv)
+    # pad to chunk multiples; padded kv is masked out, padded q sliced off
+    S_orig, Skv_orig = S, Skv
+    if S % q_chunk:
+        q = jnp.pad(q, ((0, 0), (0, -S % q_chunk), (0, 0), (0, 0)))
+        S = q.shape[1]
+    if Skv % kv_chunk:
+        pad = -Skv % kv_chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Skv = k.shape[1]
+        kv_len = jnp.minimum(
+            Skv_orig if kv_len is None else kv_len, Skv_orig
+        )
+    nq, nk = S // q_chunk, Skv // kv_chunk
+    scale = 1.0 / np.sqrt(D)
+
+    qb = q.reshape(B, nq, q_chunk, KVH, G, D)
+    kb = k.reshape(B, nk, kv_chunk, KVH, D)
+    vb = v.reshape(B, nk, kv_chunk, KVH, D)
+    # scan carries move the chunk axis to the front
+    qb = jnp.moveaxis(qb, 1, 0)  # (nq, B, Cq, KVH, G, D)
+    kb = jnp.moveaxis(kb, 1, 0)
+    vb = jnp.moveaxis(vb, 1, 0)
+
+    def q_step(_, qi_qc):
+        qi, qc = qi_qc  # chunk index, (B, Cq, KVH, G, D)
+        q_pos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, ki_kc):
+            acc, mx, dn = carry
+            ki, kc, vc = ki_kc
+            k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum(
+                "bqkgd,bckd->bkgqc", qc, kc, preferred_element_type=jnp.float32
+            ) * scale  # (B,KVH,G,Cq,Ck) f32
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if kv_len is not None:
+                mask &= k_pos[None, :] < kv_len
+            s = jnp.where(mask, s, -1e30)
+            m_new = jnp.maximum(mx, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(mx - m_new)
+            dn = dn * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum(
+                "bkgqc,bckd->bkgqd", p.astype(vc.dtype), vc,
+                preferred_element_type=jnp.float32,
+            )
+            acc = acc * corr[..., None] + pv
+            return (acc, m_new, dn), None
+
+        acc0 = jnp.zeros((B, KVH, G, q_chunk, D), jnp.float32)
+        m0 = jnp.full((B, KVH, G, q_chunk), -1e30, jnp.float32)
+        d0 = jnp.zeros((B, KVH, G, q_chunk), jnp.float32)
+        (acc, _, dn), _ = jax.lax.scan(
+            kv_step, (acc0, m0, d0), (jnp.arange(nk), kb, vb)
+        )
+        out = acc / jnp.maximum(dn[..., None], 1e-30)  # (B,KVH,G,Cq,D)
+        out = jnp.moveaxis(out, 3, 1).reshape(B, q_chunk, KVH * G, D)
+        return None, out.astype(q.dtype)
+
+    _, chunks = jax.lax.scan(q_step, None, (jnp.arange(nq), qb))
+    out = jnp.moveaxis(chunks, 0, 1).reshape(B, S, H, D)[:, :S_orig]
+    return constrain(out, mesh, ("batch", "seq", "heads", "d_head"), rules)
+
+
+def attention(
+    p,
+    x,
+    cfg,
+    *,
+    mesh=None,
+    rules: ShardingRules = DEFAULT_RULES,
+    causal: bool = True,
+    x_kv: Optional[jnp.ndarray] = None,   # cross-attention source
+    positions: Optional[jnp.ndarray] = None,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Full-sequence attention (train / prefill).  Returns (y, kv_cache)."""
+    B, S, _ = x.shape
+    x_kv = x if x_kv is None else x_kv
+    Skv = x_kv.shape[1]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    pos_kv = jnp.broadcast_to(jnp.arange(Skv), (B, Skv))
+    q, k, v = _qkv(p, x, x_kv, cfg, positions, pos_kv)
+    # internals prefer head/TP sharding; under sequence-parallel rules the
+    # seq→model assignment applies only to the residual stream, so GSPMD
+    # places the SP gather/scatter at the layer boundary.
+    rules_i = rules.replace(seq=None)
+    q = constrain(q, mesh, ("batch", "seq", "heads", "d_head"), rules_i)
+    k = constrain(k, mesh, ("batch", "seq", "kv_heads", "d_head"), rules_i)
+    v = constrain(v, mesh, ("batch", "seq", "kv_heads", "d_head"), rules_i)
+    out = _flash(
+        q, k, v, causal=causal, q_chunk=q_chunk, kv_chunk=kv_chunk,
+        mesh=mesh, rules=rules_i,
+    )
+    y = jnp.einsum(
+        "bshd,hdm->bsm", out.astype(COMPUTE_DTYPE), p["wo"].astype(COMPUTE_DTYPE)
+    )
+    cache = {"k": k, "v": v}
+    return constrain(y, mesh, ("batch", "seq", "d_model"), rules), cache
+
+
+def attention_decode(
+    p,
+    x,          # (B, 1, M) current token activations
+    cache,      # {"k": (B, Smax, KVH, D), "v": ...} — kv_seq sharded
+    pos,        # scalar int32 — current position (same across batch)
+    cfg,
+    *,
+    mesh=None,
+    rules: ShardingRules = DEFAULT_RULES,
+    cross: bool = False,   # cross-attention: cache is static, no update
+    cross_len: Optional[int] = None,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Single-token decode with flash-decode semantics.
+
+    The KV cache is sequence-sharded over the model axis (DESIGN.md §6): the
+    softmax over the sharded sequence dim lowers to partial max/sum +
+    all-reduce — XLA's distributed flash-decode.
+    """
+    B = x.shape[0]
+    positions = jnp.broadcast_to(pos, (B, 1))
+    q, k_new, v_new = _qkv(p, x, x, cfg, positions, positions)
+    if cross:
+        k, v = cache["k"], cache["v"]
+        kv_len = cross_len if cross_len is not None else k.shape[1]
+    else:
+        k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), (0, pos, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), (0, pos, 0, 0))
+        k = constrain(k, mesh, ("batch", "kv_seq", "kv_heads", "d_head"), rules)
+        v = constrain(v, mesh, ("batch", "kv_seq", "kv_heads", "d_head"), rules)
+        kv_len = pos + 1
+    Smax, KVH = k.shape[1], k.shape[2]
+    H = q.shape[2]
+    G = H // KVH
+    qg = q.reshape(B, KVH, G, -1)  # (B,KVH,G,D) — S=1 squeezed
+    s = jnp.einsum(
+        "bkgd,bckd->bkgc", qg, k, preferred_element_type=jnp.float32
+    ) / np.sqrt(cfg.d_head)
+    live = jnp.arange(Smax) < kv_len
+    s = jnp.where(live[None, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bkgc,bckd->bkgd", w.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    out = out.reshape(B, 1, H, cfg.d_head).astype(COMPUTE_DTYPE)
+    y = jnp.einsum("bshd,hdm->bsm", out, p["wo"].astype(COMPUTE_DTYPE))
+    new_cache = cache if cross else {"k": k, "v": v}
+    return constrain(y, mesh, ("batch", "seq", "d_model"), rules), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP
+# ---------------------------------------------------------------------------
+def mlp_defs(cfg, d_ff: Optional[int] = None) -> Dict[str, ParamDef]:
+    M = cfg.d_model
+    F = d_ff or cfg.d_ff
+    defs = {"wo": ParamDef((F, M), ("d_ff", "d_model"))}
+    if cfg.act == "swiglu":
+        defs["wi"] = ParamDef((M, 2, F), ("d_model", None, "d_ff"))
+    else:
+        defs["wi"] = ParamDef((M, F), ("d_model", "d_ff"))
+    return defs
+
+
+def mlp(p, x, cfg, *, mesh=None, rules: ShardingRules = DEFAULT_RULES):
+    cd = COMPUTE_DTYPE
+    xc = x.astype(cd)
+    if cfg.act == "swiglu":
+        gu = jnp.einsum("bsm,mtf->bstf", xc, p["wi"].astype(cd))
+        h = jax.nn.silu(gu[:, :, 0]) * gu[:, :, 1]
+    elif cfg.act == "gelu":
+        h = jax.nn.gelu(jnp.einsum("bsm,mf->bsf", xc, p["wi"].astype(cd)))
+    elif cfg.act == "relu_sq":
+        h = jnp.square(jax.nn.relu(jnp.einsum("bsm,mf->bsf", xc, p["wi"].astype(cd))))
+    else:
+        raise ValueError(cfg.act)
+    h = constrain(h, mesh, ("batch", "seq", "d_ff"), rules.replace(seq=None))
+    y = jnp.einsum("bsf,fm->bsm", h, p["wo"].astype(cd))
+    return constrain(y, mesh, ("batch", "seq", "d_model"), rules)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / LM head
+# ---------------------------------------------------------------------------
+def embed_defs(cfg) -> Dict[str, ParamDef]:
+    defs = {
+        "tok": ParamDef((cfg.vocab, cfg.d_model), ("vocab", "d_model"), init="embed", scale=0.02)
+    }
+    if not cfg.tie_embeddings:
+        defs["head"] = ParamDef((cfg.d_model, cfg.vocab), ("d_model", "vocab"))
+    return defs

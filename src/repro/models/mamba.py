@@ -1,0 +1,170 @@
+"""Mamba (S6 selective SSM) block — the 'mamba' layers of Jamba-1.5.
+
+Faithful Mamba-1 structure (Gu & Dao 2023; Jamba arXiv:2403.19887):
+  in_proj   : M → 2·d_inner  (x branch, z gate branch)
+  conv1d    : depthwise causal, width d_conv, over the x branch
+  selection : x → (dt_low (dt_rank), B (d_state), C (d_state));
+              dt = softplus(dt_low @ W_dt + dt_bias)
+  SSM       : h_t = exp(dt·A) ⊙ h_{t-1} + (dt·B_t) · x_t ;  y_t = C_t·h_t + D·x_t
+  out       : (y ⊙ silu(z)) @ out_proj → M
+
+Train/prefill run a `lax.scan` over the sequence (state (B, d_inner, N));
+decode is a single fused state update.  The recurrence is O(L·d_inner·N) —
+negligible next to the projections, so the scan form is the right TPU
+baseline (see DESIGN.md; an associative-scan variant trades 2× FLOPs for
+parallel depth and is a §Perf candidate for long_500k).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding import DEFAULT_RULES, ShardingRules, constrain
+
+from .layers import COMPUTE_DTYPE
+from .params import ParamDef
+
+__all__ = ["mamba_defs", "mamba", "mamba_decode", "mamba_init_cache"]
+
+
+def _dims(cfg):
+    d_inner = cfg.expand * cfg.d_model
+    dt_rank = cfg.dt_rank or max(1, cfg.d_model // 16)
+    return d_inner, dt_rank, cfg.d_state, cfg.d_conv
+
+
+def mamba_defs(cfg) -> Dict[str, ParamDef]:
+    M = cfg.d_model
+    DI, R, N, K = _dims(cfg)
+    return {
+        "in_proj": ParamDef((M, 2, DI), ("d_model", None, "d_ff")),
+        "conv_w": ParamDef((K, DI), (None, "d_ff"), scale=0.5),
+        "conv_b": ParamDef((DI,), ("d_ff",), init="zeros"),
+        "x_proj": ParamDef((DI, R + 2 * N), ("d_ff", None)),
+        "dt_proj": ParamDef((R, DI), (None, "d_ff"), scale=0.1),
+        "dt_bias": ParamDef((DI,), ("d_ff",), init="zeros"),
+        "a_log": ParamDef((DI, N), ("d_ff", "ssm_state"), init="zeros"),
+        "d_skip": ParamDef((DI,), ("d_ff",), init="ones"),
+        "out_proj": ParamDef((DI, M), ("d_ff", "d_model")),
+    }
+
+
+def _selection(p, xc, cfg):
+    """xc (..., DI) → dt (..., DI), Bm (..., N), Cm (..., N), all f32."""
+    DI, R, N, _ = _dims(cfg)
+    proj = jnp.einsum(
+        "...d,dr->...r", xc.astype(jnp.float32), p["x_proj"].astype(jnp.float32)
+    )
+    dt_low, Bm, Cm = proj[..., :R], proj[..., R : R + N], proj[..., R + N :]
+    dt = jax.nn.softplus(
+        jnp.einsum("...r,rd->...d", dt_low, p["dt_proj"].astype(jnp.float32))
+        + p["dt_bias"].astype(jnp.float32)
+    )
+    return dt, Bm, Cm
+
+
+def _ssm_step(h, xt, dt, Bm, Cm, A, D_skip):
+    """One recurrence step.  h (B, DI, N); xt/dt (B, DI); Bm/Cm (B, N)."""
+    dA = jnp.exp(dt[..., None] * A)                      # (B, DI, N)
+    dBx = (dt * xt)[..., None] * Bm[:, None, :]          # (B, DI, N)
+    h_new = dA * h + dBx
+    y = jnp.einsum("bdn,bn->bd", h_new, Cm) + D_skip * xt
+    return h_new, y
+
+
+def mamba(
+    p,
+    x,  # (B, S, M)
+    cfg,
+    *,
+    mesh=None,
+    rules: ShardingRules = DEFAULT_RULES,
+    h0: Optional[jnp.ndarray] = None,
+    conv0: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Full-sequence Mamba.  Returns (y (B,S,M), cache{conv,ssm})."""
+    B, S, M = x.shape
+    DI, R, N, K = _dims(cfg)
+    cd = COMPUTE_DTYPE
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    D_skip = p["d_skip"].astype(jnp.float32)
+
+    xz = jnp.einsum("bsm,mtd->bstd", x.astype(cd), p["in_proj"].astype(cd))
+    xs, z = xz[:, :, 0], xz[:, :, 1]  # (B,S,DI)
+    xs = constrain(xs, mesh, ("batch", "seq", "d_ff"), rules)
+
+    # depthwise causal conv1d, width K
+    pad = jnp.zeros((B, K - 1, DI), xs.dtype) if conv0 is None else conv0.astype(xs.dtype)
+    xp = jnp.concatenate([pad, xs], axis=1)  # (B, S+K-1, DI)
+    conv_w = p["conv_w"].astype(jnp.float32)
+    xc = sum(
+        xp[:, i : i + S].astype(jnp.float32) * conv_w[i]
+        for i in range(K)
+    ) + p["conv_b"].astype(jnp.float32)
+    xc = jax.nn.silu(xc)  # (B,S,DI) f32
+
+    dt, Bm, Cm = _selection(p, xc, cfg)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        h_new, y = _ssm_step(h, xt, dtt, bt, ct, A, D_skip)
+        return h_new, y
+
+    h_init = (
+        jnp.zeros((B, DI, N), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    )
+    xs_t = jnp.moveaxis(xc, 1, 0)  # (S,B,DI)
+    dt_t = jnp.moveaxis(dt, 1, 0)
+    B_t = jnp.moveaxis(Bm, 1, 0)
+    C_t = jnp.moveaxis(Cm, 1, 0)
+    h_fin, ys = jax.lax.scan(step, h_init, (xs_t, dt_t, B_t, C_t))
+    y = jnp.moveaxis(ys, 0, 1)  # (B,S,DI)
+
+    out = (y * jax.nn.silu(z.astype(jnp.float32))).astype(cd)
+    out = jnp.einsum("bsd,dm->bsm", out, p["out_proj"].astype(cd))
+    # cache["conv"] holds the last K-1 *pre-conv* inputs
+    cache = {"conv": xp[:, -(K - 1):].astype(cd), "ssm": h_fin}
+    return constrain(out, mesh, ("batch", "seq", "d_model"), rules), cache
+
+
+def mamba_init_cache(cfg, batch: int, dtype=COMPUTE_DTYPE):
+    DI, R, N, K = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, K - 1, DI), dtype),
+        "ssm": jnp.zeros((batch, DI, N), jnp.float32),
+    }
+
+
+def mamba_decode(
+    p,
+    x,      # (B, 1, M)
+    cache,  # {"conv": (B, K-1, DI), "ssm": (B, DI, N)}
+    cfg,
+    *,
+    mesh=None,
+    rules: ShardingRules = DEFAULT_RULES,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    B = x.shape[0]
+    DI, R, N, K = _dims(cfg)
+    cd = COMPUTE_DTYPE
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    D_skip = p["d_skip"].astype(jnp.float32)
+
+    xz = jnp.einsum("bsm,mtd->bstd", x.astype(cd), p["in_proj"].astype(cd))
+    xs, z = xz[:, 0, 0], xz[:, 0, 1]  # (B, DI)
+
+    window = jnp.concatenate([cache["conv"].astype(jnp.float32), xs[:, None].astype(jnp.float32)], axis=1)  # (B,K,DI)
+    conv_w = p["conv_w"].astype(jnp.float32)
+    xc = jnp.einsum("bkd,kd->bd", window, conv_w) + p["conv_b"].astype(jnp.float32)
+    xc = jax.nn.silu(xc)
+
+    dt, Bm, Cm = _selection(p, xc, cfg)
+    h_new, y = _ssm_step(cache["ssm"].astype(jnp.float32), xc, dt, Bm, Cm, A, D_skip)
+
+    out = (y * jax.nn.silu(z.astype(jnp.float32))).astype(cd)
+    out = jnp.einsum("bd,dm->bm", out, p["out_proj"].astype(cd))[:, None]
+    new_cache = {"conv": window[:, 1:].astype(cd), "ssm": h_new}
+    return constrain(out, mesh, ("batch", "seq", "d_model"), rules), new_cache

@@ -1,0 +1,215 @@
+"""Mixture-of-Experts FFN: top-k router + GShard-style capacity dispatch.
+
+Design (DESIGN.md §6):
+  * experts sharded over the `model` mesh axis (EP); the dispatch/combine
+    einsums are where GSPMD materializes the all-to-all traffic.
+  * sequence-chunked: the (B, C, E, cap) dispatch tensor is bounded by
+    chunking the sequence (cap scales with the chunk, keeping the buffer
+    ~capacity_factor × activation size regardless of S).
+  * decode (S == 1) folds the batch into the token group instead, so expert
+    compute stays ≈ active-FLOPs × capacity_factor rather than E×.
+  * router in f32; auxiliary load-balancing loss (Switch-style) returned to
+    the caller.
+
+The per-token group capacity is cap = ceil(tokens_per_group · top_k / E ·
+capacity_factor); overflow tokens are dropped (combine weight 0) — the
+standard dropping MoE, which keeps every shape static for pjit.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding import DEFAULT_RULES, ShardingRules, constrain
+
+from .layers import COMPUTE_DTYPE
+from .params import ParamDef
+
+__all__ = ["moe_defs", "moe_ffn"]
+
+
+def moe_defs(cfg) -> Dict[str, ParamDef]:
+    M, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    defs = {
+        "router": ParamDef((M, E), ("d_model", "experts"), scale=0.02),
+        "wo": ParamDef((E, F, M), ("experts", "d_ff", "d_model")),
+    }
+    if cfg.act == "swiglu":
+        defs["wi"] = ParamDef((E, M, 2, F), ("experts", "d_model", None, "d_ff"))
+    else:
+        defs["wi"] = ParamDef((E, M, F), ("experts", "d_model", "d_ff"))
+    return defs
+
+
+def _top_k_mask(probs: jnp.ndarray, k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Iterative top-k: returns (gates (..., k), onehot (..., k, E))."""
+    E = probs.shape[-1]
+    p = probs
+    gates, onehots = [], []
+    for _ in range(k):
+        idx = jnp.argmax(p, axis=-1)
+        oh = jax.nn.one_hot(idx, E, dtype=probs.dtype)
+        gates.append(jnp.sum(p * oh, axis=-1))
+        onehots.append(oh)
+        p = p * (1.0 - oh)
+    return jnp.stack(gates, axis=-1), jnp.stack(onehots, axis=-2)
+
+
+def _dispatch_combine(probs, k: int, cap: int):
+    """Build the (G, T, E, cap) combine tensor for one token group axis.
+
+    probs: (G, T, E) router probabilities (f32); G groups of T tokens.
+    Returns (combine (G,T,E,cap) f32, aux_loss scalar).
+    """
+    G, T, E = probs.shape
+    gates, onehot = _top_k_mask(probs, k)  # (G,T,k), (G,T,k,E)
+    # position of each (token, choice) within its expert queue, priority =
+    # (token index, then choice rank): flatten (T, k)
+    flat = onehot.reshape(G, T * k, E)
+    pos = jnp.cumsum(flat, axis=1) - flat  # 0-based positions
+    pos = jnp.sum(pos * flat, axis=-1).reshape(G, T, k)  # (G,T,k)
+    keep = (pos < cap).astype(probs.dtype)
+    gates = gates * keep
+    # renormalize kept gates (standard for top-k>1)
+    denom = jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    gates = gates / denom
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=probs.dtype) * keep[..., None]
+    # combine[g,t,e,c] = Σ_k gate · onehot_e · onehot_c
+    combine = jnp.einsum("gtk,gtke,gtkc->gtec", gates, onehot, pos_oh)
+    # Switch aux loss: E · Σ_e mean_tokens(frac routed to e) · mean(prob e)
+    frac = jnp.mean(onehot[:, :, 0, :], axis=1)  # top-1 routing fraction (G,E)
+    mprob = jnp.mean(probs, axis=1)
+    aux = E * jnp.mean(jnp.sum(frac * mprob, axis=-1))
+    return combine, aux
+
+
+def _expert_compute(p, xin, cfg):
+    """xin: (E, G, cap, M) → (E, G, cap, M)."""
+    cd = COMPUTE_DTYPE
+    xin = xin.astype(cd)
+    if cfg.act == "swiglu":
+        gu = jnp.einsum("egcm,emtf->egctf", xin, p["wi"].astype(cd))
+        h = jax.nn.silu(gu[..., 0, :]) * gu[..., 1, :]
+    else:
+        h = jax.nn.gelu(jnp.einsum("egcm,emf->egcf", xin, p["wi"].astype(cd)))
+    return jnp.einsum("egcf,efm->egcm", h, p["wo"].astype(cd))
+
+
+def _dispatch_gather(probs, k: int, cap: int):
+    """Scatter/gather routing metadata (no (G,T,E,cap) one-hot tensors).
+
+    Returns (e_idx, pos, gates, keep): each (G, T, k).  The one-hot
+    ``combine`` einsum form costs O(T·E·cap·M) FLOPs+bytes; this form costs
+    O(T·k·M) — the §Perf 'gather-MoE' optimization.  Bit-equivalent routing
+    (same experts, same positions, same gates) — property-tested.
+    """
+    gates, onehot = _top_k_mask(probs, k)  # (G,T,k), (G,T,k,E)
+    flat = onehot.reshape(onehot.shape[0], -1, onehot.shape[-1])
+    pos = jnp.cumsum(flat, axis=1) - flat
+    pos = jnp.sum(pos * flat, axis=-1).reshape(gates.shape).astype(jnp.int32)
+    e_idx = jnp.argmax(onehot, axis=-1).astype(jnp.int32)  # (G,T,k)
+    keep = pos < cap
+    gates = gates * keep
+    denom = jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    gates = gates / denom
+    # Switch aux loss (same as einsum path)
+    E = probs.shape[-1]
+    frac = jnp.mean(onehot[:, :, 0, :], axis=1)
+    mprob = jnp.mean(probs, axis=1)
+    aux = E * jnp.mean(jnp.sum(frac * mprob, axis=-1))
+    return e_idx, pos, gates, keep, aux
+
+
+def moe_ffn(
+    p,
+    x,  # (B, S, M)
+    cfg,
+    *,
+    mesh=None,
+    rules: ShardingRules = DEFAULT_RULES,
+    seq_chunk: int = 512,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (B,S,M), aux_loss scalar f32)."""
+    B, S, M = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    cd = COMPUTE_DTYPE
+    impl = getattr(cfg, "moe_impl", "einsum")
+
+    def run_group_einsum(xg):
+        """xg: (G, T, M) — G token groups of T tokens each."""
+        G, T, _ = xg.shape
+        cap = max(1, int(np.ceil(T * K / E * cfg.capacity_factor)))
+        logits = jnp.einsum(
+            "gtm,me->gte", xg.astype(jnp.float32), p["router"].astype(jnp.float32)
+        )
+        probs = jax.nn.softmax(logits, axis=-1)
+        combine, aux = _dispatch_combine(probs, K, cap)  # (G,T,E,cap)
+        dispatch = (combine > 0).astype(cd)
+        xin = jnp.einsum("gtec,gtm->egcm", dispatch, xg.astype(cd))
+        xin = constrain(xin, mesh, ("experts", "batch", None, "d_model"), rules)
+        xout = _expert_compute(p, xin, cfg)
+        xout = constrain(xout, mesh, ("experts", "batch", None, "d_model"), rules)
+        y = jnp.einsum("gtec,egcm->gtm", combine.astype(cd), xout)
+        return y, aux
+
+    def run_group_gather(xg):
+        """Scatter-add dispatch / gather combine (no one-hot einsums)."""
+        G, T, _ = xg.shape
+        cap = max(1, int(np.ceil(T * K / E * cfg.capacity_factor)))
+        logits = jnp.einsum(
+            "gtm,me->gte", xg.astype(jnp.float32), p["router"].astype(jnp.float32)
+        )
+        probs = jax.nn.softmax(logits, axis=-1)
+        e_idx, pos, gates, keep, aux = _dispatch_gather(probs, K, cap)
+        g_ar = jnp.arange(G)[:, None, None]
+        t_ar = jnp.broadcast_to(jnp.arange(T)[None, :, None], (G, T, K))
+        pos_c = jnp.where(keep, pos, cap)  # dropped → scatter into pad slot
+        xin = jnp.zeros((E, G, cap + 1, M), cd)
+        xin = xin.at[e_idx, g_ar, pos_c].add(
+            jnp.broadcast_to(xg[:, :, None, :], (G, T, K, M)).astype(cd)
+        )
+        xin = constrain(xin[:, :, :cap], mesh,
+                        ("experts", "batch", None, "d_model"), rules)
+        xout = _expert_compute(p, xin, cfg)
+        xout = constrain(xout, mesh, ("experts", "batch", None, "d_model"), rules)
+        y_tok = xout[e_idx, g_ar, jnp.minimum(pos, cap - 1)]  # (G,T,K,M)
+        y = jnp.sum(y_tok * gates[..., None].astype(cd), axis=2)
+        return y.astype(cd), aux
+
+    run_group = run_group_gather if impl == "gather" else run_group_einsum
+
+    if S == 1:
+        # decode: fold batch into the token group
+        y, aux = run_group(x.reshape(1, B, M))
+        y = y.reshape(B, 1, M)
+        return constrain(y, mesh, ("batch", "seq", "d_model"), rules), aux
+
+    chunk = min(seq_chunk, S)
+    if S % chunk:
+        chunk = S  # odd lengths: single group (shapes here are powers of two)
+    n_chunks = S // chunk
+
+    if n_chunks == 1:
+        y, aux = run_group(x)
+        return constrain(y, mesh, ("batch", "seq", "d_model"), rules), aux
+
+    xc = jnp.moveaxis(x.reshape(B, n_chunks, chunk, M), 1, 0)
+
+    if not getattr(cfg, "scan_layers", True):
+        # analysis lowering: unroll so XLA's cost model counts every chunk
+        # (identical math — same chunk size, same capacity semantics)
+        outs = [run_group(xc[i]) for i in range(n_chunks)]
+        y = jnp.moveaxis(jnp.stack([o[0] for o in outs]), 0, 1).reshape(B, S, M)
+        aux = jnp.mean(jnp.stack([o[1] for o in outs]))
+        return constrain(y, mesh, ("batch", "seq", "d_model"), rules), aux
+
+    def step(_, xg):
+        y, aux = run_group(xg)
+        return None, (y, aux)
+
+    _, (ys, auxs) = jax.lax.scan(step, None, xc)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, M)
+    return constrain(y, mesh, ("batch", "seq", "d_model"), rules), jnp.mean(auxs)

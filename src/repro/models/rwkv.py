@@ -1,0 +1,202 @@
+"""RWKV-6 (Finch) block: time-mix with data-dependent decay + channel-mix.
+
+Per head (dim D): state S ∈ R^{D×D};  for each token t:
+
+    S_t  = diag(w_t) · S_{t-1} + k_tᵀ ⊗ v_t
+    y_t  = r_t · (S_{t-1} + diag(u) · k_tᵀ ⊗ v_t)
+
+with r,k,v,g from token-shifted projections and the *data-dependent* decay
+w_t = exp(-exp(w0 + tanh(x W_w1) W_w2)) (the Finch contribution,
+arXiv:2404.05892).  Channel-mix is the RWKV squared-ReLU FFN.  Attention-
+free: O(1) state per token — this is why rwkv6-3b runs the long_500k cell.
+
+Simplifications vs the reference implementation (noted in DESIGN.md):
+token-shift interpolation uses per-channel learned μ (the RWKV-5 form)
+rather than the full ddlerp LoRA stack; decay LoRA is kept (it is the
+paper-defining feature).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding import DEFAULT_RULES, ShardingRules, constrain
+
+from .layers import COMPUTE_DTYPE, rms_norm
+from .params import ParamDef
+
+__all__ = ["rwkv_defs", "rwkv_time_mix", "rwkv_time_mix_decode",
+           "rwkv_channel_mix", "rwkv_channel_mix_decode", "rwkv_init_cache"]
+
+_DECAY_LORA = 64
+
+
+def _dims(cfg):
+    H = cfg.d_model // cfg.rwkv_head_dim
+    return H, cfg.rwkv_head_dim
+
+
+def rwkv_defs(cfg) -> Dict[str, ParamDef]:
+    M = cfg.d_model
+    H, D = _dims(cfg)
+    L = _DECAY_LORA
+    return {
+        "mu_r": ParamDef((M,), ("d_model",), init="ones", scale=0.5),
+        "mu_k": ParamDef((M,), ("d_model",), init="ones"),
+        "mu_v": ParamDef((M,), ("d_model",), init="ones"),
+        "mu_g": ParamDef((M,), ("d_model",), init="ones"),
+        "mu_w": ParamDef((M,), ("d_model",), init="ones"),
+        "wr": ParamDef((M, H, D), ("d_model", "heads", "d_head")),
+        "wk": ParamDef((M, H, D), ("d_model", "heads", "d_head")),
+        "wv": ParamDef((M, H, D), ("d_model", "heads", "d_head")),
+        "wg": ParamDef((M, H, D), ("d_model", "heads", "d_head")),
+        "w0": ParamDef((H, D), ("heads", "d_head"), init="zeros"),
+        "w_lora_a": ParamDef((M, L), ("d_model", None), scale=0.02),
+        "w_lora_b": ParamDef((L, H, D), (None, "heads", "d_head"), scale=0.02),
+        "u_bonus": ParamDef((H, D), ("heads", "d_head"), init="zeros"),
+        "ln_scale": ParamDef((H, D), ("heads", "d_head"), init="ones"),
+        "wo": ParamDef((H, D, M), ("heads", "d_head", "d_model")),
+    }
+
+
+def _shift(x, x_prev):
+    """Token shift: concat previous token (carry) with x[:-1]."""
+    return jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x * mu + xs * (1.0 - mu)
+
+
+def _time_mix_projections(p, x, xs, cfg):
+    """x, xs (B,S,M) f32 → r,k,v,g (B,S,H,D), w (B,S,H,D) decay in (0,1)."""
+    H, D = _dims(cfg)
+    cd = COMPUTE_DTYPE
+    xr = _mix(x, xs, p["mu_r"].astype(jnp.float32))
+    xk = _mix(x, xs, p["mu_k"].astype(jnp.float32))
+    xv = _mix(x, xs, p["mu_v"].astype(jnp.float32))
+    xg = _mix(x, xs, p["mu_g"].astype(jnp.float32))
+    xw = _mix(x, xs, p["mu_w"].astype(jnp.float32))
+    r = jnp.einsum("bsm,mhd->bshd", xr.astype(cd), p["wr"].astype(cd)).astype(jnp.float32)
+    k = jnp.einsum("bsm,mhd->bshd", xk.astype(cd), p["wk"].astype(cd)).astype(jnp.float32)
+    v = jnp.einsum("bsm,mhd->bshd", xv.astype(cd), p["wv"].astype(cd)).astype(jnp.float32)
+    g = jnp.einsum("bsm,mhd->bshd", xg.astype(cd), p["wg"].astype(cd)).astype(jnp.float32)
+    lora = jnp.tanh(
+        jnp.einsum("bsm,ml->bsl", xw.astype(jnp.float32), p["w_lora_a"].astype(jnp.float32))
+    )
+    dd = jnp.einsum("bsl,lhd->bshd", lora, p["w_lora_b"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(p["w0"].astype(jnp.float32) + dd))  # (B,S,H,D) ∈ (0,1)
+    return r, k, v, g, w
+
+
+def _wkv_scan(r, k, v, w, u, s0):
+    """WKV6 recurrence.  r,k,v,w (B,S,H,D); u (H,D); s0 (B,H,D,D).
+
+    Returns (y (B,S,H,D), s_final).  State layout: S[d_k, d_v].
+    """
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # (B,H,D)
+        kv = kt[..., :, None] * vt[..., None, :]          # (B,H,Dk,Dv)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s + u[..., None] * kv)
+        s_new = wt[..., :, None] * s + kv
+        return s_new, y
+
+    rt = jnp.moveaxis(r, 1, 0)
+    kt = jnp.moveaxis(k, 1, 0)
+    vt = jnp.moveaxis(v, 1, 0)
+    wt = jnp.moveaxis(w, 1, 0)
+    s_fin, ys = jax.lax.scan(step, s0, (rt, kt, vt, wt))
+    return jnp.moveaxis(ys, 0, 1), s_fin
+
+
+def rwkv_time_mix(
+    p,
+    x,  # (B, S, M)
+    cfg,
+    *,
+    mesh=None,
+    rules: ShardingRules = DEFAULT_RULES,
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    B, S, M = x.shape
+    H, D = _dims(cfg)
+    xf = x.astype(jnp.float32)
+    x_prev = (
+        jnp.zeros((B, M), jnp.float32)
+        if cache is None
+        else cache["shift"].astype(jnp.float32)
+    )
+    s0 = (
+        jnp.zeros((B, H, D, D), jnp.float32)
+        if cache is None
+        else cache["wkv"].astype(jnp.float32)
+    )
+    xs = _shift(xf, x_prev)
+    r, k, v, g, w = _time_mix_projections(p, xf, xs, cfg)
+    y, s_fin = _wkv_scan(r, k, v, w, p["u_bonus"].astype(jnp.float32), s0)
+    # per-head groupnorm then gate
+    y = rms_norm(y, p["ln_scale"])
+    y = (y.astype(jnp.float32) * jax.nn.silu(g)).astype(COMPUTE_DTYPE)
+    out = jnp.einsum("bshd,hdm->bsm", y, p["wo"].astype(COMPUTE_DTYPE))
+    new_cache = {"shift": xf[:, -1].astype(COMPUTE_DTYPE), "wkv": s_fin}
+    return constrain(out, mesh, ("batch", "seq", "d_model"), rules), new_cache
+
+
+def rwkv_time_mix_decode(p, x, cache, cfg, *, mesh=None, rules=DEFAULT_RULES):
+    """x (B,1,M); cache {"shift": (B,M), "wkv": (B,H,D,D)}."""
+    y, new_cache = rwkv_time_mix(p, x, cfg, mesh=mesh, rules=rules, cache=cache)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Channel mix (RWKV FFN): r gate + squared-relu key
+# ---------------------------------------------------------------------------
+def rwkv_channel_defs(cfg) -> Dict[str, ParamDef]:
+    M, F = cfg.d_model, cfg.d_ff
+    return {
+        "mu_r": ParamDef((M,), ("d_model",), init="ones"),
+        "mu_k": ParamDef((M,), ("d_model",), init="ones"),
+        "wr": ParamDef((M, M), ("d_model", None), scale=0.02),
+        "wk": ParamDef((M, F), ("d_model", "d_ff")),
+        "wv": ParamDef((F, M), ("d_ff", "d_model")),
+    }
+
+
+def rwkv_channel_mix(
+    p, x, cfg, *, mesh=None, rules=DEFAULT_RULES, cache=None
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    B, S, M = x.shape
+    cd = COMPUTE_DTYPE
+    xf = x.astype(jnp.float32)
+    x_prev = (
+        jnp.zeros((B, M), jnp.float32)
+        if cache is None
+        else cache["shift"].astype(jnp.float32)
+    )
+    xs = _shift(xf, x_prev)
+    xr = _mix(xf, xs, p["mu_r"].astype(jnp.float32))
+    xk = _mix(xf, xs, p["mu_k"].astype(jnp.float32))
+    r = jax.nn.sigmoid(jnp.einsum("bsm,mn->bsn", xr.astype(cd), p["wr"].astype(cd)).astype(jnp.float32))
+    k = jnp.einsum("bsm,mf->bsf", xk.astype(cd), p["wk"].astype(cd))
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32)))
+    k = constrain(k, mesh, ("batch", "seq", "d_ff"), rules)
+    v = jnp.einsum("bsf,fm->bsm", k.astype(cd), p["wv"].astype(cd))
+    out = (r * v.astype(jnp.float32)).astype(cd)
+    new_cache = {"shift": xf[:, -1].astype(cd)}
+    return constrain(out, mesh, ("batch", "seq", "d_model"), rules), new_cache
+
+
+def rwkv_channel_mix_decode(p, x, cache, cfg, *, mesh=None, rules=DEFAULT_RULES):
+    return rwkv_channel_mix(p, x, cfg, mesh=mesh, rules=rules, cache=cache)
+
+
+def rwkv_init_cache(cfg, batch: int, dtype=COMPUTE_DTYPE):
+    H, D = _dims(cfg)
+    return {
+        "time": {"shift": jnp.zeros((batch, cfg.d_model), dtype),
+                 "wkv": jnp.zeros((batch, H, D, D), jnp.float32)},
+        "channel": {"shift": jnp.zeros((batch, cfg.d_model), dtype)},
+    }

@@ -1,0 +1,545 @@
+"""Composable LM: dense / MoE / hybrid(Mamba) / RWKV / enc-dec architectures.
+
+A model is ``n_layers`` layers arranged as repeats of a *block pattern* —
+a tuple of (mixer, ffn) pairs, e.g.
+
+  granite/qwen/mistral/phi3v : (("attn",  "dense"),)
+  olmoe/moonshot             : (("attn",  "moe"),)
+  rwkv6                      : (("rwkv",  "rwkv"),)
+  jamba (1 attn : 7 mamba,   : (("attn","moe"),("mamba","dense"),("mamba","moe"),
+         MoE every 2nd layer)   ("mamba","dense"),("mamba","moe"),("mamba","dense"),
+                                ("mamba","moe"),("mamba","dense"))
+
+Parameters for one pattern-repeat ("group") are stacked on a leading axis
+and the stack is driven by ``lax.scan`` (compact HLO for 88-layer models),
+with per-group ``jax.checkpoint`` (remat).  KV/SSM caches mirror the same
+(groups, ...) stacking and thread through the scan for prefill/decode.
+
+Three entry points (all mesh/rules-aware, pure functions of params):
+  forward(...)            -> final hidden states (training)
+  prefill(...)            -> (last-position logits, caches)
+  decode_step(...)        -> (logits, updated caches)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding import DEFAULT_RULES, ShardingRules, constrain
+
+from . import layers as L
+from . import mamba as MB
+from . import moe as MOE
+from . import rwkv as RW
+from .params import ParamDef, stack_defs
+
+__all__ = ["ModelConfig", "model_defs", "cache_defs", "forward", "prefill",
+           "decode_step", "encode", "lm_head_logits"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    block: Tuple[Tuple[str, str], ...] = (("attn", "dense"),)
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_seq_chunk: int = 512
+    moe_impl: str = "einsum"  # 'einsum' (GShard dispatch) | 'gather' (§Perf)
+    # attention
+    qk_norm: bool = False
+    rope_theta: float = 1e4  # 0 → no RoPE (whisper uses absolute positions)
+    pos_embed: str = "rope"  # 'rope' | 'learned' | 'sincos'
+    max_pos: int = 0         # size of learned position table (0 = unused)
+    q_chunk: int = 1024
+    kv_chunk: int = 1024
+    # mamba
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0
+    # rwkv
+    rwkv_head_dim: int = 64
+    # enc-dec (whisper): encoder_layers > 0 adds an encoder + cross-attn
+    encoder_layers: int = 0
+    n_frames: int = 1500
+    # frontends (stubs per spec)
+    frontend: str = "none"  # 'none' | 'vision' | 'audio'
+    n_patches: int = 0
+    # numerics / structure
+    norm: str = "rmsnorm"
+    act: str = "swiglu"
+    tie_embeddings: bool = False
+    remat: str = "full"  # 'full' | 'none'
+    # scan_layers=False unrolls the group stack (python loop) — used by the
+    # roofline analysis lowering, where XLA's count-loop-bodies-once cost
+    # model would otherwise undercount FLOPs by ~n_groups×.
+    scan_layers: bool = True
+    # checkpoint every k-th group instead of every group: divides the
+    # remat activation stash by k at the cost of re-running k layers per
+    # backward segment (total recompute unchanged ≈ 1 forward) — §Perf knob.
+    remat_block: int = 1
+
+    @property
+    def n_groups(self) -> int:
+        assert self.n_layers % len(self.block) == 0, (self.n_layers, len(self.block))
+        return self.n_layers // len(self.block)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if decode state is O(1)-ish per token (SSM / hybrid)."""
+        return any(mixer in ("mamba", "rwkv") for mixer, _ in self.block)
+
+    @property
+    def pure_attention(self) -> bool:
+        return all(mixer == "attn" for mixer, _ in self.block)
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+def _mixer_defs(cfg, mixer: str):
+    if mixer == "attn":
+        return L.attn_defs(cfg)
+    if mixer == "mamba":
+        return MB.mamba_defs(cfg)
+    if mixer == "rwkv":
+        return RW.rwkv_defs(cfg)
+    raise ValueError(mixer)
+
+
+def _ffn_defs(cfg, ffn: str):
+    if ffn == "dense":
+        return L.mlp_defs(cfg)
+    if ffn == "moe":
+        return MOE.moe_defs(cfg)
+    if ffn == "rwkv":
+        return RW.rwkv_channel_defs(cfg)
+    raise ValueError(ffn)
+
+
+def _group_defs(cfg, cross_attn: bool = False):
+    defs = {}
+    for li, (mixer, ffn) in enumerate(cfg.block):
+        d = {
+            "norm1": L.norm_defs(cfg.d_model, cfg.norm),
+            "mixer": _mixer_defs(cfg, mixer),
+            "norm2": L.norm_defs(cfg.d_model, cfg.norm),
+            "ffn": _ffn_defs(cfg, ffn),
+        }
+        if cross_attn:
+            d["norm_x"] = L.norm_defs(cfg.d_model, cfg.norm)
+            d["cross"] = L.attn_defs(cfg)
+        defs[f"l{li}"] = d
+    return defs
+
+
+def _encoder_group_defs(cfg):
+    return {
+        "l0": {
+            "norm1": L.norm_defs(cfg.d_model, cfg.norm),
+            "mixer": L.attn_defs(cfg),
+            "norm2": L.norm_defs(cfg.d_model, cfg.norm),
+            "ffn": L.mlp_defs(cfg),
+        }
+    }
+
+
+def model_defs(cfg: ModelConfig):
+    enc_dec = cfg.encoder_layers > 0
+    defs: Dict[str, Any] = {
+        "embed": L.embed_defs(cfg),
+        "final_norm": L.norm_defs(cfg.d_model, cfg.norm),
+        "decoder": stack_defs(_group_defs(cfg, cross_attn=enc_dec), cfg.n_groups),
+    }
+    if cfg.pos_embed == "learned":
+        assert cfg.max_pos > 0, "learned positions need max_pos"
+        defs["pos"] = ParamDef((cfg.max_pos, cfg.d_model), (None, "d_model"), scale=0.02)
+    if enc_dec:
+        defs["encoder"] = stack_defs(_encoder_group_defs(cfg), cfg.encoder_layers)
+        defs["enc_norm"] = L.norm_defs(cfg.d_model, cfg.norm)
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Cache definitions (ParamDef reuse: shapes/axes/shardings for free)
+# ---------------------------------------------------------------------------
+def _layer_cache_defs(cfg, mixer: str, ffn: str, batch: int, max_seq: int,
+                      cross: bool = False):
+    d: Dict[str, Any] = {}
+    if mixer == "attn":
+        kv = (batch, max_seq, cfg.n_kv_heads, cfg.d_head)
+        axes = ("batch", "kv_seq", "kv_heads", "d_head")
+        d["mixer"] = {
+            "k": ParamDef(kv, axes, init="zeros", dtype=jnp.bfloat16),
+            "v": ParamDef(kv, axes, init="zeros", dtype=jnp.bfloat16),
+        }
+    elif mixer == "mamba":
+        di = cfg.expand * cfg.d_model
+        d["mixer"] = {
+            "conv": ParamDef((batch, cfg.d_conv - 1, di), ("batch", None, "d_ff"),
+                             init="zeros", dtype=jnp.bfloat16),
+            "ssm": ParamDef((batch, di, cfg.d_state), ("batch", "d_ff", "ssm_state"),
+                            init="zeros", dtype=jnp.float32),
+        }
+    elif mixer == "rwkv":
+        h = cfg.d_model // cfg.rwkv_head_dim
+        dd = cfg.rwkv_head_dim
+        d["mixer"] = {
+            "shift": ParamDef((batch, cfg.d_model), ("batch", "d_model"),
+                              init="zeros", dtype=jnp.bfloat16),
+            "wkv": ParamDef((batch, h, dd, dd), ("batch", "heads", None, None),
+                            init="zeros", dtype=jnp.float32),
+        }
+    if ffn == "rwkv":
+        d["ffn"] = {
+            "shift": ParamDef((batch, cfg.d_model), ("batch", "d_model"),
+                              init="zeros", dtype=jnp.bfloat16)
+        }
+    if cross:
+        kv = (batch, cfg.n_frames, cfg.n_kv_heads, cfg.d_head)
+        axes = ("batch", None, "kv_heads", "d_head")
+        d["cross"] = {
+            "k": ParamDef(kv, axes, init="zeros", dtype=jnp.bfloat16),
+            "v": ParamDef(kv, axes, init="zeros", dtype=jnp.bfloat16),
+        }
+    return d
+
+
+def cache_defs(cfg: ModelConfig, batch: int, max_seq: int):
+    enc_dec = cfg.encoder_layers > 0
+    group = {
+        f"l{li}": _layer_cache_defs(cfg, mixer, ffn, batch, max_seq, cross=enc_dec)
+        for li, (mixer, ffn) in enumerate(cfg.block)
+    }
+    return {"decoder": stack_defs(group, cfg.n_groups)}
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+def _embed_tokens(params, tokens, cfg, mesh, rules):
+    tbl = params["embed"]["tok"]
+    x = jnp.take(tbl, tokens, axis=0).astype(L.COMPUTE_DTYPE)
+    return constrain(x, mesh, ("batch", "seq", "d_model"), rules)
+
+
+def lm_head_logits(params, x, cfg, mesh=None, rules=DEFAULT_RULES):
+    """x (B, S, M) → logits (B, S, V) f32 (caller chunks S for big V)."""
+    head = (
+        params["embed"]["tok"].T if cfg.tie_embeddings else params["embed"]["head"]
+    )
+    logits = jnp.einsum(
+        "bsm,mv->bsv", x.astype(L.COMPUTE_DTYPE), head.astype(L.COMPUTE_DTYPE)
+    ).astype(jnp.float32)
+    return constrain(logits, mesh, ("batch", "seq", "vocab"), rules)
+
+
+def _sincos_pos(S, M, offset=0):
+    pos = np.arange(S)[:, None] + offset
+    dim = np.arange(M // 2)[None, :]
+    ang = pos / (10000 ** (2 * dim / M))
+    emb = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(emb, jnp.float32)
+
+
+def _add_positions(params, x, cfg, start):
+    if cfg.pos_embed == "learned":
+        S = x.shape[1]
+        pos = jax.lax.dynamic_slice_in_dim(params["pos"], start, S, axis=0)
+        return x + pos.astype(x.dtype)
+    if cfg.pos_embed == "sincos":
+        return x + _sincos_pos(x.shape[1], cfg.d_model, start).astype(x.dtype)
+    return x  # rope handled inside attention
+
+
+# ---------------------------------------------------------------------------
+# One group (pattern-repeat) — full-sequence form
+# ---------------------------------------------------------------------------
+def _apply_group(
+    gp, x, cfg, mesh, rules, *, make_cache: bool, enc_out=None, causal=True
+):
+    aux = jnp.zeros((), jnp.float32)
+    caches = {}
+    for li, (mixer, ffn) in enumerate(cfg.block):
+        lp = gp[f"l{li}"]
+        lcache: Dict[str, Any] = {}
+        h = L.apply_norm(lp["norm1"], x, cfg.norm)
+        if mixer == "attn":
+            y, c = L.attention(
+                lp["mixer"], h, cfg, mesh=mesh, rules=rules, causal=causal,
+                q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+            )
+            if make_cache:
+                lcache["mixer"] = {
+                    "k": constrain(c["k"].astype(jnp.bfloat16), mesh,
+                                   ("batch", "kv_seq", "kv_heads", "d_head"), rules),
+                    "v": constrain(c["v"].astype(jnp.bfloat16), mesh,
+                                   ("batch", "kv_seq", "kv_heads", "d_head"), rules),
+                }
+        elif mixer == "mamba":
+            y, c = MB.mamba(lp["mixer"], h, cfg, mesh=mesh, rules=rules)
+            if make_cache:
+                lcache["mixer"] = {"conv": c["conv"].astype(jnp.bfloat16),
+                                   "ssm": c["ssm"]}
+        elif mixer == "rwkv":
+            y, c = RW.rwkv_time_mix(lp["mixer"], h, cfg, mesh=mesh, rules=rules)
+            if make_cache:
+                lcache["mixer"] = {"shift": c["shift"], "wkv": c["wkv"]}
+        else:
+            raise ValueError(mixer)
+        x = x + y
+
+        if enc_out is not None:
+            h = L.apply_norm(lp["norm_x"], x, cfg.norm)
+            y, cc = L.attention(
+                lp["cross"], h, cfg, mesh=mesh, rules=rules, causal=False,
+                x_kv=enc_out, q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+            )
+            if make_cache:
+                lcache["cross"] = {"k": cc["k"].astype(jnp.bfloat16),
+                                   "v": cc["v"].astype(jnp.bfloat16)}
+            x = x + y
+
+        h = L.apply_norm(lp["norm2"], x, cfg.norm)
+        if ffn == "dense":
+            y = L.mlp(lp["ffn"], h, cfg, mesh=mesh, rules=rules)
+        elif ffn == "moe":
+            y, a = MOE.moe_ffn(lp["ffn"], h, cfg, mesh=mesh, rules=rules,
+                               seq_chunk=cfg.moe_seq_chunk)
+            aux = aux + a
+        elif ffn == "rwkv":
+            y, c = RW.rwkv_channel_mix(lp["ffn"], h, cfg, mesh=mesh, rules=rules)
+            if make_cache:
+                lcache["ffn"] = {"shift": c["shift"]}
+        else:
+            raise ValueError(ffn)
+        x = x + y
+        caches[f"l{li}"] = lcache
+    return x, caches, aux
+
+
+def _scan_stack(stack_params, x, cfg, mesh, rules, *, make_cache, enc_out=None,
+                causal=True):
+    def body(carry, gp):
+        xx, aux_sum = carry
+        xx, caches, aux = _apply_group(
+            gp, xx, cfg, mesh, rules, make_cache=make_cache,
+            enc_out=enc_out, causal=causal,
+        )
+        return (xx, aux_sum + aux), caches
+
+    k = cfg.remat_block
+    if k > 1 and cfg.scan_layers and not make_cache:
+        # super-group scan: k layer-groups per checkpointed scan step, so the
+        # stash holds G/k residual-stream snapshots instead of G.
+        G = jax.tree_util.tree_leaves(stack_params)[0].shape[0]
+        assert G % k == 0, (G, k)
+        sp = jax.tree_util.tree_map(
+            lambda p: p.reshape((G // k, k) + p.shape[1:]), stack_params
+        )
+        inner = body
+
+        def kbody(carry, gpk):
+            for i in range(k):
+                carry, _ = inner(carry, jax.tree_util.tree_map(lambda p: p[i], gpk))
+            return carry, None
+
+        if cfg.remat == "full":
+            kbody = jax.checkpoint(
+                kbody, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        (x, aux), _ = jax.lax.scan(kbody, (x, jnp.zeros((), jnp.float32)), sp)
+        return x, None, aux
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    if not cfg.scan_layers:  # unrolled (analysis lowering)
+        n_groups = jax.tree_util.tree_leaves(stack_params)[0].shape[0]
+        carry = (x, jnp.zeros((), jnp.float32))
+        all_caches = []
+        for g in range(n_groups):
+            gp = jax.tree_util.tree_map(lambda p: p[g], stack_params)
+            carry, caches = body(carry, gp)
+            all_caches.append(caches)
+        (x, aux) = carry
+        caches = (
+            jax.tree_util.tree_map(lambda *cs: jnp.stack(cs), *all_caches)
+            if make_cache else all_caches[0]
+        )
+        return x, caches, aux
+
+    (x, aux), caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), stack_params)
+    return x, caches, aux
+
+
+# ---------------------------------------------------------------------------
+# Encoder (whisper)
+# ---------------------------------------------------------------------------
+def encode(params, frames, cfg, *, mesh=None, rules=DEFAULT_RULES):
+    """frames (B, F, M) — precomputed conv-frontend embeddings (stub)."""
+    x = frames.astype(L.COMPUTE_DTYPE)
+    x = x + _sincos_pos(x.shape[1], cfg.d_model).astype(x.dtype)
+    x = constrain(x, mesh, ("batch", "seq", "d_model"), rules)
+    x, _, _ = _scan_stack(
+        params["encoder"], x, cfg, mesh, rules, make_cache=False, causal=False
+    )
+    return L.apply_norm(params["enc_norm"], x, cfg.norm)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+def _embed_inputs(params, batch, cfg, mesh, rules, start=0):
+    """tokens + optional frontend embeddings → (B, S, M)."""
+    x = _embed_tokens(params, batch["tokens"], cfg, mesh, rules)
+    if cfg.frontend == "vision" and "patches" in batch:
+        # stubbed CLIP tower: precomputed patch embeddings replace the prefix
+        p = batch["patches"].astype(x.dtype)
+        x = jnp.concatenate([p, x[:, cfg.n_patches :]], axis=1)
+    x = _add_positions(params, x, cfg, start)
+    return constrain(x, mesh, ("batch", "seq", "d_model"), rules)
+
+
+def forward(params, batch, cfg, *, mesh=None, rules=DEFAULT_RULES):
+    """Training forward → (hidden (B,S,M), aux_loss)."""
+    enc_out = None
+    if cfg.encoder_layers > 0:
+        enc_out = encode(params, batch["frames"], cfg, mesh=mesh, rules=rules)
+    x = _embed_inputs(params, batch, cfg, mesh, rules)
+    x, _, aux = _scan_stack(
+        params["decoder"], x, cfg, mesh, rules, make_cache=False, enc_out=enc_out
+    )
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    return x, aux
+
+
+def prefill(params, batch, cfg, *, mesh=None, rules=DEFAULT_RULES, max_seq=None):
+    """Prefill → (last-position logits (B,V), caches).
+
+    Caches are padded to ``max_seq`` (defaults to S) so decode can continue.
+    """
+    enc_out = None
+    if cfg.encoder_layers > 0:
+        enc_out = encode(params, batch["frames"], cfg, mesh=mesh, rules=rules)
+    x = _embed_inputs(params, batch, cfg, mesh, rules)
+    S = x.shape[1]
+    x, caches, _ = _scan_stack(
+        params["decoder"], x, cfg, mesh, rules, make_cache=True, enc_out=enc_out
+    )
+    max_seq = max_seq or S
+    if max_seq != S:
+        caches = jax.tree_util.tree_map(
+            lambda c: _pad_cache_seq(c, max_seq) if _is_kv(c, S) else c, caches
+        )
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = lm_head_logits(params, x[:, -1:], cfg, mesh, rules)[:, 0]
+    return logits, {"decoder": caches}
+
+
+def _is_kv(c, S):
+    return c.ndim == 5 and c.shape[2] == S  # (G, B, S, KVH, D)
+
+
+def _pad_cache_seq(c, max_seq):
+    pad = max_seq - c.shape[2]
+    return jnp.pad(c, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+
+
+def decode_step(params, caches, token, pos, cfg, *, mesh=None, rules=DEFAULT_RULES):
+    """One decode step.  token (B,), pos scalar int32 → (logits (B,V), caches)."""
+    batch = {"tokens": token[:, None]}
+    x = _embed_tokens(params, batch["tokens"], cfg, mesh, rules)
+    if cfg.pos_embed == "learned":
+        x = x + jax.lax.dynamic_slice_in_dim(params["pos"], pos, 1, axis=0).astype(x.dtype)
+    elif cfg.pos_embed == "sincos":
+        # decode with sincos uses rope-free absolute positions via lookup
+        x = x + _sincos_table_lookup(cfg, pos).astype(x.dtype)
+
+    def body(carry, gp_cache):
+        xx = carry
+        gp, gc = gp_cache
+        xx, new_gc = _decode_group(gp, gc, xx, pos, cfg, mesh, rules)
+        return xx, new_gc
+
+    if not cfg.scan_layers:  # unrolled (analysis lowering)
+        n_groups = jax.tree_util.tree_leaves(params["decoder"])[0].shape[0]
+        outs = []
+        for g in range(n_groups):
+            gp = jax.tree_util.tree_map(lambda p: p[g], params["decoder"])
+            gc = jax.tree_util.tree_map(lambda c: c[g], caches["decoder"])
+            x, new_gc = body(x, (gp, gc))
+            outs.append(new_gc)
+        new_caches = jax.tree_util.tree_map(lambda *cs: jnp.stack(cs), *outs)
+        x = L.apply_norm(params["final_norm"], x, cfg.norm)
+        logits = lm_head_logits(params, x, cfg, mesh, rules)[:, 0]
+        return logits, {"decoder": new_caches}
+
+    x, new_caches = jax.lax.scan(body, x, (params["decoder"], caches["decoder"]))
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = lm_head_logits(params, x, cfg, mesh, rules)[:, 0]
+    return logits, {"decoder": new_caches}
+
+
+def _sincos_table_lookup(cfg, pos):
+    # small closed-form sincos for a single position
+    M = cfg.d_model
+    dim = jnp.arange(M // 2, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32) / (10000 ** (2 * dim / M))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None, :]
+
+
+def _decode_group(gp, gc, x, pos, cfg, mesh, rules):
+    new_cache = {}
+    for li, (mixer, ffn) in enumerate(cfg.block):
+        lp = gp[f"l{li}"]
+        lc = gc[f"l{li}"]
+        nc: Dict[str, Any] = {}
+        h = L.apply_norm(lp["norm1"], x, cfg.norm)
+        if mixer == "attn":
+            y, c = L.attention_decode(
+                lp["mixer"], h, lc["mixer"], pos, cfg, mesh=mesh, rules=rules
+            )
+            nc["mixer"] = c
+        elif mixer == "mamba":
+            y, c = MB.mamba_decode(lp["mixer"], h, lc["mixer"], cfg, mesh=mesh, rules=rules)
+            nc["mixer"] = {"conv": c["conv"].astype(jnp.bfloat16), "ssm": c["ssm"]}
+        elif mixer == "rwkv":
+            y, c = RW.rwkv_time_mix_decode(lp["mixer"], h, lc["mixer"], cfg, mesh=mesh, rules=rules)
+            nc["mixer"] = {"shift": c["shift"], "wkv": c["wkv"]}
+        x = x + y
+
+        if "cross" in lc:
+            h = L.apply_norm(lp["norm_x"], x, cfg.norm)
+            y, _ = L.attention_decode(
+                lp["cross"], h, lc["cross"], pos, cfg, mesh=mesh, rules=rules,
+                cross=True,
+            )
+            nc["cross"] = lc["cross"]
+            x = x + y
+
+        h = L.apply_norm(lp["norm2"], x, cfg.norm)
+        if ffn == "dense":
+            y = L.mlp(lp["ffn"], h, cfg, mesh=mesh, rules=rules)
+        elif ffn == "moe":
+            y, _ = MOE.moe_ffn(lp["ffn"], h, cfg, mesh=mesh, rules=rules)
+        elif ffn == "rwkv":
+            y, c = RW.rwkv_channel_mix_decode(lp["ffn"], h, lc["ffn"], cfg, mesh=mesh, rules=rules)
+            nc["ffn"] = {"shift": c["shift"]}
+        x = x + y
+        new_cache[f"l{li}"] = nc
+    return x, new_cache

@@ -1,0 +1,1 @@
+from .adamw import *  # noqa: F401,F403

@@ -1,0 +1,139 @@
+"""AdamW + schedules + ZeRO-1 optimizer-state sharding, pure JAX.
+
+ZeRO-1: optimizer moments replicate a parameter's TP sharding *plus* get
+sharded along the `data` axis on the first dimension that divides evenly and
+is not already sharded — each data-parallel rank owns a slice of the
+optimizer state (the collective cost shows up as reduce-scatter/all-gather
+in the compiled step, visible in the dry-run HLO).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["AdamWConfig", "OptState", "adamw_init", "adamw_update",
+           "cosine_schedule", "global_norm", "clip_by_global_norm",
+           "zero1_spec"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    zero1: bool = True  # shard moments over the data axis
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray  # int32 scalar
+    mu: Any            # pytree like params
+    nu: Any            # pytree like params
+
+
+def cosine_schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    return cfg.lr_peak * warm * 0.5 * (1.0 + jnp.cos(np.pi * prog))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm
+
+
+def zero1_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Extend a param PartitionSpec with 'data' on the first free divisible dim."""
+    if "data" not in mesh.shape:
+        return spec
+    data = mesh.shape["data"]
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    used = set()
+    for e in entries:
+        for a in (e if isinstance(e, tuple) else (e,)):
+            if a:
+                used.add(a)
+    if "data" in used:
+        return spec
+    for i, (dim, e) in enumerate(zip(shape, entries)):
+        if e is None and dim % data == 0 and dim >= data:
+            entries[i] = "data"
+            while entries and entries[-1] is None:
+                entries.pop()
+            return P(*entries)
+    return spec
+
+
+def _moment_constrain(tree, param_specs, mesh: Optional[Mesh], zero1: bool):
+    if mesh is None or param_specs is None:
+        return tree
+
+    def one(x, spec):
+        sp = zero1_spec(spec, x.shape, mesh) if zero1 else spec
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, sp))
+
+    return jax.tree_util.tree_map(one, tree, param_specs)
+
+
+def adamw_init(params, cfg: AdamWConfig, *, mesh=None, param_specs=None) -> OptState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    mu = jax.tree_util.tree_map(zeros, params)
+    nu = jax.tree_util.tree_map(zeros, params)
+    mu = _moment_constrain(mu, param_specs, mesh, cfg.zero1)
+    nu = _moment_constrain(nu, param_specs, mesh, cfg.zero1)
+    return OptState(step=jnp.zeros((), jnp.int32), mu=mu, nu=nu)
+
+
+def adamw_update(
+    params,
+    grads,
+    opt: OptState,
+    cfg: AdamWConfig,
+    *,
+    mesh: Optional[Mesh] = None,
+    param_specs=None,
+):
+    """One AdamW step.  Returns (new_params, new_opt, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = opt.step + 1
+    lr = cosine_schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        p_new = p.astype(jnp.float32) - lr * (
+            mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        )
+        return p_new.astype(p.dtype), m, v
+
+    flat = jax.tree_util.tree_map(upd, params, grads, opt.mu, opt.nu)
+    new_params = jax.tree_util.tree_map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree_util.tree_map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree_util.tree_map(lambda t: t[2], flat, is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = _moment_constrain(new_mu, param_specs, mesh, cfg.zero1)
+    new_nu = _moment_constrain(new_nu, param_specs, mesh, cfg.zero1)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, OptState(step=step, mu=new_mu, nu=new_nu), metrics

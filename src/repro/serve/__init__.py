@@ -1,0 +1,1 @@
+from .engine import *  # noqa: F401,F403

@@ -1,0 +1,88 @@
+"""Serving: prefill + decode steps and a batched greedy/temperature sampler.
+
+serve_step == one ``decode_step`` (a new token against a KV cache of
+``seq_len``) — the thing the decode_* / long_* dry-run cells lower.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.sharding import DEFAULT_RULES, ShardingRules
+
+__all__ = ["ServeConfig", "make_prefill_step", "make_decode_step", "generate"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_seq: int
+    temperature: float = 0.0  # 0 → greedy
+    eos_id: int = -1          # -1 → never stop early
+
+
+def make_prefill_step(model_cfg, mesh=None, rules: ShardingRules = DEFAULT_RULES,
+                      max_seq: Optional[int] = None):
+    def prefill_step(params, batch):
+        return T.prefill(params, batch, model_cfg, mesh=mesh, rules=rules,
+                         max_seq=max_seq)
+
+    return prefill_step
+
+
+def make_decode_step(model_cfg, mesh=None, rules: ShardingRules = DEFAULT_RULES):
+    def decode_step(params, caches, token, pos):
+        return T.decode_step(params, caches, token, pos, model_cfg,
+                             mesh=mesh, rules=rules)
+
+    return decode_step
+
+
+def _sample(logits, key, temperature):
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)
+
+
+def generate(
+    params,
+    batch: Dict[str, jnp.ndarray],
+    model_cfg,
+    serve_cfg: ServeConfig,
+    n_new_tokens: int,
+    *,
+    mesh=None,
+    rules: ShardingRules = DEFAULT_RULES,
+    seed: int = 0,
+) -> np.ndarray:
+    """Prefill the prompt batch then decode n_new_tokens greedily.
+
+    Returns (B, n_new_tokens) int32.  The decode loop is jitted once and
+    reused (steady-state serving shape).
+    """
+    prompt = batch["tokens"]
+    B, S = prompt.shape
+    assert S + n_new_tokens <= serve_cfg.max_seq
+    prefill_step = jax.jit(
+        make_prefill_step(model_cfg, mesh, rules, max_seq=serve_cfg.max_seq)
+    )
+    decode = jax.jit(make_decode_step(model_cfg, mesh, rules))
+
+    logits, caches = prefill_step(params, batch)
+    key = jax.random.PRNGKey(seed)
+    key, k0 = jax.random.split(key)
+    token = _sample(logits, k0, serve_cfg.temperature)
+    out = [np.asarray(token)]
+    pos = S
+    for i in range(n_new_tokens - 1):
+        logits, caches = decode(params, caches, token, jnp.int32(pos))
+        key, ki = jax.random.split(key)
+        token = _sample(logits, ki, serve_cfg.temperature)
+        out.append(np.asarray(token))
+        pos += 1
+    return np.stack(out, axis=1)

@@ -1,0 +1,1 @@
+from .step import *  # noqa: F401,F403

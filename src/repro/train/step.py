@@ -1,0 +1,195 @@
+"""Training step: chunked-vocab CE loss, microbatch accumulation, AdamW.
+
+Memory-scaling choices that matter at 1000+ nodes (DESIGN.md §6):
+  * the LM head never materializes (B, S, V) logits — the loss scans vocab
+    projections over sequence chunks (151k-vocab × 32k-seq would be TBs);
+  * optional microbatch gradient accumulation (scan over microbatches) with
+    bf16 accumulation — cross-DP gradient reduction then happens on bf16
+    tensors, i.e. 2× collective compression;
+  * per-group remat is configured in the model (ModelConfig.remat).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as T
+from repro.models.layers import COMPUTE_DTYPE
+from repro.optim.adamw import AdamWConfig, OptState, adamw_init, adamw_update
+from repro.sharding import DEFAULT_RULES, ShardingRules, constrain
+
+__all__ = ["TrainState", "TrainConfig", "chunked_ce_loss", "make_loss_fn",
+           "make_train_step", "init_train_state"]
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: AdamWConfig = AdamWConfig()
+    microbatches: int = 1
+    loss_chunk: int = 512          # sequence chunk for the vocab projection
+    aux_coef: float = 0.01         # MoE load-balance loss coefficient
+    grad_accum_dtype: Any = jnp.float32  # bf16 → compressed DP all-reduce
+    # False → unroll the microbatch/loss-chunk loops (analysis lowering:
+    # XLA's cost model counts scan bodies once, so scans undercount)
+    scan_microbatches: bool = True
+    scan_loss_chunks: bool = True
+    # bf16 → mixed precision with fp32 master: forward/backward (and any
+    # FSDP weight all-gathers) see half-width params; AdamW updates fp32.
+    param_compute_dtype: Any = None
+
+
+def chunked_ce_loss(
+    params, hidden, labels, cfg, *, mesh=None, rules=DEFAULT_RULES, chunk=512,
+    scan: bool = True,
+):
+    """Σ CE(logits, labels) over positions with labels >= 0, plus count.
+
+    hidden (B,S,M); labels (B,S) int32 (-1 = masked).  Scans S in chunks so
+    only (B, chunk, V) logits are ever live.
+    """
+    B, S, M = hidden.shape
+    head = params["embed"]["tok"].T if cfg.tie_embeddings else params["embed"]["head"]
+    chunk = min(chunk, S)
+    if S % chunk:
+        chunk = S
+    n = S // chunk
+    hc = jnp.moveaxis(hidden.reshape(B, n, chunk, M), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, n, chunk), 1, 0)
+
+    def step(carry, hl):
+        tot, cnt = carry
+        h, l = hl
+        logits = jnp.einsum(
+            "bsm,mv->bsv", h.astype(COMPUTE_DTYPE), head.astype(COMPUTE_DTYPE)
+        ).astype(jnp.float32)
+        logits = constrain(logits, mesh, ("batch", "seq", "vocab"),
+                           rules.replace(seq=None))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, jnp.maximum(l, 0)[..., None], axis=-1)[..., 0]
+        mask = (l >= 0).astype(jnp.float32)
+        tot = tot + jnp.sum((lse - ll) * mask)
+        cnt = cnt + jnp.sum(mask)
+        return (tot, cnt), None
+
+    carry = (jnp.zeros(()), jnp.zeros(()))
+    if scan:
+        (tot, cnt), _ = jax.lax.scan(step, carry, (hc, lc))
+    else:  # unrolled (analysis lowering) — same chunking, every chunk counted
+        for i in range(n):
+            carry, _ = step(carry, (hc[i], lc[i]))
+        tot, cnt = carry
+    return tot, cnt
+
+
+def make_loss_fn(model_cfg, train_cfg: TrainConfig, mesh=None, rules=DEFAULT_RULES):
+    def loss_fn(params, batch):
+        hidden, aux = T.forward(params, batch, model_cfg, mesh=mesh, rules=rules)
+        labels = batch["labels"]
+        if model_cfg.frontend == "vision" and model_cfg.n_patches:
+            # patch-prefix positions carry no next-token target
+            mask_prefix = jnp.arange(labels.shape[1]) < model_cfg.n_patches
+            labels = jnp.where(mask_prefix[None, :], -1, labels)
+        tot, cnt = chunked_ce_loss(
+            params, hidden, labels, model_cfg, mesh=mesh, rules=rules,
+            chunk=train_cfg.loss_chunk, scan=train_cfg.scan_loss_chunks,
+        )
+        loss = tot / jnp.maximum(cnt, 1.0)
+        total = loss + train_cfg.aux_coef * aux
+        return total, {"ce_loss": loss, "aux_loss": aux, "tokens": cnt}
+
+    return loss_fn
+
+
+def _microbatch_grads(loss_fn, params, batch, n_micro: int, accum_dtype,
+                      scan: bool = True):
+    """Scan over microbatches, accumulating grads in ``accum_dtype``."""
+    B = batch["tokens"].shape[0]
+    assert B % n_micro == 0, (B, n_micro)
+    mb = B // n_micro
+    stacked = {
+        k: jnp.moveaxis(v.reshape((n_micro, mb) + v.shape[1:]), 0, 0)
+        for k, v in batch.items()
+    }
+    grad_fn = jax.grad(loss_fn, has_aux=True)
+
+    def step(carry, mbatch):
+        acc, msum = carry
+        g, metrics = grad_fn(params, mbatch)
+        acc = jax.tree_util.tree_map(
+            lambda a, b: a + b.astype(accum_dtype), acc, g
+        )
+        msum = jax.tree_util.tree_map(lambda a, b: a + b, msum, metrics)
+        return (acc, msum), None
+
+    acc0 = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, accum_dtype), params
+    )
+    m0 = {"ce_loss": jnp.zeros(()), "aux_loss": jnp.zeros(()), "tokens": jnp.zeros(())}
+    carry = (acc0, m0)
+    if scan:
+        (acc, msum), _ = jax.lax.scan(step, carry, stacked)
+    else:  # unrolled (analysis lowering)
+        for i in range(n_micro):
+            carry, _ = step(carry, {k: v[i] for k, v in stacked.items()})
+        acc, msum = carry
+    grads = jax.tree_util.tree_map(lambda g: g / n_micro, acc)
+    metrics = {k: v / n_micro for k, v in msum.items()}
+    metrics["tokens"] = msum["tokens"]
+    return grads, metrics
+
+
+def make_train_step(
+    model_cfg,
+    train_cfg: TrainConfig,
+    mesh=None,
+    rules: ShardingRules = DEFAULT_RULES,
+    param_specs=None,
+):
+    """Returns train_step(state, batch) -> (state, metrics) — jit/pjit-ready."""
+    loss_fn = make_loss_fn(model_cfg, train_cfg, mesh, rules)
+
+    def train_step(state: TrainState, batch):
+        cdt = train_cfg.param_compute_dtype
+        params_c = (
+            jax.tree_util.tree_map(
+                lambda p: p.astype(cdt)
+                if jnp.issubdtype(p.dtype, jnp.floating) else p,
+                state.params,
+            )
+            if cdt is not None else state.params
+        )
+        if train_cfg.microbatches > 1:
+            grads, metrics = _microbatch_grads(
+                loss_fn, params_c, batch, train_cfg.microbatches,
+                train_cfg.grad_accum_dtype, scan=train_cfg.scan_microbatches,
+            )
+        else:
+            grads, metrics = jax.grad(loss_fn, has_aux=True)(params_c, batch)
+        new_params, new_opt, opt_metrics = adamw_update(
+            state.params, grads, state.opt, train_cfg.opt,
+            mesh=mesh, param_specs=param_specs,
+        )
+        metrics = {**metrics, **opt_metrics, "step": new_opt.step}
+        return TrainState(params=new_params, opt=new_opt), metrics
+
+    return train_step
+
+
+def init_train_state(model_cfg, train_cfg: TrainConfig, key, *, mesh=None,
+                     param_specs=None) -> TrainState:
+    from repro.models.params import init_params
+
+    defs = T.model_defs(model_cfg)
+    params = init_params(defs, key)
+    opt = adamw_init(params, train_cfg.opt, mesh=mesh, param_specs=param_specs)
+    return TrainState(params=params, opt=opt)

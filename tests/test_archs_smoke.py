@@ -1,0 +1,147 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward/train step on CPU, shape + finiteness assertions; plus a decode
+round-trip.  The FULL configs are exercised only via the dry-run.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.data.pipeline import DataConfig, synthetic_batch
+from repro.models import cache_defs, decode_step, forward, model_defs, prefill
+from repro.models.params import init_params, param_shapes
+from repro.optim.adamw import AdamWConfig
+from repro.train.step import TrainConfig, init_train_state, make_train_step
+
+B, S = 2, 32
+
+
+def _batch(cfg, key=0):
+    dc = DataConfig(
+        vocab=cfg.vocab, seq_len=S, global_batch=B, seed=key,
+        n_patches=cfg.n_patches if cfg.frontend == "vision" else 0,
+        d_model=cfg.d_model,
+        n_frames=cfg.n_frames if cfg.encoder_layers else 0,
+    )
+    return synthetic_batch(dc, 0)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_forward_and_train_step(arch):
+    cfg = get_config(arch, reduced=True)
+    batch = _batch(cfg)
+    tc = TrainConfig(
+        opt=AdamWConfig(lr_peak=1e-3, warmup_steps=2, total_steps=10),
+        loss_chunk=16,
+    )
+    state = init_train_state(cfg, tc, jax.random.PRNGKey(0))
+    # forward: shape + finite
+    h, aux = forward(state.params, batch, cfg)
+    assert h.shape == (B, S, cfg.d_model)
+    assert bool(jnp.isfinite(h.astype(jnp.float32)).all()), "NaN/inf in forward"
+    # one train step: loss finite, params move, step increments
+    step_fn = jax.jit(make_train_step(cfg, tc))
+    new_state, metrics = step_fn(state, batch)
+    assert np.isfinite(float(metrics["ce_loss"]))
+    assert int(new_state.opt.step) == 1
+    moved = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))),
+        state.params, new_state.params,
+    )
+    assert max(jax.tree_util.tree_leaves(moved)) > 0, "params did not update"
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_prefill_decode_roundtrip(arch):
+    cfg = get_config(arch, reduced=True)
+    params = init_params(model_defs(cfg), jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    pre = {k: (v[:, : S - 1] if k in ("tokens", "labels") else v) for k, v in batch.items()}
+    del pre["labels"]
+    logits, caches = prefill(params, pre, cfg, max_seq=S)
+    assert logits.shape == (B, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+    lg, caches = decode_step(params, caches, batch["tokens"][:, S - 1], jnp.int32(S - 1), cfg)
+    assert lg.shape == (B, cfg.vocab)
+    assert bool(jnp.isfinite(lg).all())
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_cache_defs_match_prefill_structure(arch):
+    """cache_defs (used to lower serve_step in the dry-run) must mirror the
+    runtime cache structure exactly."""
+    cfg = get_config(arch, reduced=True)
+    params = init_params(model_defs(cfg), jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    pre = {k: v for k, v in batch.items() if k != "labels"}
+    _, caches = prefill(params, pre, cfg, max_seq=S)
+    spec = param_shapes(cache_defs(cfg, B, S))
+    live = jax.tree_util.tree_structure(caches)
+    want = jax.tree_util.tree_structure(spec)
+    assert live == want, f"cache structure mismatch:\n{live}\nvs\n{want}"
+    shapes_live = jax.tree_util.tree_map(lambda x: tuple(x.shape), caches)
+    shapes_want = jax.tree_util.tree_map(lambda x: tuple(x.shape), spec)
+    assert shapes_live == shapes_want
+
+
+def test_full_configs_match_assignment():
+    """Spot-check the full configs against the assignment table."""
+    c = get_config("jamba-1.5-large-398b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) == (
+        72, 8192, 64, 8, 24576, 65536)
+    assert c.n_experts == 16 and c.top_k == 2
+    # 1:7 attention:mamba interleave
+    mixers = [m for m, _ in c.block]
+    assert mixers.count("attn") == 1 and mixers.count("mamba") == 7
+    assert c.sub_quadratic
+
+    c = get_config("granite-3-8b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) == (
+        40, 4096, 32, 8, 12800, 49155)
+
+    c = get_config("mistral-large-123b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) == (
+        88, 12288, 96, 8, 28672, 32768)
+
+    c = get_config("qwen3-1.7b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.vocab, c.qk_norm) == (
+        28, 2048, 16, 151936, True)
+
+    c = get_config("qwen3-32b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff, c.vocab) == (
+        64, 5120, 64, 25600, 151936)
+
+    c = get_config("olmoe-1b-7b")
+    assert (c.n_layers, c.d_model, c.n_experts, c.top_k, c.vocab) == (
+        16, 2048, 64, 8, 50304)
+
+    c = get_config("moonshot-v1-16b-a3b")
+    assert (c.n_layers, c.d_model, c.n_experts, c.top_k, c.vocab) == (
+        48, 2048, 64, 6, 163840)
+
+    c = get_config("rwkv6-3b")
+    assert (c.n_layers, c.d_model, c.d_ff, c.vocab) == (32, 2560, 8960, 65536)
+    assert c.sub_quadratic and not c.pure_attention
+
+    c = get_config("whisper-tiny")
+    assert (c.n_layers, c.encoder_layers, c.d_model, c.n_heads, c.d_ff, c.vocab) == (
+        4, 4, 384, 6, 1536, 51865)
+
+    c = get_config("phi-3-vision-4.2b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff, c.vocab, c.n_patches) == (
+        32, 3072, 32, 8192, 32064, 576)
+
+
+def test_long_500k_applicability():
+    from repro.configs import SHAPES, applicable
+
+    runnable = {
+        a: applicable(get_config(a), SHAPES["long_500k"])[0] for a in ARCH_NAMES
+    }
+    assert runnable["jamba-1.5-large-398b"] is True
+    assert runnable["rwkv6-3b"] is True
+    for a in ("granite-3-8b", "mistral-large-123b", "qwen3-1.7b", "qwen3-32b",
+              "olmoe-1b-7b", "moonshot-v1-16b-a3b", "whisper-tiny",
+              "phi-3-vision-4.2b"):
+        assert runnable[a] is False, a

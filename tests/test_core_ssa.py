@@ -1,0 +1,227 @@
+"""Property + behaviour tests for SSA / HA-SSA — the paper's central claims.
+
+The strongest claim (Sec. III-A, V-A): HA-SSA's update path is *identical* to
+SSA's; only the storage policy and temperature-control arithmetic differ, so
+with equivalent hyperparameters the stored states are bit-identical and the
+solutions equal.  We assert this structurally, not statistically.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    SSAHyperParams,
+    anneal,
+    fig4_example,
+    gset,
+    memory,
+    pack_spins,
+    ssa_cycle_update,
+    unpack_spins,
+)
+from repro.core.schedule import hassa_schedule, n_temp_steps, ssa_schedule
+
+
+# ---------------------------------------------------------------------------
+# Eq. (2b)/(2c): the Itanh FSM epilogue
+# ---------------------------------------------------------------------------
+@given(
+    st.integers(-100, 100),
+    st.integers(-40, 40),
+    st.sampled_from([-1, 1]),
+    st.sampled_from([1, 2, 4, 8, 16, 32]),
+    st.integers(0, 4),
+)
+@settings(max_examples=200, deadline=None)
+def test_itanh_fsm_matches_eq2(field, itanh, r, i0, n_rnd):
+    m_new, itanh_new = ssa_cycle_update(
+        jnp.asarray([field]), jnp.asarray([itanh]), jnp.asarray([r]), jnp.int32(i0), n_rnd
+    )
+    I = field + n_rnd * r + itanh
+    if I >= i0:
+        expect_it = i0 - 1
+    elif I < -i0:
+        expect_it = -i0
+    else:
+        expect_it = I
+    assert int(itanh_new[0]) == expect_it
+    assert int(m_new[0]) == (1 if expect_it >= 0 else -1)
+    # FSM has 2*I0 states: Itanh always lands in [-I0, I0-1]
+    assert -i0 <= int(itanh_new[0]) <= i0 - 1
+
+
+# ---------------------------------------------------------------------------
+# Eq. (3) vs Eq. (4): schedule equivalence (Sec. III-A)
+# ---------------------------------------------------------------------------
+@given(
+    st.sampled_from([1, 2, 4]),
+    st.sampled_from([8, 16, 32, 64]),
+    st.integers(1, 2),
+    st.integers(1, 50),
+)
+@settings(max_examples=50, deadline=None)
+def test_schedule_equivalence(i0_min, i0_max, beta_shift, tau):
+    """β_ssa = 2^-β_hassa ⇒ identical I0 sequences."""
+    hs = hassa_schedule(i0_min, i0_max, tau, beta_shift)
+    ss = ssa_schedule(i0_min, i0_max, tau, 2.0 ** (-beta_shift))
+    np.testing.assert_array_equal(hs.i0_per_cycle, ss.i0_per_cycle)
+    np.testing.assert_array_equal(hs.store_mask, ss.store_mask)
+    assert hs.steps == n_temp_steps(i0_min, i0_max, beta_shift)
+    # the store mask is exactly the final plateau
+    assert hs.store_mask.sum() == tau
+    assert np.all(hs.store_mask[-tau:])
+
+
+def test_schedule_shift_is_power_of_two():
+    s = hassa_schedule(1, 32, 3, beta_shift=1)
+    np.testing.assert_array_equal(np.unique(s.i0_per_cycle), [1, 2, 4, 8, 16, 32])
+    s2 = hassa_schedule(1, 16, 2, beta_shift=2)  # 1,4,16
+    np.testing.assert_array_equal(np.unique(s2.i0_per_cycle), [1, 4, 16])
+
+
+# ---------------------------------------------------------------------------
+# The central property: HA-SSA ≡ SSA
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("noise", ["xorshift", "threefry"])
+def test_hassa_equals_ssa_storage_subset(noise):
+    """HA-SSA's stored bitplanes == the I0max slice of SSA's full record."""
+    g = gset.toroidal_grid(64, seed=3)
+    hp = SSAHyperParams(n_trials=4, m_shot=3, tau=8, i0_min=1, i0_max=8)
+    ra = anneal(g, hp, seed=7, storage="i0max", record="traj", noise=noise)
+    rb = anneal(g, hp, seed=7, storage="all", record="traj", noise=noise)
+    steps = hp.steps
+    assert ra.traj.shape == (3, hp.tau, 4, 2)
+    assert rb.traj.shape == (3, steps * hp.tau, 4, 2)
+    np.testing.assert_array_equal(ra.traj, rb.traj[:, -hp.tau :])
+    # Eq.(5)/(6) witness: structural storage ratio equals the plateau count
+    assert rb.stored_bits_per_iter == steps * ra.stored_bits_per_iter
+
+
+@given(st.integers(0, 10_000), st.integers(2, 4), st.sampled_from([4, 8, 16]))
+@settings(max_examples=10, deadline=None)
+def test_hassa_equals_ssa_property(seed, m_shot, i0_max):
+    """Property form over random seeds/hyperparams (small instances)."""
+    g = gset.king_graph(36, seed=1)
+    hp = SSAHyperParams(n_trials=2, m_shot=m_shot, tau=5, i0_min=1, i0_max=i0_max)
+    ra = anneal(g, hp, seed=seed, storage="i0max", record="traj", noise="xorshift")
+    rb = anneal(g, hp, seed=seed, storage="all", record="traj", noise="xorshift")
+    np.testing.assert_array_equal(ra.traj, rb.traj[:, -hp.tau :])
+
+
+def test_hassa_equals_ssa_solution_quality():
+    """Fig. 8 claim: same best/avg cut values over trials (shared stream).
+
+    The best state almost always occurs in the cold (stored) phase, so the
+    policies agree; we assert equality on this seeded configuration the way
+    the paper asserts it over its 100-trial runs.
+    """
+    g = gset.load("G11")
+    hp = SSAHyperParams(n_trials=8, m_shot=8)
+    ra = anneal(g, hp, seed=0, storage="i0max", record="best", noise="xorshift")
+    rb = anneal(g, hp, seed=0, storage="all", record="best", noise="xorshift")
+    assert ra.overall_best_cut == rb.overall_best_cut
+    assert ra.mean_best_cut == rb.mean_best_cut
+
+
+def test_best_record_matches_traj_record():
+    """Running-best (production mode) == scan-the-trajectory (FPGA mode)."""
+    g = gset.toroidal_grid(64, seed=9)
+    hp = SSAHyperParams(n_trials=3, m_shot=4, tau=6, i0_min=1, i0_max=8)
+    rb = anneal(g, hp, seed=11, storage="i0max", record="best", noise="xorshift")
+    rt = anneal(g, hp, seed=11, storage="i0max", record="traj", noise="xorshift")
+    np.testing.assert_array_equal(rb.best_cut, rt.best_cut)
+
+
+def test_schedule_kind_hassa_equals_ssa_run():
+    """Eq.(4) vs Eq.(3) schedules drive identical runs (β=1 ⇔ β=0.5)."""
+    g = gset.toroidal_grid(36, seed=4)
+    hp = SSAHyperParams(n_trials=2, m_shot=3, tau=5, i0_min=1, i0_max=8)
+    ra = anneal(g, hp, seed=3, schedule_kind="hassa", record="traj", noise="xorshift")
+    rb = anneal(g, hp, seed=3, schedule_kind="ssa", record="traj", noise="xorshift")
+    np.testing.assert_array_equal(ra.traj, rb.traj)
+
+
+# ---------------------------------------------------------------------------
+# Backends agree (sparse gather vs dense MXU matmul)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["dense"])
+def test_backends_bitwise_equal(backend):
+    g = gset.king_graph(36, seed=5)
+    hp = SSAHyperParams(n_trials=3, m_shot=3, tau=5, i0_min=1, i0_max=8)
+    rs = anneal(g, hp, seed=2, record="traj", noise="xorshift", backend="sparse")
+    rd = anneal(g, hp, seed=2, record="traj", noise="xorshift", backend=backend)
+    np.testing.assert_array_equal(rs.traj, rd.traj)
+
+
+# ---------------------------------------------------------------------------
+# Solution quality / convergence behaviour
+# ---------------------------------------------------------------------------
+def test_fig4_all_trials_reach_optimum():
+    p = fig4_example()
+    hp = SSAHyperParams(n_trials=8, m_shot=5, tau=10, i0_min=1, i0_max=8)
+    r = anneal(p, hp, seed=0)
+    assert np.all(r.best_cut == 3)
+
+
+def test_energy_trace_monotone_convergence():
+    """Fig. 7 shape: mean energy decreases substantially from start to end."""
+    g = gset.load("G11")
+    hp = SSAHyperParams(n_trials=8, m_shot=10)
+    r = anneal(g, hp, seed=0, track_energy=True)
+    e = r.energy_mean
+    assert e is not None and e.shape == (hp.total_cycles,)
+    head = e[:100].mean()
+    tail = e[-100:].mean()
+    assert tail < head - 100  # converged far below the random-state energy
+
+
+def test_cycle_duration_mode():
+    """Conventional-SSA cycle-count control truncates the final iteration."""
+    g = gset.toroidal_grid(36, seed=4)
+    hp = SSAHyperParams(n_trials=2, m_shot=3, tau=5, i0_min=1, i0_max=8)
+    r = anneal(g, hp, seed=1, total_cycles=37, track_energy=True)
+    assert r.energy_mean.shape == (37,)
+
+
+# ---------------------------------------------------------------------------
+# Bit packing
+# ---------------------------------------------------------------------------
+@given(st.integers(1, 100), st.integers(0, 10**6))
+@settings(max_examples=50, deadline=None)
+def test_pack_unpack_roundtrip(n, seed):
+    rng = np.random.default_rng(seed)
+    m = rng.choice([-1, 1], size=(3, n)).astype(np.int8)
+    packed = pack_spins(jnp.asarray(m))
+    assert packed.shape == (3, (n + 31) // 32)
+    out = unpack_spins(packed, n)
+    np.testing.assert_array_equal(np.asarray(out), m)
+
+
+# ---------------------------------------------------------------------------
+# Memory model (Eq. 5/6, Table IV)
+# ---------------------------------------------------------------------------
+def test_memory_model_table_iv():
+    hp = SSAHyperParams()  # Table II: I0 1→32, τ=100, β=1, m_shot=150
+    n = 800
+    m_ssa = memory.ssa_bits_per_iteration(n, hp)
+    m_ha = memory.hassa_bits_per_iteration(n, hp)
+    assert m_ssa == 800 * 6 * 100 == 480_000       # 0.48 Mb  (Table IV)
+    assert m_ha == 800 * 100 == 80_000             # 0.08 Mb  (Table IV)
+    assert memory.memory_ratio(hp) == 6            # the paper's 6×
+    assert memory.bits_per_trial(n, hp, hardware_aware=False) == 72_000_000
+    assert memory.bits_per_trial(n, hp, hardware_aware=True) == 12_000_000
+
+
+def test_memory_matches_structural_storage():
+    """Eq.(5)/(6) agree with the actual XLA buffer shapes we allocate."""
+    g = gset.toroidal_grid(64, seed=3)
+    hp = SSAHyperParams(n_trials=2, m_shot=2, tau=4, i0_min=1, i0_max=8)
+    ra = anneal(g, hp, seed=0, storage="i0max", record="traj")
+    rb = anneal(g, hp, seed=0, storage="all", record="traj")
+    assert ra.stored_bits_per_iter == memory.hassa_bits_per_iteration(64, hp)
+    assert rb.stored_bits_per_iter == memory.ssa_bits_per_iteration(64, hp)
+    # and the materialized buffers have exactly those bit counts (packed)
+    assert ra.traj.shape[1] * 64 == ra.stored_bits_per_iter
+    assert rb.traj.shape[1] * 64 == rb.stored_bits_per_iter

@@ -1,0 +1,62 @@
+"""Dry-run integration test (deliverable e): lower+compile a real cell on
+the production meshes inside a subprocess (the 512 virtual devices must not
+leak into this test process, whose other tests assume 1 CPU device).
+
+whisper-tiny is the fastest-compiling assigned arch; one train cell on the
+single-pod mesh and one decode cell on the 2-pod mesh cover both step kinds
+and both meshes in ~1 min.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, json
+sys.path.insert(0, {src!r})
+from repro.launch.dryrun import run_cell
+rec = run_cell({arch!r}, {shape!r}, {mesh!r}, verbose=False, analysis={analysis})
+print("RESULT:" + json.dumps(rec))
+"""
+
+
+def _run(arch, shape, mesh, analysis=False):
+    code = SCRIPT.format(src=os.path.join(REPO, "src"), arch=arch, shape=shape,
+                         mesh=mesh, analysis=analysis)
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, timeout=900,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT:")][-1]
+    return json.loads(line[len("RESULT:"):])
+
+
+def test_train_cell_single_pod_with_analysis():
+    rec = _run("whisper-tiny", "train_4k", "single", analysis=True)
+    assert rec["status"] == "ok"
+    assert rec["n_chips"] == 256
+    assert rec["peak_bytes_per_device"] > 0
+    # analysis terms present and positive
+    assert rec["t_compute_s"] > 0 and rec["t_memory_s"] > 0
+    assert rec["dominant"] in ("compute", "memory", "collective")
+    # MODEL_FLOPS sanity: 6·N·D within 100× of HLO global flops
+    assert 0.01 < rec["useful_flops_ratio"] < 100
+
+
+def test_decode_cell_multi_pod():
+    rec = _run("whisper-tiny", "decode_32k", "pod", analysis=False)
+    assert rec["status"] == "ok"
+    assert rec["n_chips"] == 512  # proves the pod axis shards
+    assert rec["fits_hbm_16g"] is True
+
+
+def test_long_500k_skip_is_recorded():
+    rec = _run("granite-3-8b", "long_500k", "single")
+    assert rec["status"] == "skipped"
+    assert "sub-quadratic" in rec["reason"]

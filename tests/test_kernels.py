@@ -1,0 +1,157 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles.
+
+All assertions are exact equality (the math is integer-valued by
+construction; MXU accumulation is f32 — see DESIGN.md §2).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SSAHyperParams, anneal, gset
+from repro.kernels import ops, ref, ssa_update
+
+
+def _dense_problem(n, seed=0):
+    g = gset.king_graph(n, seed=seed)
+    model = g.to_ising()
+    return g, model, model.dense_J()
+
+
+# ---------------------------------------------------------------------------
+# Kernel A: local_field
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("r", [1, 3, 8, 17])
+@pytest.mark.parametrize("n", [16, 36, 100])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_local_field_sweep(r, n, dtype):
+    rng = np.random.default_rng(r * 1000 + n)
+    J = rng.integers(-3, 4, size=(n, n))
+    J = np.triu(J, 1)
+    J = J + J.T
+    h = rng.integers(-4, 5, size=(n,))
+    m = rng.choice([-1.0, 1.0], size=(r, n)).astype(np.float32)
+    out_k = ssa_update.local_field(
+        jnp.asarray(m), jnp.asarray(h, jnp.int32), jnp.asarray(J, dtype),
+        block_r=4, block_n=32, block_k=32,
+    )
+    out_r = ref.local_field_ref(jnp.asarray(m), jnp.asarray(h), jnp.asarray(J, jnp.float32))
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+@pytest.mark.parametrize("blocks", [(2, 16, 16), (4, 32, 64), (8, 128, 128)])
+def test_local_field_block_shapes(blocks):
+    br, bn, bk = blocks
+    _, model, J = _dense_problem(64, seed=1)
+    rng = np.random.default_rng(0)
+    m = rng.choice([-1.0, 1.0], size=(10, 64)).astype(np.float32)
+    out_k = ssa_update.local_field(
+        jnp.asarray(m), jnp.asarray(model.h), jnp.asarray(J, jnp.float32),
+        block_r=br, block_n=bn, block_k=bk,
+    )
+    out_r = ref.local_field_ref(jnp.asarray(m), jnp.asarray(model.h), jnp.asarray(J, jnp.float32))
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+# ---------------------------------------------------------------------------
+# Kernel B: resident plateau
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("r,n,c", [(2, 16, 3), (5, 36, 7), (9, 64, 4)])
+@pytest.mark.parametrize("eligible", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_plateau_sweep(r, n, c, eligible, dtype):
+    rng = np.random.default_rng(r + n + c)
+    _, model, J = _dense_problem(n, seed=n)
+    m = jnp.asarray(rng.choice([-1.0, 1.0], size=(r, n)).astype(np.float32))
+    itanh = jnp.asarray(rng.integers(-4, 4, size=(r, n)), jnp.int32)
+    noise = jnp.asarray(rng.choice([-1, 1], size=(c, r, n)).astype(np.int8))
+    bH = jnp.full((r,), 2**30, jnp.int32)
+    bm = m.astype(jnp.int8)
+    h = jnp.asarray(model.h, jnp.int32)
+    Jd = jnp.asarray(J, dtype)
+    out_k = ssa_update.ssa_plateau(
+        m, itanh, Jd, h, noise, jnp.int32(8), bH, bm,
+        n_rnd=2, eligible=eligible, block_r=4,
+    )
+    out_r = ref.ssa_plateau_ref(
+        m, itanh, jnp.asarray(J, jnp.float32), h, noise, 8, bH, bm,
+        n_rnd=2, eligible=eligible,
+    )
+    for a, b, name in zip(out_k, out_r, ["m", "itanh", "best_H", "best_m"]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=name)
+
+
+def test_plateau_chain_matches_ref_chain():
+    """Chaining plateaus (heat→cold) through the kernel == chained oracle."""
+    rng = np.random.default_rng(3)
+    _, model, J = _dense_problem(36, seed=2)
+    r, n = 4, 36
+    m = jnp.asarray(rng.choice([-1.0, 1.0], size=(r, n)).astype(np.float32))
+    it = jnp.where(m > 0, 0, -1).astype(jnp.int32)
+    bH = jnp.full((r,), 2**30, jnp.int32)
+    bm = m.astype(jnp.int8)
+    h = jnp.asarray(model.h, jnp.int32)
+    Jf = jnp.asarray(J, jnp.float32)
+    state_k = (m, it, bH, bm)
+    state_r = (m, it, bH, bm)
+    for i0, elig in [(1, False), (2, False), (4, True)]:
+        noise = jnp.asarray(rng.choice([-1, 1], size=(5, r, n)).astype(np.int8))
+        state_k = ssa_update.ssa_plateau(
+            state_k[0], state_k[1], Jf, h, noise, jnp.int32(i0),
+            state_k[2], state_k[3], n_rnd=2, eligible=elig, block_r=4,
+        )
+        state_r = ref.ssa_plateau_ref(
+            state_r[0], state_r[1], Jf, h, noise, i0,
+            state_r[2], state_r[3], n_rnd=2, eligible=elig,
+        )
+    for a, b in zip(state_k, state_r):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: resident-kernel annealer ≡ core annealer (same noise stream)
+# ---------------------------------------------------------------------------
+def test_anneal_resident_matches_core():
+    g = gset.king_graph(36, seed=5)
+    model = g.to_ising()
+    hp = SSAHyperParams(n_trials=4, m_shot=3, tau=5, i0_min=1, i0_max=8)
+    r_core = anneal(
+        g, hp, seed=9, storage="i0max", record="best", noise="xorshift",
+        backend="dense", track_energy=False,
+    )
+    best_H, best_m = ops.anneal_resident(
+        jnp.asarray(model.dense_J(), jnp.float32),
+        jnp.asarray(model.h, jnp.int32),
+        hp.schedule("hassa"),
+        m_shot=hp.m_shot,
+        n_trials=hp.n_trials,
+        n_rnd=hp.n_rnd,
+        storage="i0max",
+        seed=9,
+        block_r=4,
+    )
+    np.testing.assert_array_equal(best_H, r_core.best_energy)
+
+
+def test_anneal_resident_ssa_policy_not_worse():
+    """'all' policy sees a superset of states, so its best is <= HA-SSA's."""
+    g = gset.king_graph(36, seed=6)
+    model = g.to_ising()
+    hp = SSAHyperParams(n_trials=4, m_shot=3, tau=5, i0_min=1, i0_max=8)
+    args = (
+        jnp.asarray(model.dense_J(), jnp.float32),
+        jnp.asarray(model.h, jnp.int32),
+        hp.schedule("hassa"),
+    )
+    kw = dict(m_shot=hp.m_shot, n_trials=hp.n_trials, n_rnd=hp.n_rnd, seed=4, block_r=4)
+    bh_ha, _ = ops.anneal_resident(*args, storage="i0max", **kw)
+    bh_ssa, _ = ops.anneal_resident(*args, storage="all", **kw)
+    assert np.all(bh_ssa <= bh_ha)
+
+
+def test_core_pallas_backend():
+    """repro.core.ssa backend='pallas' bit-matches the sparse backend."""
+    g = gset.king_graph(36, seed=5)
+    hp = SSAHyperParams(n_trials=2, m_shot=2, tau=4, i0_min=1, i0_max=4)
+    rs = anneal(g, hp, seed=2, record="traj", noise="xorshift", backend="sparse")
+    rp = anneal(g, hp, seed=2, record="traj", noise="xorshift", backend="pallas")
+    np.testing.assert_array_equal(rs.traj, rp.traj)

@@ -1,0 +1,133 @@
+"""Tests for the Sec. VI-B problem embeddings (TSP / partitioning / GI)."""
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SSAHyperParams, anneal, ising_energy
+from repro.core.problems import (decode_gi, decode_partition, decode_tsp,
+                                 gi_problem, partition_problem, qubo_to_ising,
+                                 suggest_hyperparams, tsp_problem,
+                                 tsp_tour_length)
+
+
+def _energy(model, m):
+    h, nbr_idx, nbr_w = model.device_arrays()
+    return int(ising_energy(jnp.asarray(m, jnp.int32), h, nbr_idx, nbr_w))
+
+
+def test_qubo_to_ising_exact_over_all_assignments():
+    rng = np.random.default_rng(0)
+    Q = rng.integers(-3, 4, size=(6, 6))
+    model, offset = qubo_to_ising(Q)
+    for bits in range(2**6):
+        x = np.array([(bits >> k) & 1 for k in range(6)], dtype=np.int64)
+        m = 2 * x - 1
+        assert 4 * int(x @ Q @ x) == _energy(model, m) + offset
+
+
+def test_partition_ground_state_is_balanced():
+    values = np.array([4, 5, 6, 7, 8])  # perfect split: {4,5,6} vs {7,8}
+    model, v = partition_problem(values)
+    best = None
+    for bits in range(2**5):
+        m = 2 * np.array([(bits >> k) & 1 for k in range(5)]) - 1
+        e = _energy(model, m)
+        if best is None or e < best[0]:
+            best = (e, m)
+    assert decode_partition(values, best[1]) == 0
+
+
+def test_partition_solved_by_hassa():
+    """integer weights need scale-matched hyperparameters (Sec. VI-B)."""
+    rng = np.random.default_rng(1)
+    values = rng.integers(1, 10, size=12)
+    model, _ = partition_problem(values)
+    hp = suggest_hyperparams(model, n_trials=8, m_shot=10)
+    r = anneal(model, hp, seed=0, track_energy=False)
+    resid = min(
+        decode_partition(values, r.best_m[t]) for t in range(hp.n_trials)
+    )
+    best = min(
+        decode_partition(values, 2 * np.array(x) - 1)
+        for x in itertools.product([0, 1], repeat=12)
+    )
+    assert resid == best  # exact with tuned hyperparameters
+
+
+def test_tsp_ground_state_is_shortest_tour():
+    # 4 cities on a line: optimal tour length = 2·span
+    pts = np.array([0, 1, 2, 5])
+    dist = np.abs(pts[:, None] - pts[None, :])
+    p = tsp_problem(dist)
+    best = None
+    n = 16
+    for bits in range(2**n):
+        m = 2 * np.array([(bits >> k) & 1 for k in range(n)]) - 1
+        e = _energy(p.model, m)
+        if best is None or e < best[0]:
+            best = (e, m)
+    tour = decode_tsp(p, best[1])
+    assert tour is not None, "ground state violates constraints"
+    assert tsp_tour_length(p, tour) == 10  # 0→1→2→5→0
+
+
+def test_tsp_solved_by_hassa():
+    pts = np.array([0, 2, 3, 7])
+    dist = np.abs(pts[:, None] - pts[None, :])
+    p = tsp_problem(dist, penalty=14)
+    hp = suggest_hyperparams(p.model, n_trials=16, m_shot=20)
+    r = anneal(p.model, hp, seed=3, track_energy=False)
+    tours = [decode_tsp(p, r.best_m[t]) for t in range(hp.n_trials)]
+    lengths = [tsp_tour_length(p, t) for t in tours if t is not None]
+    assert lengths, "no feasible tour found"
+    assert min(lengths) == 14  # optimal: 2·(7-0)
+
+
+def test_gi_isomorphic_graphs_have_zero_ground_state():
+    # G1: path 0-1-2-3; G2: same path relabeled by perm (2,0,3,1)
+    A1 = np.zeros((4, 4), dtype=int)
+    for a, b in [(0, 1), (1, 2), (2, 3)]:
+        A1[a, b] = A1[b, a] = 1
+    perm = np.array([2, 0, 3, 1])
+    A2 = A1[np.ix_(np.argsort(perm), np.argsort(perm))]
+    model, offset = gi_problem(A1, A2)
+    # the true permutation encoding must be a global ground state
+    x = np.zeros((4, 4), dtype=int)
+    for u in range(4):
+        x[u, perm[u]] = 1
+    m = 2 * x.reshape(-1) - 1
+    e_perm = _energy(model, m)
+    # brute force over all 2^16 assignments
+    e_min = min(
+        _energy(model, 2 * np.array([(b >> k) & 1 for k in range(16)]) - 1)
+        for b in range(2**16)
+    )
+    assert e_perm == e_min
+    mapping = decode_gi(4, m)
+    assert mapping is not None and np.array_equal(mapping, perm)
+
+
+def test_gi_solved_by_hassa():
+    A1 = np.zeros((4, 4), dtype=int)
+    for a, b in [(0, 1), (1, 2), (2, 3), (3, 0)]:  # 4-cycle
+        A1[a, b] = A1[b, a] = 1
+    perm = np.array([1, 3, 0, 2])
+    inv = np.argsort(perm)
+    A2 = A1[np.ix_(inv, inv)]
+    model, offset = gi_problem(A1, A2)
+    hp = suggest_hyperparams(model, n_trials=16, m_shot=15)
+    r = anneal(model, hp, seed=1, track_energy=False)
+    found = False
+    for t in range(hp.n_trials):
+        mapping = decode_gi(4, r.best_m[t])
+        if mapping is None:
+            continue
+        # verify it's a graph isomorphism
+        P = np.zeros((4, 4), dtype=int)
+        P[np.arange(4), mapping] = 1
+        if np.array_equal(P.T @ A1 @ P, A2):
+            found = True
+            break
+    assert found, "HA-SSA found no valid isomorphism"

@@ -1,0 +1,63 @@
+"""Serving-engine tests: batched generation, greedy determinism, KV reuse."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model_defs
+from repro.models.params import init_params
+from repro.serve.engine import ServeConfig, generate
+
+
+def _params_and_batch(arch, B=2, S=8):
+    cfg = get_config(arch, reduced=True)
+    params = init_params(model_defs(cfg), jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)}
+    if cfg.frontend == "vision":
+        batch["patches"] = jax.random.normal(
+            jax.random.PRNGKey(2), (B, cfg.n_patches, cfg.d_model)) * 0.02
+    if cfg.encoder_layers:
+        batch["frames"] = jax.random.normal(
+            jax.random.PRNGKey(2), (B, cfg.n_frames, cfg.d_model)) * 0.1
+    return cfg, params, batch
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "olmoe-1b-7b", "rwkv6-3b",
+                                  "jamba-1.5-large-398b"])
+def test_generate_shapes_and_determinism(arch):
+    cfg, params, batch = _params_and_batch(arch)
+    sc = ServeConfig(max_seq=24)
+    out1 = generate(params, batch, cfg, sc, n_new_tokens=6, seed=0)
+    out2 = generate(params, batch, cfg, sc, n_new_tokens=6, seed=0)
+    assert out1.shape == (2, 6)
+    np.testing.assert_array_equal(out1, out2)  # greedy is deterministic
+    assert out1.min() >= 0 and out1.max() < cfg.vocab
+
+
+def test_generate_matches_teacher_forced_forward():
+    """Greedy decode must agree with argmax of the full forward pass when the
+    generated tokens are fed back in (consistency of the KV-cache path)."""
+    from repro.models import forward
+    from repro.models.transformer import lm_head_logits
+
+    cfg, params, batch = _params_and_batch("granite-3-8b", B=1, S=8)
+    sc = ServeConfig(max_seq=16)
+    out = generate(params, batch, cfg, sc, n_new_tokens=4, seed=0)
+    # teacher-forced: run forward on prompt+generated, check each generated
+    # token is the argmax at its position
+    toks = np.concatenate([np.asarray(batch["tokens"]), out], axis=1)
+    h, _ = forward(params, {"tokens": jnp.asarray(toks)}, cfg)
+    logits = lm_head_logits(params, h, cfg)
+    for i in range(4):
+        pos = 8 + i - 1  # logits at pos predict token pos+1
+        pred = int(jnp.argmax(logits[0, pos]))
+        assert pred == int(toks[0, 8 + i]), f"mismatch at generated index {i}"
+
+
+def test_temperature_sampling_varies():
+    cfg, params, batch = _params_and_batch("granite-3-8b")
+    sc = ServeConfig(max_seq=24, temperature=1.0)
+    outs = {tuple(generate(params, batch, cfg, sc, n_new_tokens=6, seed=s)[0])
+            for s in range(4)}
+    assert len(outs) > 1  # different seeds → different samples

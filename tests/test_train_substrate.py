@@ -1,0 +1,168 @@
+"""Tests for optimizer, data pipeline, loss, and training behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.data.pipeline import DataConfig, batch_spec, host_slice, synthetic_batch
+from repro.models import ModelConfig, forward
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               clip_by_global_norm, cosine_schedule, global_norm)
+from repro.train.step import (TrainConfig, chunked_ce_loss, init_train_state,
+                              make_loss_fn, make_train_step)
+
+CFG = ModelConfig(name="tiny", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                  d_head=16, d_ff=128, vocab=97, remat="none")
+
+
+# ---------------------------------------------------------------------------
+# Optimizer
+# ---------------------------------------------------------------------------
+def test_adamw_moves_toward_minimum():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    cfg = AdamWConfig(lr_peak=0.5, warmup_steps=0, total_steps=100,
+                      weight_decay=0.0, clip_norm=100.0, zero1=False)
+    opt = adamw_init(params, cfg)
+    for _ in range(100):
+        grads = {"w": 2 * params["w"]}  # d/dw |w|^2
+        params, opt, _ = adamw_update(params, grads, opt, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+
+
+def test_cosine_schedule_shape():
+    cfg = AdamWConfig(lr_peak=1.0, warmup_steps=10, total_steps=100)
+    lrs = [float(cosine_schedule(cfg, s)) for s in range(101)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[10] - 1.0) < 1e-6
+    assert lrs[100] < 1e-6
+    assert all(a >= b - 1e-9 for a, b in zip(lrs[10:], lrs[11:]))  # decreasing
+
+
+@given(st.floats(0.1, 10.0), st.integers(0, 5))
+@settings(max_examples=20, deadline=None)
+def test_clip_by_global_norm(max_norm, seed):
+    rng = np.random.default_rng(seed)
+    tree = {"a": jnp.asarray(rng.normal(size=(7,)) * 10),
+            "b": jnp.asarray(rng.normal(size=(3, 3)) * 10)}
+    clipped, norm = clip_by_global_norm(tree, max_norm)
+    new_norm = float(global_norm(clipped))
+    assert new_norm <= max_norm * 1.001
+    if float(norm) <= max_norm:  # no-op when under the limit
+        np.testing.assert_allclose(np.asarray(clipped["a"]),
+                                   np.asarray(tree["a"]), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+def test_data_deterministic_and_resumable():
+    dc = DataConfig(vocab=97, seq_len=16, global_batch=4, seed=3)
+    a = synthetic_batch(dc, 7)
+    b = synthetic_batch(dc, 7)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+    c = synthetic_batch(dc, 8)
+    assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(c["tokens"]))
+
+
+def test_data_labels_are_shifted_tokens():
+    dc = DataConfig(vocab=97, seq_len=16, global_batch=2, seed=0)
+    b = synthetic_batch(dc, 0)
+    # labels[t] is the next token after tokens[t] (common stream)
+    assert b["tokens"].shape == b["labels"].shape == (2, 16)
+    np.testing.assert_array_equal(
+        np.asarray(b["tokens"][:, 1:]), np.asarray(b["labels"][:, :-1])
+    )
+
+
+def test_host_slice_partitions():
+    dc = DataConfig(vocab=97, seq_len=8, global_batch=8, seed=0)
+    b = synthetic_batch(dc, 0)
+    parts = [host_slice(b, i, 4) for i in range(4)]
+    glued = np.concatenate([np.asarray(p["tokens"]) for p in parts])
+    np.testing.assert_array_equal(glued, np.asarray(b["tokens"]))
+
+
+def test_batch_spec_matches_batch():
+    dc = DataConfig(vocab=97, seq_len=8, global_batch=2, seed=0,
+                    n_patches=3, d_model=16)
+    spec = batch_spec(dc)
+    b = synthetic_batch(dc, 0)
+    for k in spec:
+        assert tuple(spec[k].shape) == tuple(b[k].shape), k
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+def test_chunked_loss_equals_unchunked():
+    key = jax.random.PRNGKey(0)
+    from repro.models.params import init_params
+    from repro.models.transformer import lm_head_logits, model_defs
+
+    params = init_params(model_defs(CFG), key)
+    hidden = jax.random.normal(key, (2, 16, 64), jnp.float32) * 0.1
+    labels = jax.random.randint(key, (2, 16), 0, 97)
+    tot, cnt = chunked_ce_loss(params, hidden, labels, CFG, chunk=4)
+    logits = lm_head_logits(params, hidden, CFG)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ref = jnp.sum(lse - ll)
+    np.testing.assert_allclose(float(tot), float(ref), rtol=1e-5)
+    assert float(cnt) == 32
+
+
+def test_masked_labels_excluded():
+    from repro.models.params import init_params
+    from repro.models.transformer import model_defs
+
+    params = init_params(model_defs(CFG), jax.random.PRNGKey(0))
+    hidden = jnp.zeros((1, 8, 64))
+    labels = jnp.asarray([[-1, -1, 3, 4, 5, -1, 7, 8]])
+    _, cnt = chunked_ce_loss(params, hidden, labels, CFG, chunk=8)
+    assert float(cnt) == 5
+
+
+# ---------------------------------------------------------------------------
+# Training behaviour
+# ---------------------------------------------------------------------------
+def test_loss_decreases_over_training():
+    tc = TrainConfig(opt=AdamWConfig(lr_peak=1e-2, warmup_steps=5,
+                                     total_steps=50), loss_chunk=16)
+    dc = DataConfig(vocab=97, seq_len=32, global_batch=8, seed=0)
+    state = init_train_state(CFG, tc, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(CFG, tc))
+    losses = []
+    for s in range(30):
+        state, m = step(state, synthetic_batch(dc, s))
+        losses.append(float(m["ce_loss"]))
+    assert losses[-1] < losses[0] - 0.4
+    assert int(state.opt.step) == 30
+
+
+def test_microbatch_matches_single_shot():
+    tc1 = TrainConfig(opt=AdamWConfig(), microbatches=1, loss_chunk=16)
+    tc4 = TrainConfig(opt=AdamWConfig(), microbatches=4, loss_chunk=16)
+    dc = DataConfig(vocab=97, seq_len=16, global_batch=8, seed=0)
+    b = synthetic_batch(dc, 0)
+    s1 = init_train_state(CFG, tc1, jax.random.PRNGKey(0))
+    s4 = init_train_state(CFG, tc4, jax.random.PRNGKey(0))
+    _, m1 = jax.jit(make_train_step(CFG, tc1))(s1, b)
+    _, m4 = jax.jit(make_train_step(CFG, tc4))(s4, b)
+    # same loss (up to bf16 batch-slicing noise) and same token count
+    assert abs(float(m1["ce_loss"]) - float(m4["ce_loss"])) < 0.02
+    assert float(m1["tokens"]) == float(m4["tokens"])
+
+
+def test_grad_accum_dtype_bf16_compresses():
+    """bf16 accumulation is the gradient-compression knob: the accumulated
+    grads (and hence the DP all-reduce payload) are half-width."""
+    tc = TrainConfig(opt=AdamWConfig(), microbatches=2,
+                     grad_accum_dtype=jnp.bfloat16, loss_chunk=16)
+    dc = DataConfig(vocab=97, seq_len=16, global_batch=4, seed=0)
+    state = init_train_state(CFG, tc, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(CFG, tc))
+    state2, m = step(state, synthetic_batch(dc, 0))
+    assert np.isfinite(float(m["ce_loss"]))
+    assert int(state2.opt.step) == 1
