@@ -17,7 +17,7 @@ from .common import emit
 
 
 def run(problems=("G11", "G12", "G13"), trials: int = 8, m_shot: int = 20,
-        csv_prefix: str = "fig7_convergence"):
+        backend: str = "sparse", csv_prefix: str = "fig7_convergence"):
     """Reduced-scale by default (full: trials=100, m_shot=150)."""
     rows = {}
     for name in problems:
@@ -26,12 +26,13 @@ def run(problems=("G11", "G12", "G13"), trials: int = 8, m_shot: int = 20,
         cycles = hp.total_cycles
 
         t0 = time.perf_counter()
-        r_ha = anneal(p, hp, seed=0, storage="i0max", noise="xorshift")
+        r_ha = anneal(p, hp, seed=0, storage="i0max", noise="xorshift",
+                      backend=backend)
         t_ha = (time.perf_counter() - t0) * 1e6
 
         t0 = time.perf_counter()
         r_ssa = anneal(p, hp, seed=0, storage="all", schedule_kind="ssa",
-                       noise="xorshift")
+                       noise="xorshift", backend=backend)
         t_ssa = (time.perf_counter() - t0) * 1e6
 
         t0 = time.perf_counter()

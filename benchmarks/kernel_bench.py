@@ -1,31 +1,42 @@
 """Pallas kernel micro-benchmarks (interpret mode on CPU; TPU is the target).
 
-Reports wall time of the interpret-mode kernels (correctness path) and the
-dense-matmul JAX fallback, plus the TPU roofline projection for the resident
-kernel (the number that matters for deployment).
+Reports wall time of the interpret-mode kernels (correctness path), the
+dense-matmul JAX fallback, and the plateau-engine dispatch path (one
+`pallas_call` per plateau), plus the TPU roofline projection for the
+resident kernel (the number that matters for deployment).
+
+    PYTHONPATH=src python -m benchmarks.kernel_bench [--smoke]
+
+``--smoke`` runs a seconds-scale configuration (small instance, one
+plateau) — the CI correctness/latency canary.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import gset
+from repro.core import SSAHyperParams, anneal, gset
 from repro.kernels import ref, ssa_update
 
 from .common import emit, time_call
 
 
-def run(csv_prefix: str = "kernels"):
-    p = gset.load("G11")
+def run(csv_prefix: str = "kernels", smoke: bool = False):
+    if smoke:
+        p = gset.toroidal_grid(64, seed=17)
+        R, C = 4, 4
+    else:
+        p = gset.load("G11")
+        R, C = 8, 4
     model = p.to_ising()
     N = model.n
     J = jnp.asarray(model.dense_J(), jnp.float32)
     h = jnp.asarray(model.h, jnp.int32)
     rng = np.random.default_rng(0)
-    R, C = 8, 4
     m = jnp.asarray(rng.choice([-1.0, 1.0], size=(R, N)).astype(np.float32))
     it = jnp.zeros((R, N), jnp.int32)
     noise = jnp.asarray(rng.choice([-1, 1], size=(C, R, N)).astype(np.int8))
@@ -45,6 +56,17 @@ def run(csv_prefix: str = "kernels"):
     )
     emit(f"{csv_prefix}/ssa_plateau_pallas_interp", us, f"C={C}_cycles_fused")
 
+    # Engine dispatch path: anneal(backend='pallas') — one pallas_call per
+    # plateau, driven through the plateau engine (smoke-scale correctness +
+    # launch-overhead canary; the G-set twins make it hermetic).
+    hp = SSAHyperParams(n_trials=R, m_shot=1, tau=C, i0_min=1, i0_max=4)
+    t0 = time.perf_counter()
+    r = anneal(p, hp, seed=0, backend="pallas", noise="xorshift",
+               track_energy=False)
+    dt = time.perf_counter() - t0
+    emit(f"{csv_prefix}/engine_pallas_backend", dt * 1e6,
+         f"plateaus={hp.steps};best={r.overall_best_cut}")
+
     # TPU v5e projection for the resident kernel (per cycle, per chip):
     flops = 2 * R * N * N
     t_mxu = flops / 197e12
@@ -61,4 +83,8 @@ def run(csv_prefix: str = "kernels"):
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale CI configuration")
+    args = ap.parse_args()
+    run(smoke=args.smoke)

@@ -30,7 +30,7 @@ def run(csv_prefix: str = "table4_memory"):
          f"{memory.bits_per_trial(n, hp, hardware_aware=True)/1e6:.0f}")
 
     # structural witness at reduced scale: the XLA output buffers ARE the
-    # memory model (DESIGN.md §2, BRAM → buffer shapes)
+    # memory model (DESIGN.md §4, BRAM → buffer shapes)
     g = gset.load("G11")
     hp_small = SSAHyperParams(n_trials=2, m_shot=2)
     r_ha = anneal(g, hp_small, seed=0, storage="i0max", record="traj")

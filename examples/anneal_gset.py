@@ -1,38 +1,100 @@
 """End-to-end annealing driver (the paper's kind of workload): solve the
 benchmark set with HA-SSA / SSA / SA and reproduce the paper's comparisons.
 
-    PYTHONPATH=src python examples/anneal_gset.py [--full] [--problems G11,King1]
+    PYTHONPATH=src python examples/anneal_gset.py [--full] \
+        [--problems G11,King1] [--backend sparse|dense|pallas]
 
 --full uses the paper's scale (100 trials x 90,000 cycles; minutes on CPU).
+
+The solves go through :func:`solve_batch` — a serve-style batch API in the
+spirit of ``repro.serve``: callers enqueue :class:`AnnealRequest`\\ s and get
+:class:`AnnealResponse`\\ s back, while the service runs every request on the
+shared plateau engine with one backend choice (DESIGN.md §7).  This is the
+shape the ROADMAP's annealing-as-a-service work builds on: requests are
+independent, so a pod-scale deployment shards them over hosts and batches
+trials per device.
 """
 import argparse
+import dataclasses
 import time
+from typing import List, Optional, Union
 
-from repro.core import (SAHyperParams, SSAHyperParams, anneal, anneal_sa, gset)
+from repro.core import (IsingModel, MaxCutProblem, SAHyperParams,
+                        SSAHyperParams, AnnealResult, anneal, anneal_sa, gset)
 
-ap = argparse.ArgumentParser()
-ap.add_argument("--full", action="store_true")
-ap.add_argument("--problems", default="G11,G12,G13,King1")
-args = ap.parse_args()
 
-trials = 100 if args.full else 8
-m_shot = 150 if args.full else 15
+@dataclasses.dataclass(frozen=True)
+class AnnealRequest:
+    """One problem + hyperparameters, as a service would accept it."""
 
-for name in args.problems.split(","):
-    p = gset.load(name)
+    problem: Union[MaxCutProblem, IsingModel]
+    hp: SSAHyperParams = SSAHyperParams()
+    seed: int = 0
+    storage: str = "i0max"
+
+
+@dataclasses.dataclass
+class AnnealResponse:
+    request: AnnealRequest
+    result: AnnealResult
+    wall_s: float
+
+
+def solve_batch(requests: List[AnnealRequest], *, backend: str = "sparse",
+                noise: str = "xorshift", track_energy: bool = False
+                ) -> List[AnnealResponse]:
+    """Solve a batch of annealing requests on the shared plateau engine.
+
+    Requests are independent; each runs its trials as one device batch.
+    ``backend='pallas'`` executes every temperature plateau as a single
+    resident kernel launch.
+    """
+    responses = []
+    for req in requests:
+        t0 = time.time()
+        r = anneal(req.problem, req.hp, seed=req.seed, storage=req.storage,
+                   backend=backend, noise=noise, track_energy=track_energy)
+        responses.append(AnnealResponse(req, r, time.time() - t0))
+    return responses
+
+
+def main(argv: Optional[List[str]] = None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--problems", default="G11,G12,G13,King1")
+    ap.add_argument("--backend", choices=("sparse", "dense", "pallas"),
+                    default="sparse")
+    ap.add_argument("--skip-sa", action="store_true",
+                    help="skip the SA baseline comparison")
+    args = ap.parse_args(argv)
+
+    trials = 100 if args.full else 8
+    m_shot = 150 if args.full else 15
     hp = SSAHyperParams(n_trials=trials, m_shot=m_shot)
-    t0 = time.time()
-    r_ha = anneal(p, hp, seed=0, storage="i0max", noise="xorshift")
-    t_ha = time.time() - t0
-    t0 = time.time()
-    r_sa = anneal_sa(p, SAHyperParams(n_trials=trials, n_cycles=hp.total_cycles), seed=0)
-    t_sa = time.time() - t0
-    print(f"\n=== {p.name} (N={p.n}, |E|={len(p.edges)}) "
-          f"{hp.total_cycles} cycles x {trials} trials ===")
-    print(f"  HA-SSA: best {r_ha.overall_best_cut}  avg {r_ha.mean_best_cut:.1f}  "
-          f"({t_ha:.1f}s)")
-    print(f"  SA    : best {r_sa.overall_best_cut}  avg {r_sa.mean_best_cut:.1f}  "
-          f"({t_sa:.1f}s)")
-    if p.best_known:
-        print(f"  best known: {p.best_known} "
-              f"(HA-SSA at {100*r_ha.overall_best_cut/p.best_known:.1f}%)")
+
+    problems = [gset.load(name) for name in args.problems.split(",")]
+    batch = [AnnealRequest(problem=p, hp=hp) for p in problems]
+    responses = solve_batch(batch, backend=args.backend)
+
+    for p, resp in zip(problems, responses):
+        r_ha = resp.result
+        print(f"\n=== {p.name} (N={p.n}, |E|={len(p.edges)}) "
+              f"{hp.total_cycles} cycles x {trials} trials "
+              f"[backend={args.backend}] ===")
+        print(f"  HA-SSA: best {r_ha.overall_best_cut}  "
+              f"avg {r_ha.mean_best_cut:.1f}  ({resp.wall_s:.1f}s)")
+        if not args.skip_sa:
+            t0 = time.time()
+            r_sa = anneal_sa(
+                p, SAHyperParams(n_trials=trials, n_cycles=hp.total_cycles),
+                seed=0)
+            t_sa = time.time() - t0
+            print(f"  SA    : best {r_sa.overall_best_cut}  "
+                  f"avg {r_sa.mean_best_cut:.1f}  ({t_sa:.1f}s)")
+        if p.best_known:
+            print(f"  best known: {p.best_known} "
+                  f"(HA-SSA at {100*r_ha.overall_best_cut/p.best_known:.1f}%)")
+
+
+if __name__ == "__main__":
+    main()

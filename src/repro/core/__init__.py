@@ -4,11 +4,24 @@ Public API:
   IsingModel, MaxCutProblem           — problem substrate (ising.py)
   gset.load                           — benchmark instances (gset.py)
   SSAHyperParams, anneal, solve_maxcut— SSA + HA-SSA (ssa.py)
+  PlateauBackend, make_backend        — plateau engine protocol (engine.py)
   SAHyperParams, anneal_sa            — conventional SA baseline (sa.py)
   PTHyperParams, anneal_pt            — parallel-tempering baseline (pt.py)
   memory                              — Eq.(5)/(6) memory models
 """
 from . import gset, memory  # noqa: F401
+from .engine import (  # noqa: F401
+    BaseResult,
+    DenseBackend,
+    EngineState,
+    PallasBackend,
+    Plateau,
+    PlateauBackend,
+    SparseBackend,
+    make_backend,
+    run_schedule,
+    schedule_plateaus,
+)
 from .ising import IsingModel, MaxCutProblem, fig4_example, ising_energy  # noqa: F401
 from .pt import PTHyperParams, PTResult, anneal_pt  # noqa: F401
 from .sa import SAHyperParams, SAResult, anneal_sa  # noqa: F401

@@ -1,6 +1,6 @@
 """Distributed SSA/HA-SSA: the paper's annealer on the production mesh.
 
-Parallel axes (DESIGN.md §2):
+Parallel axes (DESIGN.md §2.4):
   * replicas (independent trials) → `data`  (the paper runs trials
     sequentially on one FPGA; a pod runs thousands at once),
   * spins → `model` for dense instances (K2000-class): the per-cycle local
@@ -9,9 +9,13 @@ Parallel axes (DESIGN.md §2):
     collective in the loop, exactly the FPGA's "all spins talk to all
     spin-gates" wiring mapped onto ICI.
 
-``anneal_step_lowering`` builds the pjit'd one-iteration step (full
-I0min→I0max sweep with the HA-SSA storage policy fused as a running
-arg-best) for the dry-run; the same step runs for real on any mesh.
+``make_iteration_step`` is built from the plateau engine's
+:func:`repro.core.engine.run_plateau_scan`: one full I0min→I0max iteration
+is the chain of its constant-I0 plateaus, with HA-SSA's storage policy as
+per-plateau eligibility and ONE field contraction per cycle (the same
+single-matvec semantics as every local backend — bit-identical, tested).
+``anneal_step_lowering`` lowers the pjit'd step for the dry-run; the same
+step runs for real on any mesh.
 """
 from __future__ import annotations
 
@@ -21,8 +25,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from .engine import EngineState, run_plateau_scan, schedule_plateaus
 from .rng import xorshift_next_bits
-from .ssa import SSAHyperParams, ssa_cycle_update
+from .ssa import SSAHyperParams
 
 __all__ = ["make_iteration_step", "anneal_step_lowering"]
 
@@ -33,9 +38,7 @@ def make_iteration_step(hp: SSAHyperParams, mesh: Optional[Mesh] = None):
     step(rng (4,T,N) u32, m (T,N) f32, itanh (T,N) i32, best_H (T,) i32,
          best_m (T,N) i8, J (N,N) f32, h (N,) i32) → updated state tuple.
     """
-    sched = hp.schedule("hassa")
-    i0_seq = jnp.asarray(sched.i0_per_cycle, jnp.int32)
-    elig = jnp.asarray(sched.store_mask)
+    plateaus = schedule_plateaus(hp.schedule("hassa"), "i0max")
 
     def constrain(x, spec):
         if mesh is None:
@@ -43,25 +46,23 @@ def make_iteration_step(hp: SSAHyperParams, mesh: Optional[Mesh] = None):
         return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
 
     def step(rng, m, itanh, best_H, best_m, J, h):
-        def cycle(carry, xs):
-            rng, m, itanh, best_H, best_m = carry
-            i0, el = xs
-            field = (h + jnp.matmul(m, J)).astype(jnp.int32)
-            rng, r = xorshift_next_bits(rng)
-            m_new, it_new = ssa_cycle_update(field, itanh, r, i0, hp.n_rnd)
-            m_new = constrain(m_new.astype(jnp.float32), P("data", "model"))
-            field_new = (h + jnp.matmul(m_new, J)).astype(jnp.int32)
-            m_i = m_new.astype(jnp.int32)
-            H = -(jnp.sum(h * m_i, axis=-1) + jnp.sum(m_i * field_new, axis=-1)) // 2
-            better = el & (H < best_H)
-            best_H = jnp.where(better, H, best_H)
-            best_m = jnp.where(better[:, None], m_new.astype(jnp.int8), best_m)
-            return (rng, m_new, it_new, best_H, best_m), None
+        def field_fn(m8):
+            mf = constrain(m8.astype(jnp.float32), P("data", "model"))
+            return (h + jnp.matmul(mf, J)).astype(jnp.int32)
 
-        m = constrain(m, P("data", "model"))
-        carry = (rng, m, itanh, best_H, best_m)
-        carry, _ = jax.lax.scan(cycle, carry, (i0_seq, elig))
-        return carry
+        state = EngineState(rng, m.astype(jnp.int8), itanh, best_H, best_m)
+        for p in plateaus:
+            state, _, _ = run_plateau_scan(
+                field_fn, xorshift_next_bits, h, hp.n_rnd, state, p.i0,
+                length=p.length, eligible=p.eligible,
+            )
+        return (
+            state.noise_state,
+            constrain(state.m.astype(jnp.float32), P("data", "model")),
+            state.itanh,
+            state.best_H,
+            state.best_m,
+        )
 
     return step
 

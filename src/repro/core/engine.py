@@ -1,0 +1,616 @@
+"""Plateau-structured annealing engine (DESIGN.md §2).
+
+The paper's HA-SSA treats the temperature *plateau* — τ cycles at constant
+pseudo-inverse temperature I0 — as the natural unit of execution and of
+storage (Eq. 4–6): the schedule advances plateau-by-plateau, and the BRAM
+write-enable is a *per-plateau* predicate (I0 == I0max), not a per-cycle
+mask.  This module makes the plateau the unit of the software architecture
+too:
+
+* :class:`PlateauBackend` — the pluggable execution protocol
+  (``init_state / run_plateau / finalize``).  A backend advances one
+  constant-I0 plateau of C cycles at a time; everything above it (drivers,
+  the distributed iteration step, benchmarks, the serving batch API) is
+  backend-agnostic.
+* :class:`SparseBackend` / :class:`DenseBackend` — `lax.scan` implementations
+  over one plateau sharing :func:`run_plateau_scan`.  The local-field
+  contraction runs **once per cycle**: the field computed for the Eq. (2a)
+  update of state m(t) is reused to evaluate H(m(t)) for solution tracking
+  and energy traces (the seed implementation evaluated it twice in
+  ``record='best'`` mode).
+* :class:`PallasBackend` — the resident :func:`repro.kernels.ssa_update.ssa_plateau`
+  kernel: one ``pallas_call`` per plateau with J pinned in VMEM, noise
+  pre-generated for the plateau and streamed in.  Per-cycle HBM traffic
+  drops from O(N²) to O(R·N) — the TPU transcription of the FPGA's
+  "everything on-chip" design point.
+
+HA-SSA's storage policy is expressed as per-plateau *eligibility*: a plateau
+with ``eligible=True`` folds the states it produces into the running
+arg-best (record='best') or emits their bit-packed planes (record='traj').
+Under ``storage='i0max'`` only the final plateau of each iteration is
+eligible; ``storage='all'`` recovers conventional SSA.
+
+Tracking semantics (shared by all backends, matching the resident kernel and
+:mod:`repro.kernels.ref`): within a plateau starting at state m(t0), the
+states *produced by this plateau* — m(t0+1) … m(t0+C) — are folded into the
+running best under this plateau's eligibility.  The incoming state m(t0)
+belongs to the previous plateau and is skipped; the final state m(t0+C) is
+folded by one extra field evaluation after the cycle loop.  Chained over a
+schedule this tracks every state exactly once, under the eligibility of the
+plateau that produced it — bit-identical across backends and to the seed's
+flat per-cycle scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .ising import (
+    IsingModel,
+    MaxCutProblem,
+    local_fields_dense,
+    local_fields_sparse,
+)
+from .rng import threefry_noise, xorshift_init, xorshift_next_bits
+from .schedule import Schedule
+
+__all__ = [
+    "BIG_ENERGY",
+    "BaseResult",
+    "EngineState",
+    "Plateau",
+    "PlateauBackend",
+    "SparseBackend",
+    "DenseBackend",
+    "PallasBackend",
+    "BACKENDS",
+    "make_backend",
+    "normalize_problem",
+    "finalize_cut",
+    "schedule_plateaus",
+    "tile_plateaus",
+    "run_plateau_scan",
+    "run_schedule",
+    "pack_spins",
+    "unpack_spins",
+    "packed_words",
+    "ssa_cycle_update",
+    "energy_from_field",
+]
+
+# Sentinel "no solution yet" energy (any real H is far below this).
+BIG_ENERGY = 2**30
+
+
+# ---------------------------------------------------------------------------
+# Bit packing (the 800-bit BRAM word, as uint32 lanes)
+# ---------------------------------------------------------------------------
+def packed_words(n: int) -> int:
+    return (n + 31) // 32
+
+
+def pack_spins(m: jnp.ndarray) -> jnp.ndarray:
+    """Pack ±1 spins [..., N] into uint32 bitplanes [..., ceil(N/32)]."""
+    n = m.shape[-1]
+    nw = packed_words(n)
+    pad = nw * 32 - n
+    bits = (m > 0).astype(jnp.uint32)
+    if pad:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros(bits.shape[:-1] + (pad,), jnp.uint32)], axis=-1
+        )
+    bits = bits.reshape(bits.shape[:-1] + (nw, 32))
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_spins(packed: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Inverse of pack_spins; returns int8 spins in {-1,+1}, shape [..., n]."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (packed[..., None] >> shifts) & jnp.uint32(1)
+    flat = bits.reshape(bits.shape[:-2] + (-1,))[..., :n]
+    return jnp.where(flat == 1, 1, -1).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# The p-bit update (Eq. 2a–2c), shared by every backend and the kernel oracle
+# ---------------------------------------------------------------------------
+def ssa_cycle_update(field, itanh, r, i0, n_rnd):
+    """Elementwise epilogue of one SSA cycle.
+
+    Args:
+      field: int32[..., N]  h_i + Σ_j J_ij m_j(t)      (the matvec part)
+      itanh: int32[..., N]  Itanh_i(t)
+      r:     int32[..., N]  noise in {-1,+1}
+      i0:    int32 scalar   pseudo-inverse temperature I0(t)
+      n_rnd: int            noise magnitude
+    Returns:
+      (m_new int8[...,N], itanh_new int32[...,N])
+    """
+    I = field + n_rnd * r + itanh                       # (2a)
+    itanh_new = jnp.clip(I, -i0, i0 - 1)                # (2b)
+    m_new = jnp.where(itanh_new >= 0, 1, -1).astype(jnp.int8)  # (2c)
+    return m_new, itanh_new
+
+
+def energy_from_field(m, field, h):
+    """H = -(h·m + m·field)/2, exact int32 (field = h + Jm)."""
+    m32 = m.astype(jnp.int32)
+    hm = jnp.sum(h * m32, axis=-1)
+    mf = jnp.sum(m32 * field, axis=-1)
+    return -(hm + mf) // 2
+
+
+# ---------------------------------------------------------------------------
+# Problem / result plumbing shared by the SSA, SA and PT drivers
+# ---------------------------------------------------------------------------
+def normalize_problem(
+    problem: Union[MaxCutProblem, IsingModel],
+) -> Tuple[Optional[MaxCutProblem], IsingModel]:
+    """Split a problem into (maxcut-or-None, IsingModel)."""
+    if isinstance(problem, MaxCutProblem):
+        return problem, problem.to_ising()
+    return None, problem
+
+
+def finalize_cut(best_H, maxcut: Optional[MaxCutProblem]):
+    """Map best Ising energies to the reported objective (cut or -H)."""
+    if maxcut is not None:
+        return (maxcut.w_total - best_H) // 2
+    return -best_H
+
+
+@dataclasses.dataclass
+class BaseResult:
+    """Outcome fields shared by the SSA/HA-SSA, SA and PT drivers."""
+
+    best_cut: np.ndarray          # best objective per trial (cut for maxcut)
+    best_energy: np.ndarray       # Ising energy of the best tracked state
+    best_m: np.ndarray            # spins of the best tracked state
+    energy_mean: Optional[np.ndarray]  # per-cycle mean H over trials
+    energy_min: Optional[np.ndarray]   # per-cycle min H over trials
+
+    @property
+    def overall_best_cut(self) -> int:
+        return int(np.max(self.best_cut))
+
+    @property
+    def mean_best_cut(self) -> float:
+        return float(np.mean(self.best_cut))
+
+
+# ---------------------------------------------------------------------------
+# Plateaus: the schedule, grouped into its natural execution unit
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Plateau:
+    """One constant-I0 run of cycles — HA-SSA's unit of execution/storage.
+
+    ``eligible`` is the storage write-enable for the states this plateau
+    *produces*: under HA-SSA (Eq. 6) only the I0 == I0max plateau asserts it;
+    conventional SSA (Eq. 5) asserts it everywhere.
+    """
+
+    i0: int
+    length: int
+    eligible: bool
+
+
+def _group_runs(i0_seq: np.ndarray, elig_seq: np.ndarray) -> Tuple[Plateau, ...]:
+    out = []
+    start = 0
+    n = len(i0_seq)
+    for k in range(1, n + 1):
+        if k == n or i0_seq[k] != i0_seq[start] or elig_seq[k] != elig_seq[start]:
+            out.append(Plateau(int(i0_seq[start]), k - start, bool(elig_seq[start])))
+            start = k
+    return tuple(out)
+
+
+def schedule_plateaus(sched: Schedule, storage: str = "i0max") -> Tuple[Plateau, ...]:
+    """Group one iteration's per-cycle schedule into plateaus.
+
+    storage='i0max' → HA-SSA eligibility (the BRAM write-enable);
+    storage='all'   → every plateau eligible (conventional SSA).
+    """
+    i0 = np.asarray(sched.i0_per_cycle)
+    if storage == "i0max":
+        elig = np.asarray(sched.store_mask)
+    elif storage == "all":
+        elig = np.ones(len(i0), dtype=bool)
+    else:
+        raise ValueError(f"unknown storage {storage!r}")
+    return _group_runs(i0, elig)
+
+
+def tile_plateaus(plateaus: Sequence[Plateau], total_cycles: int) -> Tuple[Plateau, ...]:
+    """Tile an iteration's plateau list to exactly ``total_cycles`` cycles,
+    truncating the final plateau (conventional-SSA cycle-count duration,
+    paper Fig. 12 mode)."""
+    if not plateaus and total_cycles > 0:
+        raise ValueError("cannot tile an empty plateau sequence")
+    out = []
+    remaining = int(total_cycles)
+    while remaining > 0:
+        for p in plateaus:
+            if remaining <= 0:
+                break
+            take = min(p.length, remaining)
+            out.append(Plateau(p.i0, take, p.eligible))
+            remaining -= take
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# Engine state and the shared one-plateau scan
+# ---------------------------------------------------------------------------
+class EngineState(NamedTuple):
+    """Carry threaded through plateaus; canonical spin dtype is int8 ±1."""
+
+    noise_state: Any         # xorshift (4,T,N) u32 lanes or a threefry key
+    m: jnp.ndarray           # (T, N) int8 spins
+    itanh: jnp.ndarray       # (T, N) int32 Itanh FSM state
+    best_H: jnp.ndarray      # (T,) int32 running best energy
+    best_m: jnp.ndarray      # (T, N) int8 spins of the running best
+
+
+def run_plateau_scan(
+    field_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    noise_step: Callable,
+    h: jnp.ndarray,
+    n_rnd: int,
+    state: EngineState,
+    i0,
+    *,
+    length: int,
+    eligible: bool,
+    track_energy: bool = False,
+    emit: bool = False,
+):
+    """One constant-I0 plateau as a `lax.scan` — ONE contraction per cycle.
+
+    The field computed for the Eq. (2a) update of m(t) doubles as the field
+    needed for H(m(t)); the scan's first step skips best-tracking because
+    m(t0) belongs to the previous plateau, and one epilogue field evaluation
+    folds the final state m(t0+C) — exactly the resident kernel's semantics
+    (kernels/ssa_update.py, kernels/ref.py).
+
+    Returns (state', trace, planes) where trace is (mean_H (C,), min_H (C,))
+    aligned to the produced states m(t0+1..t0+C) when ``track_energy``, and
+    planes is the (C, T, ceil(N/32)) bit-packed trajectory when ``emit``.
+    """
+    i0 = jnp.asarray(i0, jnp.int32)
+    eligible = bool(eligible)
+    track_energy = bool(track_energy)
+    emit = bool(emit)
+    need_H = eligible or track_energy
+
+    def cyc(carry, not_first):
+        ns, m, itanh, best_H, best_m = carry
+        field = field_fn(m)
+        ys = {}
+        if need_H:
+            H = energy_from_field(m, field, h)
+            if eligible:
+                better = not_first & (H < best_H)
+                best_H = jnp.where(better, H, best_H)
+                best_m = jnp.where(better[:, None], m, best_m)
+            if track_energy:
+                ys["mean"] = jnp.mean(H.astype(jnp.float32))
+                ys["min"] = jnp.min(H)
+        ns, r = noise_step(ns)
+        m_new, it_new = ssa_cycle_update(field, itanh, r, i0, n_rnd)
+        if emit:
+            ys["plane"] = pack_spins(m_new)
+        return (ns, m_new, it_new, best_H, best_m), ys
+
+    not_first = jnp.arange(length) > 0
+    carry, ys = jax.lax.scan(cyc, tuple(state), not_first)
+    ns, m, itanh, best_H, best_m = carry
+
+    trace = None
+    if need_H:
+        # Epilogue: the plateau's final state needs one extra field.
+        field = field_fn(m)
+        H = energy_from_field(m, field, h)
+        if eligible:
+            better = H < best_H
+            best_H = jnp.where(better, H, best_H)
+            best_m = jnp.where(better[:, None], m, best_m)
+        if track_energy:
+            trace = (
+                jnp.concatenate(
+                    [ys["mean"][1:], jnp.mean(H.astype(jnp.float32))[None]]
+                ),
+                jnp.concatenate([ys["min"][1:], jnp.min(H)[None]]),
+            )
+    planes = ys["plane"] if emit else None
+    return EngineState(ns, m, itanh, best_H, best_m), trace, planes
+
+
+# ---------------------------------------------------------------------------
+# Backends
+# ---------------------------------------------------------------------------
+class PlateauBackend:
+    """The pluggable execution protocol: init_state / run_plateau / finalize.
+
+    Subclasses provide the local-field contraction (and may override the
+    whole plateau execution, as the Pallas backend does).  Everything above
+    this protocol — the `anneal` driver, the distributed iteration step, the
+    benchmarks and the batch API — is backend-agnostic.
+    """
+
+    name = "abstract"
+
+    def __init__(
+        self,
+        model: IsingModel,
+        *,
+        n_trials: int,
+        n_rnd: int = 2,
+        noise: str = "threefry",
+    ):
+        self.model = model
+        self.n_trials = int(n_trials)
+        self.n_rnd = int(n_rnd)
+        self.noise = noise
+        self.h = jnp.asarray(model.h, jnp.int32)
+        lanes = (self.n_trials, model.n)
+        if noise == "xorshift":
+            self._noise_init = lambda seed: xorshift_init(seed, lanes)
+            self._noise_step = xorshift_next_bits
+        elif noise == "threefry":
+            self._noise_init = lambda seed: jax.random.PRNGKey(seed)
+
+            def step(key):
+                key, sub = jax.random.split(key)
+                return key, threefry_noise(sub, lanes)
+
+            self._noise_step = step
+        else:
+            raise ValueError(f"unknown noise {noise!r}")
+
+    # -- protocol ---------------------------------------------------------
+    def init_state(self, seed: int) -> EngineState:
+        """Random ±1 start from the first noise draw (shared stream layout)."""
+        ns = self._noise_init(seed)
+        ns, r0 = self._noise_step(ns)
+        m0 = r0.astype(jnp.int8)
+        itanh0 = jnp.where(m0 > 0, 0, -1).astype(jnp.int32)
+        best_H = jnp.full((self.n_trials,), BIG_ENERGY, jnp.int32)
+        return EngineState(ns, m0, itanh0, best_H, m0)
+
+    def run_plateau(
+        self,
+        state: EngineState,
+        i0,
+        *,
+        length: int,
+        eligible: bool,
+        track_energy: bool = False,
+        emit: bool = False,
+    ):
+        raise NotImplementedError
+
+    def finalize(self, state: EngineState) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Extract (best_H, best_m) after the last plateau."""
+        return state.best_H, state.best_m
+
+    # -- shared scan implementation --------------------------------------
+    def _field(self, m: jnp.ndarray) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def _run_plateau_scan(self, state, i0, *, length, eligible, track_energy, emit):
+        return run_plateau_scan(
+            self._field,
+            self._noise_step,
+            self.h,
+            self.n_rnd,
+            state,
+            i0,
+            length=length,
+            eligible=eligible,
+            track_energy=track_energy,
+            emit=emit,
+        )
+
+
+class SparseBackend(PlateauBackend):
+    """Padded-adjacency gather field (4/8-regular G-set-class instances)."""
+
+    name = "sparse"
+
+    def __init__(self, model: IsingModel, **kw):
+        super().__init__(model, **kw)
+        _, self.nbr_idx, self.nbr_w = model.device_arrays()
+
+    def _field(self, m):
+        return local_fields_sparse(m.astype(jnp.int32), self.h, self.nbr_idx, self.nbr_w)
+
+    def run_plateau(self, state, i0, *, length, eligible, track_energy=False, emit=False):
+        return self._run_plateau_scan(
+            state, i0, length=length, eligible=eligible,
+            track_energy=track_energy, emit=emit,
+        )
+
+
+class DenseBackend(PlateauBackend):
+    """(T,N)·(N,N) MXU matmul field (K2000-class dense instances)."""
+
+    name = "dense"
+
+    def __init__(self, model: IsingModel, *, j_dtype=jnp.float32, **kw):
+        super().__init__(model, **kw)
+        self.J = jnp.asarray(model.dense_J(), j_dtype)
+
+    def _field(self, m):
+        return local_fields_dense(m, self.h, self.J)
+
+    def run_plateau(self, state, i0, *, length, eligible, track_energy=False, emit=False):
+        return self._run_plateau_scan(
+            state, i0, length=length, eligible=eligible,
+            track_energy=track_energy, emit=emit,
+        )
+
+
+class PallasBackend(PlateauBackend):
+    """The resident plateau kernel: one `pallas_call` per plateau.
+
+    J is pinned in VMEM for all C cycles of the plateau; the plateau's noise
+    is pre-generated ((C, T, N) int8) and streamed in, and only final state +
+    running best come back — per-cycle HBM traffic is O(T·N), not O(N²).
+
+    Per-cycle *outputs* (energy traces, trajectory planes) are the one thing
+    the resident kernel deliberately does not produce; plateaus that need
+    them (record='traj' store phases, track_energy runs) fall back to the
+    bit-identical scan path over the Pallas `local_field` kernel.  The
+    production solve path — record='best', track_energy=False — is entirely
+    resident.
+    """
+
+    name = "pallas"
+
+    def __init__(
+        self,
+        model: IsingModel,
+        *,
+        j_dtype=jnp.float32,
+        block_r: int = 8,
+        interpret: Optional[bool] = None,
+        **kw,
+    ):
+        super().__init__(model, **kw)
+        # Lazy import: keeps repro.core importable without the kernels pkg.
+        from repro.kernels import ops as kops
+        from repro.kernels import ssa_update as kssa
+
+        self._kops = kops
+        self._kssa = kssa
+        self.J = jnp.asarray(model.dense_J(), j_dtype)
+        self.block_r = int(block_r)
+        self.interpret = interpret
+
+    def _field(self, m):
+        return self._kops.local_field(m.astype(jnp.float32), self.h, self.J)
+
+    def _pregen_noise(self, ns, length: int):
+        def draw(ns, _):
+            ns, r = self._noise_step(ns)
+            return ns, r.astype(jnp.int8)
+
+        return jax.lax.scan(draw, ns, None, length=length)
+
+    def run_plateau(self, state, i0, *, length, eligible, track_energy=False, emit=False):
+        if emit or track_energy:
+            return self._run_plateau_scan(
+                state, i0, length=length, eligible=eligible,
+                track_energy=track_energy, emit=emit,
+            )
+        ns, noise = self._pregen_noise(state.noise_state, length)
+        m_o, it_o, bh_o, bm_o = self._kssa.ssa_plateau(
+            state.m.astype(jnp.float32),
+            state.itanh,
+            self.J,
+            self.h,
+            noise,
+            jnp.asarray(i0, jnp.int32),
+            state.best_H,
+            state.best_m,
+            n_rnd=self.n_rnd,
+            eligible=bool(eligible),
+            block_r=self.block_r,
+            interpret=self.interpret,
+        )
+        return EngineState(ns, m_o.astype(jnp.int8), it_o, bh_o, bm_o), None, None
+
+
+BACKENDS = {
+    "sparse": SparseBackend,
+    "dense": DenseBackend,
+    "pallas": PallasBackend,
+}
+
+
+def make_backend(
+    backend: Union[str, PlateauBackend, type],
+    model: IsingModel,
+    *,
+    n_trials: int,
+    n_rnd: int = 2,
+    noise: str = "threefry",
+    **opts,
+) -> PlateauBackend:
+    """Resolve a backend spec: name, PlateauBackend subclass, or instance."""
+    if isinstance(backend, PlateauBackend):
+        if backend.n_trials != int(n_trials) or backend.n_rnd != int(n_rnd):
+            raise ValueError(
+                f"backend instance was built for n_trials={backend.n_trials}, "
+                f"n_rnd={backend.n_rnd}; caller wants n_trials={n_trials}, "
+                f"n_rnd={n_rnd}"
+            )
+        return backend
+    if isinstance(backend, type) and issubclass(backend, PlateauBackend):
+        cls = backend
+    else:
+        try:
+            cls = BACKENDS[backend]
+        except (KeyError, TypeError):
+            raise ValueError(
+                f"unknown backend {backend!r}; known: {sorted(BACKENDS)}"
+            ) from None
+    return cls(model, n_trials=n_trials, n_rnd=n_rnd, noise=noise, **opts)
+
+
+# ---------------------------------------------------------------------------
+# The backend-agnostic schedule driver
+# ---------------------------------------------------------------------------
+def run_schedule(
+    backend: PlateauBackend,
+    plateaus: Sequence[Plateau],
+    state: EngineState,
+    *,
+    record: str = "best",
+    track_energy: bool = False,
+):
+    """Chain ``run_plateau`` over a plateau sequence (traceable).
+
+    record='best': eligible plateaus fold their states into the running
+    arg-best on the fly (the production path — what the FPGA cannot afford
+    and the TPU gets almost for free next to the field contraction).
+
+    record='traj': eligible plateaus emit bit-packed spin planes instead
+    (the FPGA's UART-shipped trajectory); best-tracking is left to the
+    caller's post-scan over the planes.
+
+    Returns (state, trace, planes): trace = (mean_H, min_H) concatenated
+    over all cycles when track_energy, planes concatenated over eligible
+    plateaus when record='traj'.
+    """
+    tr_mean, tr_min, planes = [], [], []
+    for p in plateaus:
+        if record == "traj":
+            state, _, pl = backend.run_plateau(
+                state, p.i0, length=p.length, eligible=False,
+                track_energy=False, emit=p.eligible,
+            )
+            if pl is not None:
+                planes.append(pl)
+        elif record == "best":
+            state, tr, _ = backend.run_plateau(
+                state, p.i0, length=p.length, eligible=p.eligible,
+                track_energy=track_energy, emit=False,
+            )
+            if tr is not None:
+                tr_mean.append(tr[0])
+                tr_min.append(tr[1])
+        else:
+            raise ValueError(f"unknown record {record!r}")
+    trace = (
+        (jnp.concatenate(tr_mean), jnp.concatenate(tr_min)) if tr_mean else None
+    )
+    planes_out = jnp.concatenate(planes, axis=0) if planes else None
+    return state, trace, planes_out

@@ -85,23 +85,29 @@ class IsingModel:
             raise ValueError(f"edges must be (E,2), got {edges.shape}")
         if len(weights) != len(edges):
             raise ValueError("weights/edges length mismatch")
-        deg = np.zeros(n, dtype=np.int64)
-        for i, j in edges:
-            if i == j:
-                raise ValueError("self-loops are not Ising couplings")
-            deg[i] += 1
-            deg[j] += 1
+        if len(edges) and np.any(edges[:, 0] == edges[:, 1]):
+            raise ValueError("self-loops are not Ising couplings")
+        # Vectorized bucketing: each undirected edge contributes two directed
+        # half-edges.  Flattening (E,2) row-major interleaves them exactly in
+        # the order a per-edge fill would visit (i before j within an edge),
+        # so a stable sort by source vertex reproduces the sequential slot
+        # assignment — K2000-class instances (~2M edges) build in well under
+        # a second instead of minutes.
+        e32 = edges.astype(np.int32)                  # int32: radix-sortable
+        src = e32.reshape(-1)                         # i0, j0, i1, j1, …
+        dst = e32[:, ::-1].reshape(-1)                # j0, i0, j1, i1, …
+        w2 = np.repeat(weights.astype(np.int32), 2)
+        deg = np.bincount(src, minlength=n)
         max_deg = int(deg.max()) if len(edges) else 1
-        nbr_idx = np.tile(np.arange(n, dtype=np.int64)[:, None], (1, max_deg))
-        nbr_w = np.zeros((n, max_deg), dtype=np.int64)
-        cursor = np.zeros(n, dtype=np.int64)
-        for (i, j), w in zip(edges, weights):
-            nbr_idx[i, cursor[i]] = j
-            nbr_w[i, cursor[i]] = w
-            cursor[i] += 1
-            nbr_idx[j, cursor[j]] = i
-            nbr_w[j, cursor[j]] = w
-            cursor[j] += 1
+        nbr_idx = np.tile(np.arange(n, dtype=np.int32)[:, None], (1, max_deg))
+        nbr_w = np.zeros((n, max_deg), dtype=np.int32)
+        if len(edges):
+            order = np.argsort(src, kind="stable")
+            ss, dd, ww = src[order], dst[order], w2[order]
+            starts = np.concatenate([[0], np.cumsum(deg)[:-1]])
+            slot = (np.arange(len(ss)) - np.repeat(starts, deg)).astype(np.int64)
+            nbr_idx[ss, slot] = dd
+            nbr_w[ss, slot] = ww
         hh = np.zeros(n, dtype=np.int64) if h is None else np.asarray(h, np.int64)
         model = IsingModel(
             n=n,

@@ -5,6 +5,11 @@ R replicas run Metropolis sweeps at a fixed ladder of temperatures; every
 with probability min(1, exp((1/T_a - 1/T_b)(H_a - H_b))).  This is standard
 PT [27]; IPAPT [11] is a hardware approximation of it — the algorithmic
 baseline is what the paper compares solution-quality/time against.
+
+The driver shares the engine's problem/result plumbing
+(:func:`repro.core.engine.normalize_problem`,
+:class:`repro.core.engine.BaseResult`) so PT results are interchangeable
+with HA-SSA's and SA's in the benchmarks and the batch API.
 """
 from __future__ import annotations
 
@@ -15,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .engine import BaseResult, finalize_cut, normalize_problem
 from .ising import IsingModel, MaxCutProblem
 
 __all__ = ["PTHyperParams", "PTResult", "anneal_pt"]
@@ -30,11 +36,9 @@ class PTHyperParams:
 
 
 @dataclasses.dataclass
-class PTResult:
-    best_cut: int
-    best_energy: int
-    best_m: np.ndarray
-    energy_min: Optional[np.ndarray]
+class PTResult(BaseResult):
+    """PT reports one chain-best; scalars, but the BaseResult contract holds."""
+
     hp: PTHyperParams
 
 
@@ -45,16 +49,10 @@ def anneal_pt(
     *,
     track_energy: bool = True,
 ) -> PTResult:
-    if isinstance(problem, MaxCutProblem):
-        maxcut: Optional[MaxCutProblem] = problem
-        model = problem.to_ising()
-    else:
-        maxcut = None
-        model = problem
+    maxcut, model = normalize_problem(problem)
 
     h, nbr_idx, nbr_w = model.device_arrays()
     n, R = model.n, hp.n_replicas
-    w_total = maxcut.w_total if maxcut is not None else 0
     # Geometric temperature ladder (hot→cold across replicas).
     temps = jnp.asarray(
         hp.t_max * (hp.t_min / hp.t_max) ** (np.arange(R) / max(R - 1, 1)),
@@ -90,12 +88,10 @@ def anneal_pt(
         u = jax.random.uniform(key, (R - 1,), minval=1e-12)
         do_swap = pair_mask & (jnp.log(u) < dB * dE)
         perm = jnp.arange(R)
-        lo = jnp.where(do_swap, a + 1, a)
         perm = perm.at[a].set(jnp.where(do_swap, perm[a + 1], perm[a]))
         perm = perm.at[a + 1].set(jnp.where(do_swap, a, a + 1))
         # note: adjacent disjoint pairs (same parity) never overlap, so the
         # two scatter updates above are consistent.
-        del lo
         return m[perm], H[perm]
 
     rounds = hp.n_cycles // hp.swap_interval
@@ -128,11 +124,11 @@ def anneal_pt(
 
     best_m, best_H, mins = run()
     best_H = int(best_H)
-    best_cut = (w_total - best_H) // 2 if maxcut is not None else -best_H
     return PTResult(
-        best_cut=int(best_cut),
+        best_cut=int(finalize_cut(best_H, maxcut)),
         best_energy=best_H,
         best_m=np.asarray(best_m),
+        energy_mean=None,
         energy_min=None if not track_energy else np.asarray(mins),
         hp=hp,
     )

@@ -7,7 +7,10 @@ exp(-ΔH / T).  Temperature decays geometrically from 10 to 1e-7 over the run
 
 ΔH for flipping spin i:  ΔH = 2·m_i·(h_i + Σ_j J_ij m_j) — a single padded-
 adjacency gather, so one cycle is O(max_deg) per trial.  Trials are batched
-on a leading axis exactly as in :mod:`.ssa`.
+on a leading axis exactly as in :mod:`.ssa`, and the driver shares the
+engine's problem/result plumbing (:func:`repro.core.engine.normalize_problem`,
+:class:`repro.core.engine.BaseResult`) so SA results are interchangeable with
+HA-SSA's in the benchmarks and the batch API.
 """
 from __future__ import annotations
 
@@ -18,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .engine import BaseResult, finalize_cut, normalize_problem
 from .ising import IsingModel, MaxCutProblem
 from .schedule import sa_temperature_ladder
 
@@ -33,21 +37,8 @@ class SAHyperParams:
 
 
 @dataclasses.dataclass
-class SAResult:
-    best_cut: np.ndarray            # (T,)
-    best_energy: np.ndarray         # (T,)
-    best_m: np.ndarray              # (T, N)
-    energy_mean: Optional[np.ndarray]  # (cycles,)
-    energy_min: Optional[np.ndarray]   # (cycles,)
+class SAResult(BaseResult):
     hp: SAHyperParams
-
-    @property
-    def overall_best_cut(self) -> int:
-        return int(np.max(self.best_cut))
-
-    @property
-    def mean_best_cut(self) -> float:
-        return float(np.mean(self.best_cut))
 
 
 def anneal_sa(
@@ -58,22 +49,15 @@ def anneal_sa(
     track_energy: bool = True,
     temperatures: Optional[np.ndarray] = None,  # override ladder (Fig. 12 mode)
 ) -> SAResult:
-    if isinstance(problem, MaxCutProblem):
-        maxcut: Optional[MaxCutProblem] = problem
-        model = problem.to_ising()
-    else:
-        maxcut = None
-        model = problem
+    maxcut, model = normalize_problem(problem)
 
     h, nbr_idx, nbr_w = model.device_arrays()
     n, T = model.n, hp.n_trials
-    w_total = maxcut.w_total if maxcut is not None else 0
     temps = jnp.asarray(
         sa_temperature_ladder(hp.t_start, hp.t_end, hp.n_cycles)
         if temperatures is None
         else np.asarray(temperatures, np.float32)
     )
-    n_cycles = int(temps.shape[0])
 
     def energy(m):
         neigh = jnp.take(m, nbr_idx, axis=-1)
@@ -120,10 +104,9 @@ def anneal_sa(
 
     best_H, best_m, trace = run()
     best_H = np.asarray(best_H)
-    best_cut = (w_total - best_H) // 2 if maxcut is not None else -best_H
     e_mean, e_min = (trace if track_energy else (None, None))
     return SAResult(
-        best_cut=np.asarray(best_cut),
+        best_cut=np.asarray(finalize_cut(best_H, maxcut)),
         best_energy=best_H,
         best_m=np.asarray(best_m),
         energy_mean=None if e_mean is None else np.asarray(e_mean),

@@ -17,20 +17,31 @@ The *only* difference between SSA and HA-SSA is outside this update path:
 * duration control — HA-SSA counts iterations (complete I0min→I0max sweeps),
   never truncating the final sweep.
 
-TPU adaptation (see DESIGN.md §2): trials are batched on a replica axis so
-the per-cycle local-field computation is a (T,N)·(N,N) MXU matmul for dense
-problems or a padded-adjacency gather for sparse ones; the Itanh FSM is a
-fused elementwise epilogue.  The HA-SSA storage policy becomes *structural*:
-the `lax.scan` over an iteration is split into a heat phase (no outputs) and
-a store phase (bit-packed outputs), so the XLA output buffer itself is
-`steps×` smaller — the BRAM-depth saving, as HBM-buffer shape.
+TPU adaptation (see DESIGN.md §2): :func:`anneal` is a thin driver over the
+plateau-structured engine in :mod:`repro.core.engine`.  The schedule is
+grouped into constant-I0 plateaus — HA-SSA's unit of execution and storage —
+and each plateau is advanced by a pluggable :class:`~repro.core.engine.PlateauBackend`:
+
+* ``backend='sparse'`` — padded-adjacency gather field, `lax.scan` per plateau;
+* ``backend='dense'``  — (T,N)·(N,N) MXU matmul field, `lax.scan` per plateau;
+* ``backend='pallas'`` — the resident ``ssa_plateau`` kernel: one
+  ``pallas_call`` per plateau with J pinned in VMEM (DESIGN.md §2.3).
+
+All three advance the field contraction **once per cycle** (the field used
+for the Eq. 2a update of m(t) is reused for H(m(t))) and produce bit-identical
+spin trajectories from the same noise stream — property-tested.
+
+The HA-SSA storage policy is *structural*: it is per-plateau eligibility (the
+FPGA's I0 == I0max write-enable), so in ``record='traj'`` mode the XLA output
+buffer itself is `steps×` smaller — the BRAM-depth saving, as HBM-buffer
+shape (DESIGN.md §4).
 
 Two recording modes:
 
 * ``record='traj'`` — materialize the stored bitplanes (tests, small runs;
   this is what the FPGA ships over UART).
 * ``record='best'`` — running arg-best *restricted to storage-eligible
-  cycles*, so HA-SSA's reported solution is computed only from states it
+  plateaus*, so HA-SSA's reported solution is computed only from states it
   would have stored.  On TPU, evaluating the cut on the fly is nearly free
   next to the field matmul (compute >> memory), which is exactly the
   opposite trade the FPGA makes — noted in DESIGN.md §8.
@@ -38,15 +49,26 @@ Two recording modes:
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Optional, Tuple, Union
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .ising import IsingModel, MaxCutProblem, local_fields_dense, local_fields_sparse
-from .rng import threefry_noise, xorshift_init, xorshift_next_bits
+from .engine import (
+    BaseResult,
+    finalize_cut,
+    make_backend,
+    normalize_problem,
+    pack_spins,
+    packed_words,
+    run_schedule,
+    schedule_plateaus,
+    ssa_cycle_update,
+    tile_plateaus,
+    unpack_spins,
+)
+from .ising import IsingModel, MaxCutProblem, ising_energy
 from .schedule import Schedule, hassa_schedule, n_temp_steps, ssa_schedule
 
 __all__ = [
@@ -93,126 +115,21 @@ class SSAHyperParams:
 
 
 @dataclasses.dataclass
-class AnnealResult:
-    """Outcome of one annealing run over a batch of trials."""
+class AnnealResult(BaseResult):
+    """Outcome of one annealing run over a batch of trials.
 
-    best_cut: np.ndarray          # (T,) best cut per trial (maxcut) — under storage policy
-    best_energy: np.ndarray       # (T,) Ising energy of the best stored state
-    best_m: np.ndarray            # (T, N) int8 spins of the best stored state
-    energy_mean: Optional[np.ndarray]  # (total_cycles,) mean H over trials per cycle
-    energy_min: Optional[np.ndarray]   # (total_cycles,) min H over trials per cycle
+    Field conventions are shared with SAResult/PTResult via
+    :class:`repro.core.engine.BaseResult`.
+    """
+
     traj: Optional[np.ndarray]    # (m_shot, stored_cycles, T, Nw) uint32 bitplanes
     stored_bits_per_iter: int     # N × stored_cycles — the Eq.(5)/(6) witness
     hp: SSAHyperParams
 
-    @property
-    def overall_best_cut(self) -> int:
-        return int(np.max(self.best_cut))
-
-    @property
-    def mean_best_cut(self) -> float:
-        return float(np.mean(self.best_cut))
-
 
 # ---------------------------------------------------------------------------
-# Bit packing (the 800-bit BRAM word, as uint32 lanes)
+# Main annealer: a thin driver over the plateau engine
 # ---------------------------------------------------------------------------
-def packed_words(n: int) -> int:
-    return (n + 31) // 32
-
-
-def pack_spins(m: jnp.ndarray) -> jnp.ndarray:
-    """Pack ±1 spins [..., N] into uint32 bitplanes [..., ceil(N/32)]."""
-    n = m.shape[-1]
-    nw = packed_words(n)
-    pad = nw * 32 - n
-    bits = (m > 0).astype(jnp.uint32)
-    if pad:
-        bits = jnp.concatenate(
-            [bits, jnp.zeros(bits.shape[:-1] + (pad,), jnp.uint32)], axis=-1
-        )
-    bits = bits.reshape(bits.shape[:-1] + (nw, 32))
-    shifts = jnp.arange(32, dtype=jnp.uint32)
-    return jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)
-
-
-def unpack_spins(packed: jnp.ndarray, n: int) -> jnp.ndarray:
-    """Inverse of pack_spins; returns int8 spins in {-1,+1}, shape [..., n]."""
-    shifts = jnp.arange(32, dtype=jnp.uint32)
-    bits = (packed[..., None] >> shifts) & jnp.uint32(1)
-    flat = bits.reshape(bits.shape[:-2] + (-1,))[..., :n]
-    return jnp.where(flat == 1, 1, -1).astype(jnp.int8)
-
-
-# ---------------------------------------------------------------------------
-# The p-bit update (Eq. 2a–2c), factored so kernels/ref can share it
-# ---------------------------------------------------------------------------
-def ssa_cycle_update(field, itanh, r, i0, n_rnd):
-    """Elementwise epilogue of one SSA cycle.
-
-    Args:
-      field: int32[..., N]  h_i + Σ_j J_ij m_j(t)      (the matvec part)
-      itanh: int32[..., N]  Itanh_i(t)
-      r:     int32[..., N]  noise in {-1,+1}
-      i0:    int32 scalar   pseudo-inverse temperature I0(t)
-      n_rnd: int            noise magnitude
-    Returns:
-      (m_new int8[...,N], itanh_new int32[...,N])
-    """
-    I = field + n_rnd * r + itanh                       # (2a)
-    itanh_new = jnp.clip(I, -i0, i0 - 1)                # (2b)
-    m_new = jnp.where(itanh_new >= 0, 1, -1).astype(jnp.int8)  # (2c)
-    return m_new, itanh_new
-
-
-def _energy_from_field(m, field, h):
-    """H = -(h·m + m·field)/2, exact int32 (field = h + Jm)."""
-    m32 = m.astype(jnp.int32)
-    hm = jnp.sum(h * m32, axis=-1)
-    mf = jnp.sum(m32 * field, axis=-1)
-    return -(hm + mf) // 2
-
-
-# ---------------------------------------------------------------------------
-# Main annealer
-# ---------------------------------------------------------------------------
-def _make_field_fn(model: IsingModel, backend: str):
-    h, nbr_idx, nbr_w = model.device_arrays()
-    if backend == "sparse":
-        return lambda m: local_fields_sparse(m.astype(jnp.int32), h, nbr_idx, nbr_w), h
-    if backend == "dense":
-        J = jnp.asarray(model.dense_J(), jnp.float32)
-        return lambda m: local_fields_dense(m, h, J), h
-    if backend == "pallas":
-        from repro.kernels import ops as kops  # lazy: optional dependency path
-
-        J = jnp.asarray(model.dense_J(), jnp.float32)
-        return lambda m: kops.local_field(m, h, J), h
-    raise ValueError(f"unknown backend {backend!r}")
-
-
-def _make_noise_fn(noise: str, seed: int, lanes: Tuple[int, int]):
-    if noise == "xorshift":
-        state0 = xorshift_init(seed, lanes)
-        return state0, xorshift_next_bits
-    if noise == "threefry":
-        key0 = jax.random.PRNGKey(seed)
-
-        def step(key):
-            key, sub = jax.random.split(key)
-            return key, threefry_noise(sub, lanes)
-
-        return key0, step
-    raise ValueError(f"unknown noise {noise!r}")
-
-
-def _init_state(noise_state, noise_fn, n_trials, n):
-    noise_state, r0 = noise_fn(noise_state)
-    m0 = r0.astype(jnp.int8)  # random ±1
-    itanh0 = jnp.where(m0 > 0, 0, -1).astype(jnp.int32)
-    return noise_state, m0, itanh0
-
-
 def anneal(
     problem: Union[MaxCutProblem, IsingModel],
     hp: SSAHyperParams = SSAHyperParams(),
@@ -220,11 +137,12 @@ def anneal(
     *,
     storage: str = "i0max",        # 'i0max' (HA-SSA) | 'all' (conventional SSA)
     record: str = "best",          # 'best' | 'traj'
-    backend: str = "sparse",       # 'sparse' | 'dense' | 'pallas'
+    backend="sparse",              # 'sparse' | 'dense' | 'pallas' | PlateauBackend
     noise: str = "threefry",       # 'threefry' | 'xorshift'
     track_energy: bool = True,
     schedule_kind: str = "hassa",  # 'hassa' Eq.(4) | 'ssa' Eq.(3)
     total_cycles: Optional[int] = None,  # cycle-count duration (Fig. 12 mode)
+    backend_opts: Optional[dict] = None,  # extra backend kwargs (block_r, …)
 ) -> AnnealResult:
     """Run SSA/HA-SSA on a MAX-CUT or raw Ising instance.
 
@@ -233,124 +151,127 @@ def anneal(
     update path is shared, so with equal hyperparameters and the same noise
     stream the two produce bit-identical spin sequences (Sec. III-A, V-A) —
     property-tested.
+
+    The hot loop iterates ``m_shot × steps`` plateaus over the selected
+    backend; ``backend='pallas'`` executes each plateau as a single resident
+    ``pallas_call``.  Per-cycle energy traces (``track_energy``) and
+    trajectory planes (``record='traj'``) need per-cycle outputs, which the
+    resident kernel does not produce — those plateaus run the bit-identical
+    scan path instead.
     """
-    if isinstance(problem, MaxCutProblem):
-        maxcut: Optional[MaxCutProblem] = problem
-        model = problem.to_ising()
-    else:
-        maxcut = None
-        model = problem
-
+    maxcut, model = normalize_problem(problem)
     sched = hp.schedule(schedule_kind)
-    field_fn, h = _make_field_fn(model, backend)
-    lanes = (hp.n_trials, model.n)
-    noise_state0, noise_fn = _make_noise_fn(noise, seed, lanes)
-    w_total = maxcut.w_total if maxcut is not None else 0
-
-    i0_all = jnp.asarray(sched.i0_per_cycle, jnp.int32)
-    mask_all = (
-        jnp.asarray(sched.store_mask) if storage == "i0max"
-        else jnp.ones_like(jnp.asarray(sched.store_mask))
+    bk = make_backend(
+        backend, model, n_trials=hp.n_trials, n_rnd=hp.n_rnd, noise=noise,
+        **(backend_opts or {}),
     )
-    stored_per_iter = int(np.sum(np.asarray(mask_all)))
+    plateaus = schedule_plateaus(sched, storage)
+    stored_per_iter = sum(p.length for p in plateaus if p.eligible)
 
-    def cycle(carry, xs):
-        noise_state, m, itanh = carry
-        i0, eligible = xs
-        field = field_fn(m)
-        noise_state, r = noise_fn(noise_state)
-        m_new, itanh_new = ssa_cycle_update(field, itanh, r, i0, hp.n_rnd)
-        # energy of the *new* state needs the new field; reuse next cycle's
-        # matvec instead: report H(m_new) lazily by computing field(m_new)
-        # only when tracking.  (Cheap relative to clarity at CPU scale; the
-        # Pallas path fuses it.)
-        return (noise_state, m_new, itanh_new), (m_new, eligible)
+    if record == "traj":
+        # Iteration-structured: heat plateaus emit nothing; eligible plateaus
+        # emit bit-packed planes → the output buffer is structurally
+        # (stored/cpi)× smaller, mirroring the BRAM depth saving.
+        hh, nbr_idx, nbr_w = model.device_arrays()
 
-    def run():
-        noise_state, m0, itanh0 = _init_state(noise_state0, noise_fn, hp.n_trials, model.n)
+        def run():
+            state = bk.init_state(seed)
 
-        if record == "traj":
-            # Iteration-structured: heat phase emits nothing; store phase
-            # emits bit-packed planes → output buffer is structurally
-            # (stored/cpi)× smaller, mirroring the BRAM depth saving.
-            heat_len = int(np.sum(~np.asarray(mask_all)))
-            i0_heat, i0_store = i0_all[:heat_len], i0_all[heat_len:]
+            def iteration(st, _):
+                st, _, planes = run_schedule(bk, plateaus, st, record="traj")
+                return st, planes
 
-            def cyc_nostore(carry, i0):
-                new_carry, _ = cycle(carry, (i0, False))
-                return new_carry, None
-
-            def cyc_store(carry, i0):
-                new_carry, (m_new, _) = cycle(carry, (i0, True))
-                return new_carry, pack_spins(m_new)
-
-            def iteration(carry, _):
-                carry, _ = jax.lax.scan(cyc_nostore, carry, i0_heat)
-                carry, planes = jax.lax.scan(cyc_store, carry, i0_store)
-                return carry, planes
-
-            carry = (noise_state, m0, itanh0)
-            carry, traj = jax.lax.scan(iteration, carry, None, length=hp.m_shot)
+            state, traj = jax.lax.scan(iteration, state, None, length=hp.m_shot)
             # Solution = best stored state, scanned outside the hot loop.
             flat = traj.reshape(-1, hp.n_trials, packed_words(model.n))
             spins = unpack_spins(flat, model.n)  # (S, T, N)
-            from .ising import ising_energy
-
-            hh, nbr_idx, nbr_w = model.device_arrays()
             H = ising_energy(spins.astype(jnp.int32), hh, nbr_idx, nbr_w)  # (S, T)
             if maxcut is not None:
-                cuts = (w_total - H) // 2
-                idx = jnp.argmax(cuts, axis=0)
+                idx = jnp.argmax((maxcut.w_total - H) // 2, axis=0)
             else:
                 idx = jnp.argmin(H, axis=0)
             tt = jnp.arange(hp.n_trials)
             best_m = spins[idx, tt]
             best_H = H[idx, tt]
-            best_cut = ((w_total - best_H) // 2) if maxcut is not None else -best_H
-            return best_cut, best_H, best_m, None, None, traj
+            return best_H, best_m, traj
 
-        # record == 'best': flat scan over all cycles with running arg-best
-        # restricted to storage-eligible cycles.  Supports cycle-count
-        # duration control (Fig. 12 conventional-SSA mode).
+        best_H, best_m, traj = jax.jit(run)()
+        e_mean = e_min = None
+    else:
+        if record != "best":
+            raise ValueError(f"unknown record {record!r}")
         if total_cycles is None:
-            i0_seq = jnp.tile(i0_all, hp.m_shot)
-            el_seq = jnp.tile(mask_all, hp.m_shot)
+            # Iteration-aligned: scan the per-iteration plateau chain m_shot×.
+            def run():
+                state = bk.init_state(seed)
+
+                def iteration(st, _):
+                    st, trace, _ = run_schedule(
+                        bk, plateaus, st, record="best", track_energy=track_energy
+                    )
+                    return st, trace
+
+                state, trace = jax.lax.scan(
+                    iteration, state, None, length=hp.m_shot
+                )
+                best_H, best_m = bk.finalize(state)
+                return best_H, best_m, trace
         else:
-            reps = -(-total_cycles // sched.cycles_per_iter)
-            i0_seq = jnp.tile(i0_all, reps)[:total_cycles]
-            el_seq = jnp.tile(mask_all, reps)[:total_cycles]
+            # Cycle-count duration control: scan the full iterations, then
+            # chain the truncated tail's plateaus (keeps the compiled program
+            # one iteration body + tail, not total_cycles/τ unrolled scans).
+            cpi = sched.cycles_per_iter
+            full_iters, rem = divmod(int(total_cycles), cpi)
+            tail = tile_plateaus(plateaus, rem) if rem else ()
 
-        hh, nbr_idx, nbr_w = model.device_arrays()
+            def run():
+                state = bk.init_state(seed)
+                traces = []
+                if full_iters:
+                    def iteration(st, _):
+                        st, trace, _ = run_schedule(
+                            bk, plateaus, st, record="best",
+                            track_energy=track_energy,
+                        )
+                        return st, trace
 
-        def cyc(carry, xs):
-            noise_state, m, itanh, best_H, best_m = carry
-            i0, eligible = xs
-            field = field_fn(m)
-            noise_state, r = noise_fn(noise_state)
-            m_new, itanh_new = ssa_cycle_update(field, itanh, r, i0, hp.n_rnd)
-            field_new = field_fn(m_new)
-            H = _energy_from_field(m_new, field_new, hh)  # (T,)
-            better = eligible & (H < best_H)
-            best_H = jnp.where(better, H, best_H)
-            best_m = jnp.where(better[:, None], m_new, best_m)
-            trace = (jnp.mean(H.astype(jnp.float32)), jnp.min(H)) if track_energy else 0
-            return (noise_state, m_new, itanh_new, best_H, best_m), trace
+                    state, tr = jax.lax.scan(
+                        iteration, state, None, length=full_iters
+                    )
+                    if track_energy:
+                        traces.append((tr[0].reshape(-1), tr[1].reshape(-1)))
+                if tail:
+                    state, tr, _ = run_schedule(
+                        bk, tail, state, record="best", track_energy=track_energy
+                    )
+                    if track_energy:
+                        traces.append(tr)
+                best_H, best_m = bk.finalize(state)
+                trace = (
+                    tuple(
+                        jnp.concatenate([t[i] for t in traces]) for i in (0, 1)
+                    )
+                    if track_energy
+                    else None
+                )
+                return best_H, best_m, trace
 
-        big = jnp.int32(2**30)
-        carry0 = (noise_state, m0, itanh0, jnp.full((hp.n_trials,), big, jnp.int32), m0)
-        carry, trace = jax.lax.scan(cyc, carry0, (i0_seq, el_seq))
-        _, _, _, best_H, best_m = carry
-        best_cut = ((w_total - best_H) // 2) if maxcut is not None else -best_H
-        e_mean, e_min = (trace if track_energy else (None, None))
-        return best_cut, best_H, best_m, e_mean, e_min, None
+        best_H, best_m, trace = jax.jit(run)()
+        traj = None
+        if track_energy:
+            e_mean = np.asarray(trace[0]).reshape(-1)
+            e_min = np.asarray(trace[1]).reshape(-1)
+        else:
+            e_mean = e_min = None
 
-    best_cut, best_H, best_m, e_mean, e_min, traj = jax.jit(run)()
+    best_H = np.asarray(best_H)
+    best_cut = np.asarray(finalize_cut(best_H, maxcut))
     return AnnealResult(
-        best_cut=np.asarray(best_cut),
-        best_energy=np.asarray(best_H),
+        best_cut=best_cut,
+        best_energy=best_H,
         best_m=np.asarray(best_m),
-        energy_mean=None if e_mean is None else np.asarray(e_mean),
-        energy_min=None if e_min is None else np.asarray(e_min),
+        energy_mean=e_mean,
+        energy_min=e_min,
         traj=None if traj is None else np.asarray(traj),
         stored_bits_per_iter=model.n * stored_per_iter,
         hp=hp,

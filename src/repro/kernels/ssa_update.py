@@ -1,4 +1,4 @@
-"""Pallas TPU kernels for the SSA/HA-SSA spin update (DESIGN.md §2).
+"""Pallas TPU kernels for the SSA/HA-SSA spin update (DESIGN.md §2.3).
 
 The FPGA's spin-gate array computes, for all spins in one clock,
 

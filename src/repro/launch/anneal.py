@@ -5,6 +5,12 @@
 
 Selectable problems: G-set instances (real files if present under
 data/gset/, structure-faithful generated twins otherwise), King1, K2000.
+
+The solve runs on the plateau engine (DESIGN.md §2): `--backend pallas`
+executes each temperature plateau as one resident `pallas_call` (J pinned
+in VMEM); `sparse`/`dense` run the single-contraction-per-cycle scan.
+`--track-energy` records per-cycle energy traces (forces the scan path on
+the pallas backend, which has no per-cycle outputs).
 """
 from __future__ import annotations
 
@@ -28,6 +34,9 @@ def main():
     ap.add_argument("--storage", choices=("i0max", "all"), default="i0max")
     ap.add_argument("--backend", choices=("sparse", "dense", "pallas"),
                     default="sparse")
+    ap.add_argument("--record", choices=("best", "traj"), default="best")
+    ap.add_argument("--track-energy", action="store_true",
+                    help="record per-cycle energy traces (scan path)")
     ap.add_argument("--noise", choices=("xorshift", "threefry"), default="xorshift")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -39,14 +48,18 @@ def main():
         beta_shift=args.beta_shift,
     )
     print(f"{p.name}: N={p.n} |E|={len(p.edges)}; {hp.total_cycles} cycles "
-          f"× {hp.n_trials} trials; storage={args.storage} ({'HA-SSA' if args.storage == 'i0max' else 'SSA'})")
+          f"× {hp.n_trials} trials; backend={args.backend}; "
+          f"storage={args.storage} ({'HA-SSA' if args.storage == 'i0max' else 'SSA'})")
     t0 = time.time()
-    r = anneal(p, hp, seed=args.seed, storage=args.storage,
-               backend=args.backend, noise=args.noise)
+    r = anneal(p, hp, seed=args.seed, storage=args.storage, record=args.record,
+               backend=args.backend, noise=args.noise,
+               track_energy=args.track_energy)
     dt = time.time() - t0
+    spin_cycles = hp.total_cycles * hp.n_trials
     print(f"best cut {r.overall_best_cut}  avg {r.mean_best_cut:.1f}  "
           f"best energy {r.best_energy.min()}  ({dt:.1f}s, "
-          f"{hp.total_cycles*hp.n_trials/dt:.0f} spin-cycles/s×trials)")
+          f"{spin_cycles/dt:.0f} trial-cycles/s, "
+          f"{spin_cycles*p.n/dt:.2e} spin-cycles/s)")
     if p.best_known:
         print(f"best known {p.best_known} → {100*r.overall_best_cut/p.best_known:.2f}%")
     print(f"trajectory memory/iter: {memory.hassa_bits_per_iteration(p.n, hp)} bits "

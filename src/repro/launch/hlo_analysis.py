@@ -14,7 +14,14 @@ import dataclasses
 import re
 from typing import Dict, Optional, Tuple
 
-__all__ = ["HW", "collective_bytes", "roofline", "RooflineReport", "shape_bytes"]
+__all__ = [
+    "HW",
+    "collective_bytes",
+    "count_hlo_ops",
+    "roofline",
+    "RooflineReport",
+    "shape_bytes",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,6 +49,19 @@ _COLLECTIVE_OPS = (
     "all-to-all",
     "collective-permute",
 )
+
+
+def count_hlo_ops(hlo_text: str, op: str) -> int:
+    """Count instruction occurrences of ``op`` in HLO or StableHLO text.
+
+    Matches both the compiled-HLO form (``%x = f32[..] dot(...)``) and the
+    StableHLO/MLIR form (``%5 = stablehlo.dot_general ...``).  Used by the
+    contraction-count regression tests: a plateau's cycle loop must contain
+    exactly one field contraction (dot for the dense backend, gather for the
+    sparse one) — the seed's record='best' path evaluated it twice.
+    """
+    pat = rf"stablehlo\.{re.escape(op)}\b|(?<![\w.-]){re.escape(op)}\("
+    return len(re.findall(pat, hlo_text))
 
 
 def shape_bytes(dtype: str, dims_str: str) -> int:

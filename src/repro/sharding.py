@@ -37,6 +37,7 @@ __all__ = [
     "named_sharding",
     "constrain",
     "mesh_axis_size",
+    "abstract_mesh",
 ]
 
 Axes = Tuple[Optional[str], ...]  # logical names per dim (None = replicated)
@@ -96,6 +97,21 @@ TRAIN_FSDP_SP_RULES = DEFAULT_RULES.replace(
     d_model=("data",),
     seq=("model",),
 )
+
+
+def abstract_mesh(axis_sizes: Sequence[int], axis_names: Sequence[str]):
+    """Version-portable `jax.sharding.AbstractMesh` constructor.
+
+    jax <= 0.4.x takes a tuple of (name, size) pairs; newer releases take
+    (axis_sizes, axis_names).  Spec-construction tests need only the shape,
+    so paper over the signature change here.
+    """
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+    except TypeError:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
 
 
 def mesh_axis_size(mesh: Mesh, axis) -> int:

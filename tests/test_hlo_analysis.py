@@ -1,9 +1,10 @@
 """Tests for the roofline extraction layer (HLO parsing + term math)."""
+import jax
 import numpy as np
 import pytest
 
 from repro.launch.hlo_analysis import (HW, RooflineReport, collective_bytes,
-                                       model_flops, shape_bytes)
+                                       count_hlo_ops, model_flops, shape_bytes)
 
 HLO = """
 HloModule jit_step
@@ -65,3 +66,37 @@ def test_roofline_terms_and_dominance():
 def test_model_flops():
     assert model_flops(1e9, 1e6, "train") == 6e15
     assert model_flops(1e9, 128, "decode") == 2 * 1e9 * 128
+
+
+def test_count_hlo_ops_both_dialects():
+    assert count_hlo_ops("%d = f32[8,8]{1,0} dot(f32[8,8] %a, f32[8,8] %b)", "dot") == 1
+    assert count_hlo_ops("%5 = stablehlo.dot_general %a, %b", "dot_general") == 1
+    # op-name prefixes don't cross-match
+    assert count_hlo_ops("%5 = stablehlo.dot_general %a, %b", "dot") == 0
+    assert count_hlo_ops("%g = s32[4]{0} gather(s32[8] %x)", "gather") == 1
+    assert count_hlo_ops("%ag = f32[4] all-gather(f32[1] %x)", "gather") == 0
+
+
+@pytest.mark.parametrize("track_energy", [False, True])
+def test_plateau_cycle_has_one_contraction(track_energy):
+    """One plateau (C cycles) compiles to exactly TWO field contractions:
+    one inside the cycle loop — i.e. one per cycle — plus one epilogue for
+    the plateau's final state.  The seed's record='best' scan evaluated the
+    field twice per cycle; this pins the fix per backend."""
+    from repro.core import gset, make_backend
+
+    model = gset.toroidal_grid(64, seed=17).to_ising()
+    counts = {"dense": "dot", "sparse": "gather"}
+    for kind, op in counts.items():
+        bk = make_backend(kind, model, n_trials=4, noise="xorshift")
+        state = bk.init_state(0)
+        f = jax.jit(
+            lambda st, bk=bk: bk.run_plateau(
+                st, 8, length=16, eligible=True, track_energy=track_energy
+            )[0]
+        )
+        hlo = f.lower(state).compile().as_text()
+        assert count_hlo_ops(hlo, op) == 2, (kind, op)
+        # and the dense loop uses no gathers / the sparse loop no dots
+        other = "gather" if op == "dot" else "dot"
+        assert count_hlo_ops(hlo, other) == 0, (kind, other)

@@ -17,6 +17,15 @@ def _energy(model, m):
     return int(ising_energy(jnp.asarray(m, jnp.int32), h, nbr_idx, nbr_w))
 
 
+def _all_energies(model, n):
+    """Energies of all 2^n spin assignments, batched (bit k of the row index
+    is spin k) — replaces per-assignment Python loops in the brute forces."""
+    bits = np.arange(2**n, dtype=np.uint32)
+    m = 2 * ((bits[:, None] >> np.arange(n)) & 1).astype(np.int32) - 1
+    h, nbr_idx, nbr_w = model.device_arrays()
+    return np.asarray(ising_energy(jnp.asarray(m), h, nbr_idx, nbr_w)), m
+
+
 def test_qubo_to_ising_exact_over_all_assignments():
     rng = np.random.default_rng(0)
     Q = rng.integers(-3, 4, size=(6, 6))
@@ -61,13 +70,8 @@ def test_tsp_ground_state_is_shortest_tour():
     pts = np.array([0, 1, 2, 5])
     dist = np.abs(pts[:, None] - pts[None, :])
     p = tsp_problem(dist)
-    best = None
-    n = 16
-    for bits in range(2**n):
-        m = 2 * np.array([(bits >> k) & 1 for k in range(n)]) - 1
-        e = _energy(p.model, m)
-        if best is None or e < best[0]:
-            best = (e, m)
+    H, ms = _all_energies(p.model, 16)
+    best = (int(H.min()), ms[int(H.argmin())])
     tour = decode_tsp(p, best[1])
     assert tour is not None, "ground state violates constraints"
     assert tsp_tour_length(p, tour) == 10  # 0→1→2→5→0
@@ -99,12 +103,9 @@ def test_gi_isomorphic_graphs_have_zero_ground_state():
         x[u, perm[u]] = 1
     m = 2 * x.reshape(-1) - 1
     e_perm = _energy(model, m)
-    # brute force over all 2^16 assignments
-    e_min = min(
-        _energy(model, 2 * np.array([(b >> k) & 1 for k in range(16)]) - 1)
-        for b in range(2**16)
-    )
-    assert e_perm == e_min
+    # brute force over all 2^16 assignments (batched)
+    H, _ = _all_energies(model, 16)
+    assert e_perm == int(H.min())
     mapping = decode_gi(4, m)
     assert mapping is not None and np.array_equal(mapping, perm)
 

@@ -10,13 +10,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.optim.adamw import zero1_spec
-from repro.sharding import DEFAULT_RULES, ShardingRules, logical_to_spec, mesh_axis_size
+from repro.sharding import (DEFAULT_RULES, ShardingRules, abstract_mesh,
+                            logical_to_spec, mesh_axis_size)
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-POD = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH = abstract_mesh((16, 16), ("data", "model"))
+POD = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_basic_rules():
