@@ -1,4 +1,5 @@
-"""Paper Table V: annealing time, HA-SSA hardware vs SA (CPU).
+"""Paper Table V: annealing time, HA-SSA hardware vs SA (CPU) — plus the
+serving-layer throughput benchmark.
 
 The paper's FPGA does 90,000 cycles at 100 MHz = 0.9 ms.  We report:
   * measured JAX wall-time of the plateau engine per backend
@@ -9,9 +10,23 @@ The paper's FPGA does 90,000 cycles at 100 MHz = 0.9 ms.  We report:
   * the TPU-projected time from the resident-kernel roofline
     (dense J resident in VMEM: per cycle ≈ max(matmul flops / 197 TF,
     noise+state HBM traffic / 819 GB/s) per chip).
+
+:func:`run_service` benchmarks the shape-bucketed AnnealService against the
+pre-service per-request Python loop (one retrace + recompile per request):
+aggregate spin-cycles/s and requests/s over a batch of same-bucket
+instances, written to ``BENCH_service.json``.  The acceptance bar for the
+serving PR is ≥3× aggregate spin-cycles/s on a batch of 8 G11-class
+instances.
+
+    python -m benchmarks.timing                   # Table V rows
+    python -m benchmarks.timing --service         # 8×G11-class acceptance run
+    python -m benchmarks.timing --service-smoke   # CI: 3 toy instances,
+                                                  #     sparse + pallas
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import numpy as np
@@ -65,5 +80,110 @@ def run(problems=("G11", "King1"), trials: int = 8, m_shot: int = 10,
     return out
 
 
+def run_service(
+    n_instances: int = 8,
+    trials: int = 8,
+    m_shot: int = 2,
+    problem_n: int = 800,
+    backends=("sparse",),
+    csv_prefix: str = "service_timing",
+    json_path: str = "BENCH_service.json",
+):
+    """Batched service vs per-request Python loop, same requests.
+
+    The loop path is the pre-service serving story: each request builds a
+    fresh backend and re-traces/re-compiles the whole plateau program.  The
+    service path pads every instance to one shape bucket, stacks the batch
+    on the problem axis and runs ONE compiled plateau program.
+    """
+    from repro.serve import AnnealRequest, AnnealService
+
+    problems = [
+        gset.toroidal_grid(problem_n, seed=100 + i, name=f"G11c{i}")
+        for i in range(n_instances)
+    ]
+    hp = SSAHyperParams(n_trials=trials, m_shot=m_shot)
+    agg_spin_cycles = sum(hp.total_cycles * trials * p.n for p in problems)
+    report = {
+        "n_instances": n_instances,
+        "trials": trials,
+        "m_shot": m_shot,
+        "problem_n": problem_n,
+        "aggregate_spin_cycles": agg_spin_cycles,
+        "backends": {},
+    }
+
+    for backend in backends:
+        # Per-request Python loop (re-trace + re-compile per request).
+        t0 = time.perf_counter()
+        loop_best = [
+            anneal(p, hp, seed=100 + i, noise="xorshift", backend=backend,
+                   track_energy=False).overall_best_cut
+            for i, p in enumerate(problems)
+        ]
+        t_loop = time.perf_counter() - t0
+
+        # Shape-bucketed service: one compile per bucket, one device launch.
+        svc = AnnealService(backend=backend, noise="xorshift")
+        reqs = [
+            AnnealRequest(problem=p, hp=hp, seed=100 + i)
+            for i, p in enumerate(problems)
+        ]
+        t0 = time.perf_counter()
+        responses = svc.solve(reqs)
+        t_svc = time.perf_counter() - t0
+        svc_best = [r.result.overall_best_cut for r in responses]
+
+        # The loop and the service run identical padded-invariant math.
+        assert loop_best == svc_best, (loop_best, svc_best)
+
+        scps_loop = agg_spin_cycles / t_loop
+        scps_svc = agg_spin_cycles / t_svc
+        speedup = t_loop / t_svc
+        emit(f"{csv_prefix}/{backend}/loop", t_loop * 1e6,
+             f"spin_cycles_per_s={scps_loop:.3e}")
+        emit(f"{csv_prefix}/{backend}/service", t_svc * 1e6,
+             f"spin_cycles_per_s={scps_svc:.3e};requests_per_s="
+             f"{n_instances/t_svc:.2f};speedup={speedup:.1f}x;"
+             f"programs={svc.cache_info()['programs']}")
+        report["backends"][backend] = {
+            "loop_wall_s": t_loop,
+            "service_wall_s": t_svc,
+            "spin_cycles_per_s_loop": scps_loop,
+            "spin_cycles_per_s_service": scps_svc,
+            "requests_per_s": n_instances / t_svc,
+            "speedup": speedup,
+            "compiled_programs": svc.cache_info()["programs"],
+            "best_cuts": svc_best,
+        }
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {json_path}")
+    return report
+
+
+def run_service_smoke(json_path: str = "BENCH_service.json"):
+    """CI canary: 3 toy instances through sparse + pallas-interpret."""
+    return run_service(
+        n_instances=3, trials=4, m_shot=2, problem_n=64,
+        backends=("sparse", "pallas"), csv_prefix="service_smoke",
+        json_path=json_path,
+    )
+
+
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--service", action="store_true",
+                    help="8×G11-class service-vs-loop acceptance benchmark")
+    ap.add_argument("--service-smoke", action="store_true",
+                    help="CI smoke: 3 toy instances, sparse + pallas")
+    ap.add_argument("--json", default="BENCH_service.json")
+    args = ap.parse_args()
+    if args.service_smoke:
+        run_service_smoke(json_path=args.json)
+    elif args.service:
+        run_service(json_path=args.json)
+    else:
+        run()

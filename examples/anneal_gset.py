@@ -6,56 +6,35 @@ benchmark set with HA-SSA / SSA / SA and reproduce the paper's comparisons.
 
 --full uses the paper's scale (100 trials x 90,000 cycles; minutes on CPU).
 
-The solves go through :func:`solve_batch` — a serve-style batch API in the
-spirit of ``repro.serve``: callers enqueue :class:`AnnealRequest`\\ s and get
-:class:`AnnealResponse`\\ s back, while the service runs every request on the
-shared plateau engine with one backend choice (DESIGN.md §7).  This is the
-shape the ROADMAP's annealing-as-a-service work builds on: requests are
-independent, so a pod-scale deployment shards them over hosts and batches
-trials per device.
+The solves go through :func:`solve_batch` — a thin client of
+:class:`repro.serve.AnnealService` (DESIGN.md §7): requests are grouped by
+shape bucket, padded, stacked on a problem axis and solved by ONE compiled
+plateau program per bucket.  All G-set-class instances (N=800) share a
+bucket, so this whole batch compiles once and runs as one device launch —
+the pre-service version of this file re-traced and re-compiled the entire
+plateau program per request.
 """
 import argparse
-import dataclasses
 import time
-from typing import List, Optional, Union
+from typing import List, Optional
 
-from repro.core import (IsingModel, MaxCutProblem, SAHyperParams,
-                        SSAHyperParams, AnnealResult, anneal, anneal_sa, gset)
-
-
-@dataclasses.dataclass(frozen=True)
-class AnnealRequest:
-    """One problem + hyperparameters, as a service would accept it."""
-
-    problem: Union[MaxCutProblem, IsingModel]
-    hp: SSAHyperParams = SSAHyperParams()
-    seed: int = 0
-    storage: str = "i0max"
-
-
-@dataclasses.dataclass
-class AnnealResponse:
-    request: AnnealRequest
-    result: AnnealResult
-    wall_s: float
+from repro.core import SAHyperParams, SSAHyperParams, anneal_sa, gset
+from repro.serve import AnnealRequest, AnnealResponse, AnnealService
 
 
 def solve_batch(requests: List[AnnealRequest], *, backend: str = "sparse",
-                noise: str = "xorshift", track_energy: bool = False
-                ) -> List[AnnealResponse]:
-    """Solve a batch of annealing requests on the shared plateau engine.
+                noise: str = "xorshift", service: Optional[AnnealService] = None,
+                progress=None) -> List[AnnealResponse]:
+    """Solve a batch of annealing requests on the shared annealing service.
 
-    Requests are independent; each runs its trials as one device batch.
-    ``backend='pallas'`` executes every temperature plateau as a single
-    resident kernel launch.
+    Same-bucket requests are stacked and solved by one compiled plateau
+    program (one compile per shape bucket, cached across calls when a
+    ``service`` instance is reused).  ``backend='pallas'`` executes every
+    temperature plateau of the whole batch as a single resident kernel
+    launch on a (B, R-tile) grid.
     """
-    responses = []
-    for req in requests:
-        t0 = time.time()
-        r = anneal(req.problem, req.hp, seed=req.seed, storage=req.storage,
-                   backend=backend, noise=noise, track_energy=track_energy)
-        responses.append(AnnealResponse(req, r, time.time() - t0))
-    return responses
+    service = service or AnnealService(backend=backend, noise=noise)
+    return service.solve(requests, progress=progress)
 
 
 def main(argv: Optional[List[str]] = None):
@@ -80,9 +59,10 @@ def main(argv: Optional[List[str]] = None):
         r_ha = resp.result
         print(f"\n=== {p.name} (N={p.n}, |E|={len(p.edges)}) "
               f"{hp.total_cycles} cycles x {trials} trials "
-              f"[backend={args.backend}] ===")
+              f"[backend={args.backend} bucket={resp.bucket} "
+              f"batch={resp.batch}] ===")
         print(f"  HA-SSA: best {r_ha.overall_best_cut}  "
-              f"avg {r_ha.mean_best_cut:.1f}  ({resp.wall_s:.1f}s)")
+              f"avg {r_ha.mean_best_cut:.1f}  ({resp.wall_s:.1f}s batch)")
         if not args.skip_sa:
             t0 = time.time()
             r_sa = anneal_sa(

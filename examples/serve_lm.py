@@ -10,7 +10,7 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.models import model_defs
 from repro.models.params import init_params
-from repro.serve.engine import ServeConfig, generate
+from repro.serve.lm import ServeConfig, generate
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--arch", default="granite-3-8b")

@@ -12,18 +12,30 @@ Public API:
 from . import gset, memory  # noqa: F401
 from .engine import (  # noqa: F401
     BaseResult,
+    BatchedBackend,
     DenseBackend,
     EngineState,
     PallasBackend,
     Plateau,
     PlateauBackend,
     SparseBackend,
+    bucket_n,
     make_backend,
+    make_batched_backend,
+    pad_model,
+    padded_noise_init,
     run_schedule,
     schedule_plateaus,
 )
 from .ising import IsingModel, MaxCutProblem, fig4_example, ising_energy  # noqa: F401
-from .pt import PTHyperParams, PTResult, anneal_pt  # noqa: F401
+from .pt import (  # noqa: F401
+    PTHyperParams,
+    PTResult,
+    PTSSAHyperParams,
+    PTSSAResult,
+    anneal_pt,
+    anneal_pt_ssa,
+)
 from .sa import SAHyperParams, SAResult, anneal_sa  # noqa: F401
 from .schedule import Schedule, hassa_schedule, n_temp_steps, ssa_schedule  # noqa: F401
 from .ssa import (  # noqa: F401

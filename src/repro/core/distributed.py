@@ -1,8 +1,11 @@
 """Distributed SSA/HA-SSA: the paper's annealer on the production mesh.
 
 Parallel axes (DESIGN.md §2.4):
-  * replicas (independent trials) → `data`  (the paper runs trials
-    sequentially on one FPGA; a pod runs thousands at once),
+  * stacked problems (the serving layer's bucketed batch axis) → `data`:
+    independent instances of one shape bucket shard across hosts,
+  * replicas (independent trials) → `data` in the single-problem step (the
+    paper runs trials sequentially on one FPGA; a pod runs thousands at
+    once),
   * spins → `model` for dense instances (K2000-class): the per-cycle local
     field is a (T, N)·(N, N) matmul with J's rows sharded over `model`;
     GSPMD turns the contraction into partial-sum all-reduces — the only
@@ -14,8 +17,12 @@ Parallel axes (DESIGN.md §2.4):
 is the chain of its constant-I0 plateaus, with HA-SSA's storage policy as
 per-plateau eligibility and ONE field contraction per cycle (the same
 single-matvec semantics as every local backend — bit-identical, tested).
-``anneal_step_lowering`` lowers the pjit'd step for the dry-run; the same
-step runs for real on any mesh.
+``make_batched_iteration_step`` is the same chain over a leading problem
+axis — `run_plateau_scan` is batch-transparent, so the bucketed service
+batch threads straight through to the mesh (problems on `data`, spins on
+`model`).  ``anneal_step_lowering`` / ``batched_anneal_step_lowering``
+lower the pjit'd steps for the dry-run; the same steps run for real on any
+mesh.
 """
 from __future__ import annotations
 
@@ -29,7 +36,12 @@ from .engine import EngineState, run_plateau_scan, schedule_plateaus
 from .rng import xorshift_next_bits
 from .ssa import SSAHyperParams
 
-__all__ = ["make_iteration_step", "anneal_step_lowering"]
+__all__ = [
+    "make_iteration_step",
+    "anneal_step_lowering",
+    "make_batched_iteration_step",
+    "batched_anneal_step_lowering",
+]
 
 
 def make_iteration_step(hp: SSAHyperParams, mesh: Optional[Mesh] = None):
@@ -92,6 +104,81 @@ def anneal_step_lowering(
     )
     rng_sh = NamedSharding(mesh, P(None, "data", "model"))
     shardings = (rng_sh, dm, dm, dd, dm, jm, rep)
+    jitted = jax.jit(step, in_shardings=shardings, donate_argnums=(0, 1, 2, 3, 4))
+    with mesh:
+        return jitted.lower(*shapes)
+
+
+def make_batched_iteration_step(hp: SSAHyperParams, mesh: Optional[Mesh] = None):
+    """One full iteration over B stacked (bucket-padded) problems.
+
+    The serving layer's batch axis on the mesh: problems shard over `data`,
+    spins over `model`; trials stay local.  `run_plateau_scan` is
+    batch-transparent, so this is the *same* plateau chain as
+    :func:`make_iteration_step` with a leading problem axis — per problem
+    bit-identical to the single-problem step (tested).
+
+    step(rng (4,B,T,N) u32, m (B,T,N) f32, itanh (B,T,N) i32,
+         best_H (B,T) i32, best_m (B,T,N) i8, J (B,N,N) f32, h (B,N) i32)
+    → updated state tuple.
+    """
+    plateaus = schedule_plateaus(hp.schedule("hassa"), "i0max")
+
+    def constrain(x, spec):
+        if mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    def step(rng, m, itanh, best_H, best_m, J, h):
+        h3 = h[:, None, :]  # (B, 1, N): broadcasts against (B, T, N) spins
+
+        def field_fn(m8):
+            mf = constrain(m8.astype(jnp.float32), P("data", None, "model"))
+            return (h3 + jnp.einsum("btn,bnk->btk", mf, J)).astype(jnp.int32)
+
+        state = EngineState(rng, m.astype(jnp.int8), itanh, best_H, best_m)
+        for p in plateaus:
+            state, _, _ = run_plateau_scan(
+                field_fn, xorshift_next_bits, h3, hp.n_rnd, state, p.i0,
+                length=p.length, eligible=p.eligible,
+            )
+        return (
+            state.noise_state,
+            constrain(state.m.astype(jnp.float32), P("data", None, "model")),
+            state.itanh,
+            state.best_H,
+            state.best_m,
+        )
+
+    return step
+
+
+def batched_anneal_step_lowering(
+    mesh: Mesh,
+    n_problems: int = 8,
+    n_spins: int = 2048,
+    n_trials: int = 512,
+    hp: Optional[SSAHyperParams] = None,
+):
+    """Lower+compile the batched iteration step (dry-run, no allocation)."""
+    hp = hp or SSAHyperParams(n_trials=n_trials)
+    step = make_batched_iteration_step(hp, mesh)
+    B, T, N = n_problems, n_trials, n_spins
+    dm = NamedSharding(mesh, P("data", None, "model"))
+    dd = NamedSharding(mesh, P("data"))
+    jm = NamedSharding(mesh, P("data", "model", None))
+    hb = NamedSharding(mesh, P("data", None))
+    shapes = (
+        jax.ShapeDtypeStruct((4, B, T, N), jnp.uint32),  # rng lanes
+        jax.ShapeDtypeStruct((B, T, N), jnp.float32),    # m
+        jax.ShapeDtypeStruct((B, T, N), jnp.int32),      # itanh
+        jax.ShapeDtypeStruct((B, T), jnp.int32),         # best_H
+        jax.ShapeDtypeStruct((B, T, N), jnp.int8),       # best_m
+        jax.ShapeDtypeStruct((B, N, N), jnp.float32),    # J (per problem)
+        jax.ShapeDtypeStruct((B, N), jnp.int32),         # h
+    )
+    rng_sh = NamedSharding(mesh, P(None, "data", None, "model"))
+    shardings = (rng_sh, dm, dm, dd, dm, jm, hb)
     jitted = jax.jit(step, in_shardings=shardings, donate_argnums=(0, 1, 2, 3, 4))
     with mesh:
         return jitted.lower(*shapes)

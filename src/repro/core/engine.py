@@ -80,6 +80,16 @@ __all__ = [
     "packed_words",
     "ssa_cycle_update",
     "energy_from_field",
+    "next_pow2",
+    "bucket_n",
+    "pad_model",
+    "padded_noise_init",
+    "BatchedBackend",
+    "BatchedSparseBackend",
+    "BatchedDenseBackend",
+    "BatchedPallasBackend",
+    "BATCHED_BACKENDS",
+    "make_batched_backend",
 ]
 
 # Sentinel "no solution yet" energy (any real H is far below this).
@@ -298,7 +308,7 @@ def run_plateau_scan(
             if eligible:
                 better = not_first & (H < best_H)
                 best_H = jnp.where(better, H, best_H)
-                best_m = jnp.where(better[:, None], m, best_m)
+                best_m = jnp.where(better[..., None], m, best_m)
             if track_energy:
                 ys["mean"] = jnp.mean(H.astype(jnp.float32))
                 ys["min"] = jnp.min(H)
@@ -320,7 +330,7 @@ def run_plateau_scan(
         if eligible:
             better = H < best_H
             best_H = jnp.where(better, H, best_H)
-            best_m = jnp.where(better[:, None], m, best_m)
+            best_m = jnp.where(better[..., None], m, best_m)
         if track_energy:
             trace = (
                 jnp.concatenate(
@@ -614,3 +624,346 @@ def run_schedule(
     )
     planes_out = jnp.concatenate(planes, axis=0) if planes else None
     return state, trace, planes_out
+
+
+# ---------------------------------------------------------------------------
+# Shape buckets and padded problems (the serving substrate, DESIGN.md §7)
+# ---------------------------------------------------------------------------
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (>= 1)."""
+    n = int(n)
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+def bucket_n(n: int, min_bucket: int = 64) -> int:
+    """The serving shape bucket for an N-spin problem: power-of-two width.
+
+    Every instance is zero-padded up to its bucket so heterogeneous request
+    streams share compiled executables (one program per bucket, not per N).
+    """
+    if n <= 0:
+        raise ValueError(f"need n > 0, got {n}")
+    return max(next_pow2(int(min_bucket)), next_pow2(n))
+
+
+def pad_model(model: IsingModel, n_bucket: int) -> IsingModel:
+    """Zero-pad an Ising model to ``n_bucket`` spins.
+
+    Padded rows carry h=0 and self-index/zero-weight adjacency, so their
+    local field is identically 0 and they contribute nothing to H: the live
+    lanes of a padded run evolve exactly as in the unpadded run (given a
+    padding-invariant noise stream — see :func:`padded_noise_init`).
+    """
+    if model.n == n_bucket:
+        return model
+    if model.n > n_bucket:
+        raise ValueError(f"model has {model.n} spins > bucket {n_bucket}")
+    pad = n_bucket - model.n
+    d = model.max_degree
+    h = np.concatenate([np.asarray(model.h, np.int32), np.zeros(pad, np.int32)])
+    idx = np.concatenate(
+        [
+            np.asarray(model.nbr_idx, np.int32),
+            np.tile(np.arange(model.n, n_bucket, dtype=np.int32)[:, None], (1, d)),
+        ],
+        axis=0,
+    )
+    w = np.concatenate(
+        [np.asarray(model.nbr_w, np.int32), np.zeros((pad, d), np.int32)], axis=0
+    )
+    return IsingModel(
+        n=n_bucket, h=h, nbr_idx=idx, nbr_w=w, name=f"{model.name}@pad{n_bucket}"
+    )
+
+
+def padded_noise_init(noise: str, seed: int, n_trials: int, n_live: int, n_bucket: int):
+    """Init a noise state over (n_trials, n_bucket) lanes, padding-invariant.
+
+    The live lanes [0, n_live) are seeded exactly as an unpadded
+    ``xorshift_init(seed, (n_trials, n_live))`` run would seed them; pad
+    lanes get an independent (inert) stream.  Because xorshift lanes are
+    elementwise-independent, a bucket-padded run is then bit-identical to
+    the unpadded run on the live lanes — the padding-invariance property the
+    serving layer relies on.
+
+    ``threefry`` draws are shape-dependent, so threefry has no
+    padding-invariant form; it is supported for service use but padded runs
+    are *not* bit-comparable to unpadded ones.
+    """
+    if noise == "xorshift":
+        live = xorshift_init(seed, (n_trials, n_live))
+        if n_bucket == n_live:
+            return live
+        pad = xorshift_init(seed ^ 0x9E3779B9, (n_trials, n_bucket - n_live))
+        return jnp.concatenate([live, pad], axis=-1)
+    if noise == "threefry":
+        return jax.random.PRNGKey(seed)
+    raise ValueError(f"unknown noise {noise!r}")
+
+
+# ---------------------------------------------------------------------------
+# Batched backends: B stacked problems through one compiled plateau program
+# ---------------------------------------------------------------------------
+class BatchedBackend:
+    """Batched execution of B stacked, bucket-padded problems.
+
+    The serving counterpart of :class:`PlateauBackend` (DESIGN.md §7): problem
+    arrays are **call-time arguments** (a dict of stacked jnp arrays from
+    :meth:`stack`), not constructor state, so one jitted program per
+    (backend, N_bucket, B, n_trials, schedule signature) serves every request
+    group that shape-matches — the serving layer's compiled-executable cache
+    keys on exactly those statics.
+
+    State layout is :class:`EngineState` with a leading problem axis:
+    spins (B, T, N), best_H (B, T), xorshift lanes (B, 4, T, N).  ``sparse``
+    and ``dense`` vmap the single-problem plateau scan over the problem axis;
+    ``pallas`` launches the resident kernel on a (B, R-tile) grid.  All three
+    are bit-identical per problem to the corresponding unbatched backend —
+    property-tested.
+    """
+
+    name = "abstract"
+
+    def __init__(
+        self,
+        *,
+        n_bucket: int,
+        n_trials: int,
+        n_rnd: int = 2,
+        noise: str = "xorshift",
+    ):
+        self.n_bucket = int(n_bucket)
+        self.n_trials = int(n_trials)
+        self.n_rnd = int(n_rnd)
+        self.noise = noise
+        lanes = (self.n_trials, self.n_bucket)
+        if noise == "xorshift":
+            self._noise_step_one = xorshift_next_bits
+        elif noise == "threefry":
+
+            def step(key):
+                key, sub = jax.random.split(key)
+                return key, threefry_noise(sub, lanes)
+
+            self._noise_step_one = step
+        else:
+            raise ValueError(f"unknown noise {noise!r}")
+        self._noise_step = jax.vmap(self._noise_step_one)
+
+    # -- host side --------------------------------------------------------
+    def stack(self, models: Sequence[IsingModel]) -> dict:
+        """Pad each model to the bucket and stack its arrays over axis 0."""
+        raise NotImplementedError
+
+    def init_noise(self, seeds: Sequence[int], n_lives: Sequence[int]):
+        """Stacked per-problem noise states (padding-invariant live lanes)."""
+        return jnp.stack(
+            [
+                padded_noise_init(self.noise, int(s), self.n_trials, int(nl), self.n_bucket)
+                for s, nl in zip(seeds, n_lives)
+            ]
+        )
+
+    # -- traced -----------------------------------------------------------
+    def init_state(self, problem: dict, noise0) -> EngineState:
+        """Random ±1 start from the first noise draw (matches PlateauBackend)."""
+        ns, r0 = self._noise_step(noise0)
+        m0 = r0.astype(jnp.int8)
+        itanh0 = jnp.where(m0 > 0, 0, -1).astype(jnp.int32)
+        best_H = jnp.full(m0.shape[:-1], BIG_ENERGY, jnp.int32)
+        return EngineState(ns, m0, itanh0, best_H, m0)
+
+    def run_plateau(self, problem: dict, state: EngineState, i0, *, length, eligible):
+        raise NotImplementedError
+
+    def run_shots(self, problem: dict, state: EngineState, plateaus, n_shots: int):
+        """Advance ``n_shots`` full iterations (plateau chains) — one chunk."""
+        raise NotImplementedError
+
+    def finalize(self, state: EngineState) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        return state.best_H, state.best_m
+
+
+class _VmapBatchedBackend(BatchedBackend):
+    """Shared vmap-over-problems implementation (sparse/dense fields)."""
+
+    def _field_one(self, prob: dict, m: jnp.ndarray) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def _run_one_plateaus(self, prob, st, plateaus):
+        field_fn = lambda m: self._field_one(prob, m)  # noqa: E731
+        for p in plateaus:
+            st, _, _ = run_plateau_scan(
+                field_fn, self._noise_step_one, prob["h"], self.n_rnd, st,
+                p.i0, length=p.length, eligible=p.eligible,
+            )
+        return st
+
+    def run_plateau(self, problem, state, i0, *, length, eligible):
+        p = (Plateau(int(i0), int(length), bool(eligible)),)
+        return jax.vmap(lambda pr, st: self._run_one_plateaus(pr, st, p))(
+            problem, state
+        )
+
+    def run_shots(self, problem, state, plateaus, n_shots):
+        plateaus = tuple(plateaus)
+
+        def one(prob, st):
+            def iteration(st, _):
+                return self._run_one_plateaus(prob, st, plateaus), None
+
+            st, _ = jax.lax.scan(iteration, st, None, length=n_shots)
+            return st
+
+        return jax.vmap(one)(problem, state)
+
+
+class BatchedSparseBackend(_VmapBatchedBackend):
+    """Padded-adjacency gather field, vmapped over the problem axis."""
+
+    name = "sparse"
+
+    def stack(self, models):
+        padded = [pad_model(m, self.n_bucket) for m in models]
+        d = max(m.max_degree for m in padded)
+        idxs, ws, hs = [], [], []
+        for m in padded:
+            extra = d - m.max_degree
+            idx, w = np.asarray(m.nbr_idx), np.asarray(m.nbr_w)
+            if extra:
+                self_idx = np.tile(
+                    np.arange(m.n, dtype=np.int32)[:, None], (1, extra)
+                )
+                idx = np.concatenate([idx, self_idx], axis=1)
+                w = np.concatenate([w, np.zeros((m.n, extra), np.int32)], axis=1)
+            idxs.append(idx)
+            ws.append(w)
+            hs.append(np.asarray(m.h, np.int32))
+        return {
+            "h": jnp.asarray(np.stack(hs), jnp.int32),
+            "nbr_idx": jnp.asarray(np.stack(idxs), jnp.int32),
+            "nbr_w": jnp.asarray(np.stack(ws), jnp.int32),
+        }
+
+    def _field_one(self, prob, m):
+        return local_fields_sparse(
+            m.astype(jnp.int32), prob["h"], prob["nbr_idx"], prob["nbr_w"]
+        )
+
+
+def _stack_dense_models(models, n_bucket: int, j_dtype) -> dict:
+    """Stacked, bucket-padded dense views {h (B,N), J (B,N,N)}."""
+    from repro.kernels.ssa_update import pad_to  # lazy: keeps core light
+
+    Js, hs = [], []
+    for m in models:
+        Js.append(
+            pad_to(pad_to(jnp.asarray(m.dense_J(), j_dtype), 0, n_bucket), 1, n_bucket)
+        )
+        hs.append(pad_to(jnp.asarray(m.h, jnp.int32), 0, n_bucket))
+    return {"h": jnp.stack(hs), "J": jnp.stack(Js)}
+
+
+class BatchedDenseBackend(_VmapBatchedBackend):
+    """(T,N)·(N,N) matmul field per problem, vmapped over the problem axis."""
+
+    name = "dense"
+
+    def __init__(self, *, j_dtype=jnp.float32, **kw):
+        super().__init__(**kw)
+        self.j_dtype = j_dtype
+
+    def stack(self, models):
+        return _stack_dense_models(models, self.n_bucket, self.j_dtype)
+
+    def _field_one(self, prob, m):
+        return local_fields_dense(m, prob["h"], prob["J"])
+
+
+class BatchedPallasBackend(BatchedBackend):
+    """The resident plateau kernel on a (B, R-tile) grid.
+
+    One `pallas_call` per plateau advances **all problems and all trials**:
+    each grid step (b, i) pins problem b's J in VMEM and runs every cycle of
+    the plateau for one R-tile of trials — the serving transcription of the
+    FPGA's "one pipeline, many instances" operating mode.
+    """
+
+    name = "pallas"
+
+    def __init__(self, *, j_dtype=jnp.float32, block_r: int = 8,
+                 interpret: Optional[bool] = None, **kw):
+        super().__init__(**kw)
+        from repro.kernels import ssa_update as kssa  # lazy
+
+        self._kssa = kssa
+        self.j_dtype = j_dtype
+        self.block_r = int(block_r)
+        self.interpret = interpret
+
+    def stack(self, models):
+        return _stack_dense_models(models, self.n_bucket, self.j_dtype)
+
+    def _pregen(self, ns, length: int):
+        def draw(ns, _):
+            ns, r = self._noise_step(ns)
+            return ns, r.astype(jnp.int8)
+
+        return jax.lax.scan(draw, ns, None, length=length)
+
+    def run_plateau(self, problem, state, i0, *, length, eligible):
+        ns, noise = self._pregen(state.noise_state, length)  # (C, B, T, N)
+        noise = jnp.swapaxes(noise, 0, 1)                    # (B, C, T, N)
+        m_o, it_o, bh_o, bm_o = self._kssa.ssa_plateau_batched(
+            state.m.astype(jnp.float32),
+            state.itanh,
+            problem["J"],
+            problem["h"],
+            noise,
+            jnp.asarray(i0, jnp.int32),
+            state.best_H,
+            state.best_m,
+            n_rnd=self.n_rnd,
+            eligible=bool(eligible),
+            block_r=self.block_r,
+            interpret=self.interpret,
+        )
+        return EngineState(ns, m_o.astype(jnp.int8), it_o, bh_o, bm_o)
+
+    def run_shots(self, problem, state, plateaus, n_shots):
+        plateaus = tuple(plateaus)
+
+        def iteration(st, _):
+            for p in plateaus:
+                st = self.run_plateau(
+                    problem, st, p.i0, length=p.length, eligible=p.eligible
+                )
+            return st, None
+
+        st, _ = jax.lax.scan(iteration, state, None, length=n_shots)
+        return st
+
+
+BATCHED_BACKENDS = {
+    "sparse": BatchedSparseBackend,
+    "dense": BatchedDenseBackend,
+    "pallas": BatchedPallasBackend,
+}
+
+
+def make_batched_backend(
+    backend: str,
+    *,
+    n_bucket: int,
+    n_trials: int,
+    n_rnd: int = 2,
+    noise: str = "xorshift",
+    **opts,
+) -> BatchedBackend:
+    try:
+        cls = BATCHED_BACKENDS[backend]
+    except (KeyError, TypeError):
+        raise ValueError(
+            f"unknown batched backend {backend!r}; known: {sorted(BATCHED_BACKENDS)}"
+        ) from None
+    return cls(n_bucket=n_bucket, n_trials=n_trials, n_rnd=n_rnd, noise=noise, **opts)

@@ -1,4 +1,5 @@
-"""Trajectory-memory models — paper Eq. (5) and Eq. (6).
+"""Trajectory-memory models — paper Eq. (5) and Eq. (6) — plus the serving
+layer's bucket-padding overhead.
 
 SSA must store every spin bitplane of an iteration:
 
@@ -11,9 +12,16 @@ HA-SSA stores only the I0 == I0max plateau:
 ratio = steps = log2(I0max/I0min)/β + 1 → 6 for the Table-II hyperparameters
 (I0: 1→32, β=1), i.e. 0.48 Mb vs 0.08 Mb per iteration for N=800 (Table IV)
 and 72 Mb vs 12 Mb per 150-iteration trial.
+
+The annealing service (serve/anneal_service.py) pads instances to
+power-of-two shape buckets, so every stored bitplane carries
+``bucket(N) - N`` dead bits per cycle.  The ``padding_overhead_*`` models
+quantify that waste so the paper's memory comparison stays honest under
+bucketing (benchmarks/memory_table.py reports the column).
 """
 from __future__ import annotations
 
+from .engine import bucket_n
 from .schedule import n_temp_steps
 from .ssa import SSAHyperParams
 
@@ -22,6 +30,8 @@ __all__ = [
     "hassa_bits_per_iteration",
     "memory_ratio",
     "bits_per_trial",
+    "padding_overhead_bits_per_iteration",
+    "padding_overhead_fraction",
 ]
 
 
@@ -48,3 +58,27 @@ def bits_per_trial(n_spins: int, hp: SSAHyperParams, hardware_aware: bool = True
         else ssa_bits_per_iteration(n_spins, hp)
     )
     return per_iter * hp.m_shot
+
+
+def padding_overhead_bits_per_iteration(
+    n_spins: int,
+    hp: SSAHyperParams,
+    min_bucket: int = 64,
+    hardware_aware: bool = True,
+) -> int:
+    """Dead bits stored per iteration when N is padded to its shape bucket.
+
+    ``(bucket(N) - N) × stored_cycles``: the service's padded lanes occupy
+    bitplane width but carry no solution information.
+    """
+    pad = bucket_n(n_spins, min_bucket) - n_spins
+    stored = hp.tau if hardware_aware else n_temp_steps(
+        hp.i0_min, hp.i0_max, hp.beta_shift
+    ) * hp.tau
+    return pad * stored
+
+
+def padding_overhead_fraction(n_spins: int, min_bucket: int = 64) -> float:
+    """Fraction of each stored bitplane wasted on pad lanes: 1 - N/bucket(N)."""
+    nb = bucket_n(n_spins, min_bucket)
+    return 1.0 - n_spins / nb

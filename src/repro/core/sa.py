@@ -25,7 +25,7 @@ from .engine import BaseResult, finalize_cut, normalize_problem
 from .ising import IsingModel, MaxCutProblem
 from .schedule import sa_temperature_ladder
 
-__all__ = ["SAHyperParams", "SAResult", "anneal_sa"]
+__all__ = ["SAHyperParams", "SAResult", "anneal_sa", "sa_init", "sa_cycles", "sa_run"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,34 +41,57 @@ class SAResult(BaseResult):
     hp: SAHyperParams
 
 
-def anneal_sa(
-    problem: Union[MaxCutProblem, IsingModel],
-    hp: SAHyperParams = SAHyperParams(),
-    seed: int = 0,
+def _sa_energy(h, nbr_idx, nbr_w, m):
+    neigh = jnp.take(m, nbr_idx, axis=-1)
+    fields = jnp.sum(nbr_w * neigh, axis=-1)
+    return -(jnp.sum(h * m, axis=-1) + jnp.sum(m * fields, axis=-1) // 2)
+
+
+def sa_init(
+    h: jnp.ndarray,        # (N,) int32
+    nbr_idx: jnp.ndarray,  # (N, D) int32
+    nbr_w: jnp.ndarray,    # (N, D) int32
+    key: jax.Array,
     *,
-    track_energy: bool = True,
-    temperatures: Optional[np.ndarray] = None,  # override ladder (Fig. 12 mode)
-) -> SAResult:
-    maxcut, model = normalize_problem(problem)
+    n_trials: int,
+):
+    """Random ±1 start; returns the (key, m, H, best_H, best_m) carry."""
+    n = h.shape[0]
+    key, k0 = jax.random.split(key)
+    m0 = jnp.where(
+        jax.random.bernoulli(k0, 0.5, (int(n_trials), n)), 1, -1
+    ).astype(jnp.int32)
+    H0 = _sa_energy(h, nbr_idx, nbr_w, m0)
+    return (key, m0, H0, H0, m0)
 
-    h, nbr_idx, nbr_w = model.device_arrays()
-    n, T = model.n, hp.n_trials
-    temps = jnp.asarray(
-        sa_temperature_ladder(hp.t_start, hp.t_end, hp.n_cycles)
-        if temperatures is None
-        else np.asarray(temperatures, np.float32)
-    )
 
-    def energy(m):
-        neigh = jnp.take(m, nbr_idx, axis=-1)
-        fields = jnp.sum(nbr_w * neigh, axis=-1)
-        return -(jnp.sum(h * m, axis=-1) + jnp.sum(m * fields, axis=-1) // 2)
+def sa_cycles(
+    h: jnp.ndarray,
+    nbr_idx: jnp.ndarray,
+    nbr_w: jnp.ndarray,
+    carry,                 # (key, m, H, best_H, best_m) from sa_init
+    temps: jnp.ndarray,    # (chunk_cycles,) float32
+    *,
+    n_live=None,           # restrict proposals to lanes [0, n_live) (bucket padding)
+    track_energy: bool = False,
+):
+    """Advance len(temps) Metropolis cycles — the traceable/vmap-able core.
+
+    ``n_live`` (static int or traced scalar) restricts flip proposals to the
+    live lanes of a bucket-padded problem; padded lanes (zero h/weights) are
+    then never proposed, so they stay inert.  The serving layer vmaps this
+    over a stacked problem axis with per-problem ``n_live`` and calls it
+    chunk-by-chunk (the key rides in the carry, so chunked == unchunked).
+    """
+    n = h.shape[0]
+    T = carry[1].shape[0]
+    n_prop = n if n_live is None else n_live
 
     def cycle(carry, xs):
         key, m, H, best_H, best_m = carry
         temp = xs
         key, k_site, k_acc = jax.random.split(key, 3)
-        i = jax.random.randint(k_site, (T,), 0, n)  # one proposal per trial
+        i = jax.random.randint(k_site, (T,), 0, n_prop)  # one proposal per trial
         mi = jnp.take_along_axis(m, i[:, None], axis=1)[:, 0]
         nb_i = nbr_idx[i]          # (T, D)
         nb_w = nbr_w[i]            # (T, D)
@@ -91,16 +114,57 @@ def anneal_sa(
         )
         return (key, m_new, H_new, best_H, best_m), trace
 
+    return jax.lax.scan(cycle, carry, temps)
+
+
+def sa_run(
+    h: jnp.ndarray,
+    nbr_idx: jnp.ndarray,
+    nbr_w: jnp.ndarray,
+    temps: jnp.ndarray,
+    key: jax.Array,
+    *,
+    n_trials: int,
+    n_live=None,
+    track_energy: bool = False,
+):
+    """Full single-problem SA run: :func:`sa_init` + :func:`sa_cycles`.
+
+    Returns (best_H (T,), best_m (T, N), trace) with trace =
+    (mean_H (C,), min_H (C,)) when ``track_energy`` else None.
+    """
+    carry = sa_init(h, nbr_idx, nbr_w, key, n_trials=n_trials)
+    carry, trace = sa_cycles(
+        h, nbr_idx, nbr_w, carry, temps, n_live=n_live,
+        track_energy=track_energy,
+    )
+    _, _, _, best_H, best_m = carry
+    return best_H, best_m, (trace if track_energy else None)
+
+
+def anneal_sa(
+    problem: Union[MaxCutProblem, IsingModel],
+    hp: SAHyperParams = SAHyperParams(),
+    seed: int = 0,
+    *,
+    track_energy: bool = True,
+    temperatures: Optional[np.ndarray] = None,  # override ladder (Fig. 12 mode)
+) -> SAResult:
+    maxcut, model = normalize_problem(problem)
+
+    h, nbr_idx, nbr_w = model.device_arrays()
+    temps = jnp.asarray(
+        sa_temperature_ladder(hp.t_start, hp.t_end, hp.n_cycles)
+        if temperatures is None
+        else np.asarray(temperatures, np.float32)
+    )
+
     @jax.jit
     def run():
-        key = jax.random.PRNGKey(seed)
-        key, k0 = jax.random.split(key)
-        m0 = jnp.where(jax.random.bernoulli(k0, 0.5, (T, n)), 1, -1).astype(jnp.int32)
-        H0 = energy(m0)
-        carry0 = (key, m0, H0, H0, m0)
-        carry, trace = jax.lax.scan(cycle, carry0, temps)
-        _, _, _, best_H, best_m = carry
-        return best_H, best_m, trace
+        return sa_run(
+            h, nbr_idx, nbr_w, temps, jax.random.PRNGKey(seed),
+            n_trials=hp.n_trials, track_energy=track_energy,
+        )
 
     best_H, best_m, trace = run()
     best_H = np.asarray(best_H)

@@ -18,6 +18,7 @@ Fig. 12 comparison.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import math
 from typing import Tuple
 
@@ -63,6 +64,25 @@ class Schedule:
     @property
     def cycles_per_iter(self) -> int:
         return int(self.i0_per_cycle.shape[0])
+
+    def signature(self) -> str:
+        """Stable, hashable identity of the per-cycle program.
+
+        Two schedules that run the same I0 value and assert the same
+        write-enable on every cycle are the *same program* regardless of how
+        they were built (``hassa_schedule``, ``ssa_schedule``, by hand), so
+        the signature hashes only the canonical per-cycle content —
+        (i0_per_cycle, store_mask, tau).  ``steps`` is derivable and
+        excluded.  Used as the schedule component of the serving layer's
+        compiled-executable cache key (serve/anneal_service.py).
+        """
+        payload = (
+            "Schedule/v1",
+            tuple(int(x) for x in np.asarray(self.i0_per_cycle)),
+            tuple(bool(x) for x in np.asarray(self.store_mask)),
+            int(self.tau),
+        )
+        return hashlib.sha256(repr(payload).encode()).hexdigest()[:16]
 
 
 def hassa_schedule(i0_min: int, i0_max: int, tau: int, beta_shift: int = 1) -> Schedule:

@@ -38,7 +38,13 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["local_field", "ssa_plateau", "pad_to", "DEFAULT_INTERPRET"]
+__all__ = [
+    "local_field",
+    "ssa_plateau",
+    "ssa_plateau_batched",
+    "pad_to",
+    "DEFAULT_INTERPRET",
+]
 
 # interpret=True executes the kernel body in Python on CPU — the validation
 # mode for this container; on TPU hosts the same code lowers to Mosaic.
@@ -121,17 +127,17 @@ def local_field(
 # ---------------------------------------------------------------------------
 def _plateau_kernel(
     i0_ref,      # (1, 1) int32 SMEM-ish scalar
-    m_ref,       # (bR, N) float32  spins ±1
-    it_ref,      # (bR, N) int32    Itanh state
-    j_ref,       # (N, N)  J dtype  resident couplings
-    h_ref,       # (1, N)  int32    biases
-    noise_ref,   # (C, bR, N) int8  per-cycle ±1 noise
-    bh_ref,      # (bR, 1) int32    running best energy (input)
-    bm_ref,      # (bR, N) int8     running best spins  (input)
-    m_out,       # (bR, N) float32
-    it_out,      # (bR, N) int32
-    bh_out,      # (bR, 1) int32
-    bm_out,      # (bR, N) int8
+    m_ref,       # (1, bR, N) float32  spins ±1 (leading problem-block axis)
+    it_ref,      # (1, bR, N) int32    Itanh state
+    j_ref,       # (1, N, N)  J dtype  resident couplings of THIS problem
+    h_ref,       # (1, 1, N)  int32    biases
+    noise_ref,   # (1, C, bR, N) int8  per-cycle ±1 noise
+    bh_ref,      # (1, bR, 1) int32    running best energy (input)
+    bm_ref,      # (1, bR, N) int8     running best spins  (input)
+    m_out,       # (1, bR, N) float32
+    it_out,      # (1, bR, N) int32
+    bh_out,      # (1, bR, 1) int32
+    bm_out,      # (1, bR, N) int8
     m_s,         # scratch (bR, N) float32
     it_s,        # scratch (bR, N) int32
     bh_s,        # scratch (bR, 1) float32 (exact ints)
@@ -141,13 +147,13 @@ def _plateau_kernel(
     n_rnd: int,
     eligible: bool,
 ):
-    m_s[...] = m_ref[...]
-    it_s[...] = it_ref[...]
-    bh_s[...] = bh_ref[...].astype(jnp.float32)
-    bm_s[...] = bm_ref[...].astype(jnp.float32)
+    m_s[...] = m_ref[0]
+    it_s[...] = it_ref[0]
+    bh_s[...] = bh_ref[0].astype(jnp.float32)
+    bm_s[...] = bm_ref[0].astype(jnp.float32)
     i0 = i0_ref[0, 0]
-    hf = h_ref[...].astype(jnp.float32)  # (1, N)
-    jm = j_ref[...]
+    hf = h_ref[0].astype(jnp.float32)  # (1, N)
+    jm = j_ref[0]
 
     def energy(m, field):
         # H = -(h·m + m·field)/2 ; exact in f32 for |field| < 2^24
@@ -172,7 +178,7 @@ def _plateau_kernel(
         def _():
             track_best(c, m_s[...], field)
 
-        r = noise_ref[c].astype(jnp.int32)
+        r = noise_ref[0, c].astype(jnp.int32)
         I = field.astype(jnp.int32) + n_rnd * r + it_s[...]
         it_new = jnp.clip(I, -i0, i0 - 1)
         it_s[...] = it_new
@@ -184,10 +190,96 @@ def _plateau_kernel(
     field = jnp.dot(m_s[...], jm, preferred_element_type=jnp.float32) + hf
     track_best(n_cycles, m_s[...], field)
 
-    m_out[...] = m_s[...]
-    it_out[...] = it_s[...]
-    bh_out[...] = bh_s[...].astype(jnp.int32)
-    bm_out[...] = bm_s[...].astype(jnp.int8)
+    m_out[...] = m_s[...][None]
+    it_out[...] = it_s[...][None]
+    bh_out[...] = bh_s[...].astype(jnp.int32)[None]
+    bm_out[...] = bm_s[...].astype(jnp.int8)[None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_rnd", "eligible", "block_r", "interpret"),
+)
+def ssa_plateau_batched(
+    m: jnp.ndarray,       # (B, R, N) float32 ±1
+    itanh: jnp.ndarray,   # (B, R, N) int32
+    J: jnp.ndarray,       # (B, N, N) float32/bfloat16 — one J per problem
+    h: jnp.ndarray,       # (B, N) int32
+    noise: jnp.ndarray,   # (B, C, R, N) int8 ±1
+    i0: jnp.ndarray,      # scalar int32 (shared: same schedule per bucket)
+    best_H: jnp.ndarray,  # (B, R) int32
+    best_m: jnp.ndarray,  # (B, R, N) int8
+    *,
+    n_rnd: int = 2,
+    eligible: bool = True,
+    block_r: int = 8,
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Run one constant-I0 plateau for B stacked problems fully on-chip.
+
+    The grid is (B, R-tiles): grid step (b, i) pins problem b's J in VMEM
+    and runs all C cycles for one R-tile of trials — one launch serves a
+    whole shape bucket of heterogeneous instances (the serving layer's
+    batched hot path).  Per-problem semantics are identical to the B=1
+    kernel; :func:`ssa_plateau` is exactly this with B=1.
+    """
+    interpret = DEFAULT_INTERPRET if interpret is None else interpret
+    B, R, N = m.shape
+    C = noise.shape[1]
+    LANE = 128
+    mf = pad_to(pad_to(m.astype(jnp.float32), 2, LANE), 1, block_r)
+    itp = pad_to(pad_to(itanh, 2, LANE), 1, block_r)
+    Jp = pad_to(pad_to(J, 1, LANE), 2, LANE)
+    hp = pad_to(h.astype(jnp.int32).reshape(B, 1, -1), 2, LANE)
+    np_ = pad_to(pad_to(noise, 3, LANE), 2, block_r)
+    bhp = pad_to(best_H.reshape(B, -1, 1), 1, block_r)
+    bmp = pad_to(pad_to(best_m, 2, LANE), 1, block_r)
+    _, Rp, Np = mf.shape
+    grid = (B, Rp // block_r)
+    i0a = jnp.asarray(i0, jnp.int32).reshape(1, 1)
+
+    kernel = functools.partial(
+        _plateau_kernel, n_cycles=C, n_rnd=n_rnd, eligible=eligible
+    )
+    m_o, it_o, bh_o, bm_o = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, i: (0, 0)),
+            pl.BlockSpec((1, block_r, Np), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_r, Np), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, Np, Np), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, 1, Np), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, C, block_r, Np), lambda b, i: (b, 0, i, 0)),
+            pl.BlockSpec((1, block_r, 1), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_r, Np), lambda b, i: (b, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_r, Np), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_r, Np), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_r, 1), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_r, Np), lambda b, i: (b, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Rp, Np), jnp.float32),
+            jax.ShapeDtypeStruct((B, Rp, Np), jnp.int32),
+            jax.ShapeDtypeStruct((B, Rp, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, Rp, Np), jnp.int8),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_r, Np), jnp.float32),
+            pltpu.VMEM((block_r, Np), jnp.int32),
+            pltpu.VMEM((block_r, 1), jnp.float32),
+            pltpu.VMEM((block_r, Np), jnp.float32),
+        ],
+        interpret=interpret,
+    )(i0a, mf, itp, Jp.astype(J.dtype), hp, np_, bhp, bmp)
+    return (
+        m_o[:, :R, :N],
+        it_o[:, :R, :N],
+        bh_o[:, :R, 0],
+        bm_o[:, :R, :N],
+    )
 
 
 @functools.partial(
@@ -214,62 +306,21 @@ def ssa_plateau(
     Returns (m, itanh, best_H, best_m) after the plateau.  ``eligible``
     implements HA-SSA's storage policy: only plateaus with I0 == I0max
     update the running best (Eq. 6); passing eligible=True for every plateau
-    recovers conventional SSA's policy (Eq. 5).
+    recovers conventional SSA's policy (Eq. 5).  This is the B=1 slice of
+    :func:`ssa_plateau_batched` (one kernel body serves both).
     """
-    interpret = DEFAULT_INTERPRET if interpret is None else interpret
-    R, N = m.shape
-    C = noise.shape[0]
-    LANE = 128
-    mf = pad_to(pad_to(m.astype(jnp.float32), 1, LANE), 0, block_r)
-    itp = pad_to(pad_to(itanh, 1, LANE), 0, block_r)
-    Jp = pad_to(pad_to(J, 0, LANE), 1, LANE)
-    hp = pad_to(h.astype(jnp.int32).reshape(1, -1), 1, LANE)
-    np_ = pad_to(pad_to(noise, 2, LANE), 1, block_r)
-    bhp = pad_to(best_H.reshape(-1, 1), 0, block_r)
-    bmp = pad_to(pad_to(best_m, 1, LANE), 0, block_r)
-    Rp, Np = mf.shape
-    grid = (Rp // block_r,)
-    i0a = jnp.asarray(i0, jnp.int32).reshape(1, 1)
-
-    kernel = functools.partial(
-        _plateau_kernel, n_cycles=C, n_rnd=n_rnd, eligible=eligible
-    )
-    m_o, it_o, bh_o, bm_o = pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda i: (0, 0)),
-            pl.BlockSpec((block_r, Np), lambda i: (i, 0)),
-            pl.BlockSpec((block_r, Np), lambda i: (i, 0)),
-            pl.BlockSpec((Np, Np), lambda i: (0, 0)),
-            pl.BlockSpec((1, Np), lambda i: (0, 0)),
-            pl.BlockSpec((C, block_r, Np), lambda i: (0, i, 0)),
-            pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
-            pl.BlockSpec((block_r, Np), lambda i: (i, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((block_r, Np), lambda i: (i, 0)),
-            pl.BlockSpec((block_r, Np), lambda i: (i, 0)),
-            pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
-            pl.BlockSpec((block_r, Np), lambda i: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((Rp, Np), jnp.float32),
-            jax.ShapeDtypeStruct((Rp, Np), jnp.int32),
-            jax.ShapeDtypeStruct((Rp, 1), jnp.int32),
-            jax.ShapeDtypeStruct((Rp, Np), jnp.int8),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((block_r, Np), jnp.float32),
-            pltpu.VMEM((block_r, Np), jnp.int32),
-            pltpu.VMEM((block_r, 1), jnp.float32),
-            pltpu.VMEM((block_r, Np), jnp.float32),
-        ],
+    m_o, it_o, bh_o, bm_o = ssa_plateau_batched(
+        m[None],
+        itanh[None],
+        J[None],
+        h[None],
+        noise[None],
+        i0,
+        best_H[None],
+        best_m[None],
+        n_rnd=n_rnd,
+        eligible=eligible,
+        block_r=block_r,
         interpret=interpret,
-    )(i0a, mf, itp, Jp.astype(J.dtype), hp, np_, bhp, bmp)
-    return (
-        m_o[:R, :N],
-        it_o[:R, :N],
-        bh_o[:R, 0],
-        bm_o[:R, :N],
     )
+    return m_o[0], it_o[0], bh_o[0], bm_o[0]

@@ -11,6 +11,12 @@ executes each temperature plateau as one resident `pallas_call` (J pinned
 in VMEM); `sparse`/`dense` run the single-contraction-per-cycle scan.
 `--track-energy` records per-cycle energy traces (forces the scan path on
 the pallas backend, which has no per-cycle outputs).
+
+Service mode (DESIGN.md §7): pass a comma list to ``--problem`` (or
+``--service``) and the launcher routes the batch through
+:class:`repro.serve.AnnealService` — bucketed, stacked, one compiled
+plateau program per shape bucket, with per-chunk streaming progress and
+optional ``--target-cut`` early stop.
 """
 from __future__ import annotations
 
@@ -21,9 +27,57 @@ from repro.configs import ANNEAL_PROBLEMS
 from repro.core import SSAHyperParams, anneal, gset, memory
 
 
+def _run_service(problem_names, hp, args):
+    from repro.serve import AnnealRequest, AnnealService
+
+    problems = [gset.load(name) for name in problem_names]
+    requests = [
+        AnnealRequest(problem=p, hp=hp, seed=args.seed + i,
+                      storage=args.storage, target_cut=args.target_cut)
+        for i, p in enumerate(problems)
+    ]
+    svc = AnnealService(backend=args.backend, noise=args.noise,
+                        chunk_shots=args.chunk_shots)
+
+    def progress(ev):
+        bests = ", ".join(
+            f"{problems[i].name}={b}"
+            for i, b in zip(ev.request_indices, ev.best_cut)
+        )
+        print(f"[chunk {ev.chunk + 1}/{ev.chunks_total} bucket={ev.bucket}] "
+              f"best cut: {bests}")
+
+    t0 = time.time()
+    responses = svc.solve(requests, progress=progress)
+    dt = time.time() - t0
+    total_spin_cycles = 0
+    for p, r in zip(problems, responses):
+        shots = r.chunks_run * (hp.m_shot // r.chunks_total)
+        total_spin_cycles += (
+            shots * hp.cycles_per_iter * hp.n_trials * p.n
+        )
+        print(f"{p.name}: best cut {r.result.overall_best_cut} "
+              f"avg {r.result.mean_best_cut:.1f} "
+              f"[bucket={r.bucket} batch={r.batch} "
+              f"chunks={r.chunks_run}/{r.chunks_total}]")
+    info = svc.cache_info()
+    print(f"batch of {len(problems)} in {dt:.1f}s "
+          f"({total_spin_cycles/dt:.2e} aggregate spin-cycles/s; "
+          f"{info['programs']} compiled program(s), "
+          f"{info.get('traces_chunk', 0)} plateau-program trace(s))")
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--problem", choices=ANNEAL_PROBLEMS, default="G11")
+    ap.add_argument("--problem", default="G11",
+                    help="instance name, or a comma list for service mode "
+                         f"(known: {sorted(ANNEAL_PROBLEMS)})")
+    ap.add_argument("--service", action="store_true",
+                    help="route through the AnnealService even for one problem")
+    ap.add_argument("--target-cut", type=int, default=None,
+                    help="service mode: early-stop once every request hits it")
+    ap.add_argument("--chunk-shots", type=int, default=1,
+                    help="service mode: iterations per progress chunk")
     ap.add_argument("--trials", type=int, default=16)
     ap.add_argument("--m-shot", type=int, default=20)
     ap.add_argument("--tau", type=int, default=100)
@@ -41,12 +95,16 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    p = gset.load(args.problem)
     hp = SSAHyperParams(
         n_trials=args.trials, m_shot=args.m_shot, n_rnd=args.n_rnd,
         i0_min=args.i0_min, i0_max=args.i0_max, tau=args.tau,
         beta_shift=args.beta_shift,
     )
+    names = args.problem.split(",")
+    if args.service or len(names) > 1:
+        return _run_service(names, hp, args)
+
+    p = gset.load(args.problem)
     print(f"{p.name}: N={p.n} |E|={len(p.edges)}; {hp.total_cycles} cycles "
           f"× {hp.n_trials} trials; backend={args.backend}; "
           f"storage={args.storage} ({'HA-SSA' if args.storage == 'i0max' else 'SSA'})")

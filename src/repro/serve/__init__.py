@@ -1,1 +1,13 @@
-from .engine import *  # noqa: F401,F403
+"""repro.serve — the serving layer.
+
+The production entry is the annealing service (the paper's own workload,
+DESIGN.md §7): shape-bucketed, batched, compiled-executable-cached Max-Cut
+solving over the plateau engine.  The LM prefill/decode serving stack lives
+in :mod:`repro.serve.lm` (DESIGN.md §6).
+"""
+from .anneal_service import (  # noqa: F401
+    AnnealProgress,
+    AnnealRequest,
+    AnnealResponse,
+    AnnealService,
+)

@@ -1,0 +1,500 @@
+"""Shape-bucketed annealing service: one compiled plateau program serving
+batched heterogeneous Max-Cut requests (DESIGN.md §7).
+
+The paper's operating mode is "one fixed pipeline, many instances": the FPGA
+streams Max-Cut problems through a single annealing datapath.  The TPU
+transcription is this service:
+
+* **Shape buckets** — incoming problems are zero-padded to power-of-two N
+  (:func:`repro.core.engine.bucket_n` / :func:`~repro.core.engine.pad_model`),
+  so a heterogeneous request stream collapses onto a handful of shapes.
+* **Compiled-executable cache** — one jitted plateau program per
+  ``(algorithm, backend, N_bucket, B_bucket, n_trials, n_rnd, noise,
+  storage, Schedule.signature(), chunk)``.  Problem arrays are *arguments*
+  to the program, never closed-over constants, so every same-bucket request
+  group reuses the same executable: 4 G-set instances in one bucket compile
+  the plateau program exactly once (trace-count tested).
+* **Problem-axis batching** — same-bucket requests are stacked on a leading
+  problem axis and solved in ONE device launch via the engine's batched
+  backends (vmap for sparse/dense, the (B, R-tile)-grid resident kernel for
+  pallas).  Batched runs are bit-identical per problem to unbatched,
+  unpadded runs on the live lanes (padding-invariance tested) when the
+  noise source is ``xorshift``.
+* **Chunked execution with early stop** — the m_shot iteration budget runs
+  in chunks; after each chunk the per-request best energy is reported
+  (streaming progress) and a group whose requests have all reached their
+  ``target_cut`` stops early.
+
+SA (:class:`~repro.core.sa.SAHyperParams`) and PT-SSA
+(:class:`~repro.core.pt.PTSSAHyperParams`) requests ride the same entry:
+they are grouped, bucketed, stacked, chunked and early-stopped identically —
+SA through the vmapped Metropolis core (`repro.core.sa.sa_run` pieces),
+PT-SSA through :func:`repro.core.pt.pt_ssa_rounds` with the replica ladder
+on the engine's trial axis.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable, List, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import (
+    bucket_n,
+    finalize_cut,
+    make_batched_backend,
+    next_pow2,
+    normalize_problem,
+    schedule_plateaus,
+)
+from repro.core.ising import IsingModel, MaxCutProblem
+from repro.core.pt import PTSSAHyperParams, PTSSAResult, pt_ssa_rounds
+from repro.core.sa import SAHyperParams, SAResult, sa_cycles, sa_init
+from repro.core.schedule import sa_temperature_ladder
+from repro.core.ssa import AnnealResult, SSAHyperParams
+
+__all__ = ["AnnealRequest", "AnnealResponse", "AnnealProgress", "AnnealService"]
+
+HyperParams = Union[SSAHyperParams, SAHyperParams, PTSSAHyperParams]
+
+
+@dataclasses.dataclass(frozen=True)
+class AnnealRequest:
+    """One problem + hyperparameters, as the service accepts it.
+
+    ``hp`` selects the algorithm: SSAHyperParams → SSA/HA-SSA (the paper's
+    annealer), SAHyperParams → Metropolis SA, PTSSAHyperParams → PT on the
+    plateau engine.  ``target_cut`` arms chunk-level early stop: once the
+    request's best cut reaches it (and every other live request in its
+    batch group is also satisfied), remaining chunks are skipped.
+    """
+
+    problem: Union[MaxCutProblem, IsingModel]
+    hp: HyperParams = SSAHyperParams()
+    seed: int = 0
+    storage: str = "i0max"         # SSA only: 'i0max' (HA-SSA) | 'all' (SSA)
+    schedule_kind: str = "hassa"   # SSA only
+    target_cut: Optional[int] = None
+
+
+@dataclasses.dataclass
+class AnnealResponse:
+    request: AnnealRequest
+    result: object                 # AnnealResult | SAResult | PTSSAResult
+    wall_s: float                  # group wall time (the batch solves together)
+    bucket: int                    # padded N the request ran at
+    batch: int                     # live requests stacked in its group
+    chunks_run: int                # chunks executed (early stop may cut short)
+    chunks_total: int
+    chunk_best_cut: np.ndarray     # (chunks_run,) streaming best-objective trace
+
+
+@dataclasses.dataclass(frozen=True)
+class AnnealProgress:
+    """One streaming progress report (per group, per chunk)."""
+
+    kind: str                      # 'ssa' | 'sa' | 'ptssa'
+    bucket: int
+    chunk: int
+    chunks_total: int
+    request_indices: tuple         # indices into the solve() request list
+    best_cut: tuple                # best objective so far, per request
+
+
+def _largest_divisor_leq(n: int, k: int) -> int:
+    k = max(1, min(int(k), int(n)))
+    while n % k:
+        k -= 1
+    return k
+
+
+class AnnealService:
+    """Batched annealing-as-a-service over the plateau engine.
+
+    One service instance owns a backend choice, a noise source and the
+    compiled-executable cache.  ``solve(requests)`` groups requests by
+    (algorithm, shape bucket, hyperparameters), stacks each group on the
+    problem axis, and runs it through one cached compiled program.
+
+    Bit-exactness contract (noise='xorshift'): an SSA or PT-SSA request
+    solved through the service — padded, stacked, chunked — returns the
+    same best energy/spins on its live lanes as the corresponding
+    single-problem driver (`anneal` / `anneal_pt_ssa`) on the unpadded
+    instance.  SA requests are valid runs but not bit-comparable (their
+    threefry init draw is shape-dependent).
+    """
+
+    def __init__(
+        self,
+        backend: str = "sparse",
+        *,
+        noise: str = "xorshift",
+        chunk_shots: int = 1,
+        sa_chunks: int = 8,
+        min_bucket: int = 64,
+        backend_opts: Optional[dict] = None,
+    ):
+        self.backend = backend
+        self.noise = noise
+        self.chunk_shots = int(chunk_shots)   # SSA iterations / PT rounds per chunk
+        self.sa_chunks = int(sa_chunks)       # SA: report/early-stop points per run
+        self.min_bucket = int(min_bucket)
+        self.backend_opts = dict(backend_opts or {})
+        self._programs: dict = {}
+        self.stats = collections.Counter()
+
+    # ------------------------------------------------------------------
+    # Public API
+    # ------------------------------------------------------------------
+    def solve(
+        self,
+        requests: Sequence[AnnealRequest],
+        progress: Optional[Callable[[AnnealProgress], None]] = None,
+    ) -> List[AnnealResponse]:
+        """Solve a batch of heterogeneous requests; responses keep order."""
+        self.stats["requests"] += len(requests)
+        responses: List[Optional[AnnealResponse]] = [None] * len(requests)
+        groups = collections.defaultdict(list)
+        for idx, req in enumerate(requests):
+            maxcut, model = normalize_problem(req.problem)
+            nb = bucket_n(model.n, self.min_bucket)
+            groups[self._group_key(req, nb)].append((idx, req, maxcut, model))
+        self.stats["groups"] += len(groups)
+        for key, items in sorted(groups.items(), key=lambda kv: repr(kv[0])):
+            kind, nb = key[0], key[1]
+            solver = {"ssa": self._solve_ssa_group,
+                      "sa": self._solve_sa_group,
+                      "ptssa": self._solve_ptssa_group}[kind]
+            solver(nb, items, responses, progress)
+        return responses  # type: ignore[return-value]
+
+    def cache_info(self) -> dict:
+        """Executable-cache observability (programs + trace counters)."""
+        return {
+            "programs": len(self._programs),
+            "keys": sorted(repr(k) for k in self._programs),
+            **{k: v for k, v in self.stats.items()},
+        }
+
+    # ------------------------------------------------------------------
+    # Grouping
+    # ------------------------------------------------------------------
+    def _group_key(self, req: AnnealRequest, nb: int):
+        hp = req.hp
+        if isinstance(hp, SSAHyperParams):
+            sig = hp.schedule(req.schedule_kind).signature()
+            return ("ssa", nb, hp.n_trials, hp.n_rnd, hp.m_shot, req.storage, sig)
+        if isinstance(hp, SAHyperParams):
+            return ("sa", nb, hp)
+        if isinstance(hp, PTSSAHyperParams):
+            return ("ptssa", nb, hp)
+        raise TypeError(f"unsupported hyperparameter type {type(hp).__name__}")
+
+    def _pad_group(self, items):
+        """Pad a request group to a power-of-two batch (executable reuse).
+
+        Dummy slots repeat the first request; their outputs are discarded.
+        """
+        b_live = len(items)
+        b_bucket = next_pow2(b_live)
+        padded = list(items) + [items[0]] * (b_bucket - b_live)
+        return padded, b_live, b_bucket
+
+    # ------------------------------------------------------------------
+    # SSA / HA-SSA groups (the tentpole hot path)
+    # ------------------------------------------------------------------
+    def _solve_ssa_group(self, nb, items, responses, progress):
+        t0 = time.perf_counter()
+        _, req0, _, _ = items[0]
+        hp: SSAHyperParams = req0.hp
+        plateaus = schedule_plateaus(hp.schedule(req0.schedule_kind), req0.storage)
+        stored_per_iter = sum(p.length for p in plateaus if p.eligible)
+        chunk = _largest_divisor_leq(hp.m_shot, self.chunk_shots)
+        n_chunks = hp.m_shot // chunk
+
+        padded, b_live, b_bucket = self._pad_group(items)
+        sig = self._group_key(req0, nb)[-1]
+        cache_key = ("ssa", self.backend, nb, b_bucket, hp.n_trials, hp.n_rnd,
+                     self.noise, req0.storage, sig, chunk)
+        ent = self._programs.get(cache_key)
+        if ent is None:
+            self.stats["program_cache_misses"] += 1
+            bk = make_batched_backend(
+                self.backend, n_bucket=nb, n_trials=hp.n_trials,
+                n_rnd=hp.n_rnd, noise=self.noise, **self.backend_opts,
+            )
+
+            def init_fn(problem, ns0):
+                self.stats["traces_init"] += 1
+                return bk.init_state(problem, ns0)
+
+            def chunk_fn(problem, state):
+                self.stats["traces_chunk"] += 1
+                return bk.run_shots(problem, state, plateaus, chunk)
+
+            ent = (bk, jax.jit(init_fn), jax.jit(chunk_fn))
+            self._programs[cache_key] = ent
+        else:
+            self.stats["program_cache_hits"] += 1
+        bk, init_fn, chunk_fn = ent
+
+        stacked = bk.stack([model for _, _, _, model in padded])
+        ns0 = bk.init_noise(
+            [req.seed for _, req, _, _ in padded],
+            [model.n for _, _, _, model in padded],
+        )
+        state = init_fn(stacked, ns0)
+
+        state, chunk_traces = self._chunk_loop(
+            "ssa", nb, items, n_chunks, progress,
+            lambda st: chunk_fn(stacked, st), state,
+            lambda st: st.best_H,
+        )
+        best_H = np.asarray(state.best_H)
+        best_m = np.asarray(state.best_m)
+        wall = time.perf_counter() - t0
+
+        for slot, (idx, req, maxcut, model) in enumerate(items):
+            bh = best_H[slot]
+            result = AnnealResult(
+                best_cut=np.asarray(finalize_cut(bh, maxcut)),
+                best_energy=bh,
+                best_m=best_m[slot][:, : model.n],
+                energy_mean=None,
+                energy_min=None,
+                traj=None,
+                stored_bits_per_iter=model.n * stored_per_iter,
+                hp=req.hp,
+            )
+            responses[idx] = AnnealResponse(
+                request=req, result=result, wall_s=wall, bucket=nb,
+                batch=b_live, chunks_run=len(chunk_traces[slot]),
+                chunks_total=n_chunks,
+                chunk_best_cut=np.asarray(chunk_traces[slot]),
+            )
+
+    # ------------------------------------------------------------------
+    # SA groups
+    # ------------------------------------------------------------------
+    def _solve_sa_group(self, nb, items, responses, progress):
+        t0 = time.perf_counter()
+        _, req0, _, _ = items[0]
+        hp: SAHyperParams = req0.hp
+        n_chunks = _largest_divisor_leq(hp.n_cycles, self.sa_chunks)
+        chunk_cycles = hp.n_cycles // n_chunks
+
+        padded, b_live, b_bucket = self._pad_group(items)
+        cache_key = ("sa", nb, b_bucket, hp.n_trials, chunk_cycles)
+        ent = self._programs.get(cache_key)
+        if ent is None:
+            self.stats["program_cache_misses"] += 1
+
+            def init_fn(problem, keys):
+                self.stats["traces_init"] += 1
+                return jax.vmap(
+                    lambda pr, k: sa_init(
+                        pr["h"], pr["nbr_idx"], pr["nbr_w"], k,
+                        n_trials=hp.n_trials,
+                    )
+                )(problem, keys)
+
+            def chunk_fn(problem, carry, temps, n_lives):
+                self.stats["traces_chunk"] += 1
+                def one(pr, ca, nl):
+                    ca, _ = sa_cycles(
+                        pr["h"], pr["nbr_idx"], pr["nbr_w"], ca, temps,
+                        n_live=nl,
+                    )
+                    return ca
+                return jax.vmap(one)(problem, carry, n_lives)
+
+            ent = (jax.jit(init_fn), jax.jit(chunk_fn))
+            self._programs[cache_key] = ent
+        else:
+            self.stats["program_cache_hits"] += 1
+        init_fn, chunk_fn = ent
+
+        # SA reuses the sparse stacking (gather-based ΔH).
+        stacker = make_batched_backend(
+            "sparse", n_bucket=nb, n_trials=hp.n_trials, noise="xorshift"
+        )
+        stacked = stacker.stack([model for _, _, _, model in padded])
+        keys = jnp.stack(
+            [jax.random.PRNGKey(req.seed) for _, req, _, _ in padded]
+        )
+        n_lives = jnp.asarray([model.n for _, _, _, model in padded], jnp.int32)
+        temps = np.asarray(
+            sa_temperature_ladder(hp.t_start, hp.t_end, hp.n_cycles), np.float32
+        )
+        carry = init_fn(stacked, keys)
+
+        chunk_arrays = [
+            jnp.asarray(temps[c * chunk_cycles : (c + 1) * chunk_cycles])
+            for c in range(n_chunks)
+        ]
+        state_idx = [0]
+
+        def step(carry):
+            c = state_idx[0]
+            state_idx[0] += 1
+            return chunk_fn(stacked, carry, chunk_arrays[c], n_lives)
+
+        carry, chunk_traces = self._chunk_loop(
+            "sa", nb, items, n_chunks, progress, step, carry,
+            lambda ca: ca[3],
+        )
+        _, _, _, best_H, best_m = carry
+        best_H = np.asarray(best_H)
+        best_m = np.asarray(best_m)
+        wall = time.perf_counter() - t0
+
+        for slot, (idx, req, maxcut, model) in enumerate(items):
+            bh = best_H[slot]
+            result = SAResult(
+                best_cut=np.asarray(finalize_cut(bh, maxcut)),
+                best_energy=bh,
+                best_m=best_m[slot][:, : model.n],
+                energy_mean=None,
+                energy_min=None,
+                hp=req.hp,
+            )
+            responses[idx] = AnnealResponse(
+                request=req, result=result, wall_s=wall, bucket=nb,
+                batch=b_live, chunks_run=len(chunk_traces[slot]),
+                chunks_total=n_chunks,
+                chunk_best_cut=np.asarray(chunk_traces[slot]),
+            )
+
+    # ------------------------------------------------------------------
+    # PT-SSA groups
+    # ------------------------------------------------------------------
+    def _solve_ptssa_group(self, nb, items, responses, progress):
+        t0 = time.perf_counter()
+        _, req0, _, _ = items[0]
+        hp: PTSSAHyperParams = req0.hp
+        if self.backend == "pallas":
+            raise ValueError(
+                "pt-ssa needs per-replica I0 columns; run the service with "
+                "backend='sparse' or 'dense' for PTSSAHyperParams requests"
+            )
+        chunk = _largest_divisor_leq(hp.n_rounds, self.chunk_shots)
+        n_chunks = hp.n_rounds // chunk
+
+        padded, b_live, b_bucket = self._pad_group(items)
+        cache_key = ("ptssa", self.backend, nb, b_bucket, hp, self.noise, chunk)
+        ent = self._programs.get(cache_key)
+        if ent is None:
+            self.stats["program_cache_misses"] += 1
+            bk = make_batched_backend(
+                self.backend, n_bucket=nb, n_trials=hp.n_replicas,
+                n_rnd=hp.n_rnd, noise=self.noise, **self.backend_opts,
+            )
+
+            def init_fn(problem, ns0):
+                self.stats["traces_init"] += 1
+                return bk.init_state(problem, ns0)
+
+            def chunk_fn(problem, state, keys, parities):
+                self.stats["traces_chunk"] += 1
+
+                def one(pr, st, ks):
+                    field_fn = lambda m: bk._field_one(pr, m)  # noqa: E731
+                    return pt_ssa_rounds(
+                        field_fn, bk._noise_step_one, pr["h"], hp, st,
+                        ks, parities,
+                    )
+
+                return jax.vmap(one)(problem, state, keys)
+
+            ent = (bk, jax.jit(init_fn), jax.jit(chunk_fn))
+            self._programs[cache_key] = ent
+        else:
+            self.stats["program_cache_hits"] += 1
+        bk, init_fn, chunk_fn = ent
+
+        stacked = bk.stack([model for _, _, _, model in padded])
+        ns0 = bk.init_noise(
+            [req.seed for _, req, _, _ in padded],
+            [model.n for _, _, _, model in padded],
+        )
+        state = init_fn(stacked, ns0)
+
+        # Same swap-key derivation as anneal_pt_ssa, split once over all
+        # rounds then sliced per chunk — chunked == unchunked, bitwise.
+        all_keys = jnp.stack([
+            jax.random.split(
+                jax.random.PRNGKey(req.seed ^ 0x5CA1AB1E), hp.n_rounds
+            )
+            for _, req, _, _ in padded
+        ])  # (B, n_rounds, 2)
+        parities = jnp.arange(hp.n_rounds, dtype=jnp.int32) % 2
+        state_idx = [0]
+
+        def step(st):
+            c = state_idx[0]
+            state_idx[0] += 1
+            sl = slice(c * chunk, (c + 1) * chunk)
+            return chunk_fn(stacked, st, all_keys[:, sl], parities[sl])
+
+        state, chunk_traces = self._chunk_loop(
+            "ptssa", nb, items, n_chunks, progress, step, state,
+            lambda st: st.best_H,
+        )
+        best_H = np.asarray(state.best_H)
+        best_m = np.asarray(state.best_m)
+        wall = time.perf_counter() - t0
+
+        for slot, (idx, req, maxcut, model) in enumerate(items):
+            bh = best_H[slot]
+            result = PTSSAResult(
+                best_cut=np.asarray(finalize_cut(bh, maxcut)),
+                best_energy=bh,
+                best_m=best_m[slot][:, : model.n],
+                energy_mean=None,
+                energy_min=None,
+                hp=req.hp,
+            )
+            responses[idx] = AnnealResponse(
+                request=req, result=result, wall_s=wall, bucket=nb,
+                batch=b_live, chunks_run=len(chunk_traces[slot]),
+                chunks_total=n_chunks,
+                chunk_best_cut=np.asarray(chunk_traces[slot]),
+            )
+
+    # ------------------------------------------------------------------
+    # Shared chunk loop: streaming best_H reports + early stop
+    # ------------------------------------------------------------------
+    def _chunk_loop(self, kind, nb, items, n_chunks, progress, step, state,
+                    best_of):
+        """Run up to n_chunks steps; report per-chunk bests; stop early when
+        every request that declared a target_cut has reached it (and all
+        requests declared one)."""
+        any_untargeted = any(req.target_cut is None for _, req, _, _ in items)
+        traces = [[] for _ in items]
+        for c in range(n_chunks):
+            state = step(state)
+            best_H = np.asarray(best_of(state))  # device sync: the report
+            bests = []
+            for slot, (idx, req, maxcut, model) in enumerate(items):
+                obj = np.asarray(finalize_cut(best_H[slot], maxcut))
+                best = int(np.max(obj))
+                traces[slot].append(best)
+                bests.append(best)
+            self.stats["chunks_run"] += 1
+            if progress is not None:
+                progress(AnnealProgress(
+                    kind=kind, bucket=nb, chunk=c, chunks_total=n_chunks,
+                    request_indices=tuple(idx for idx, *_ in items),
+                    best_cut=tuple(bests),
+                ))
+            if not any_untargeted and all(
+                b >= req.target_cut
+                for b, (_, req, _, _) in zip(bests, items)
+            ):
+                self.stats["early_stops"] += 1
+                break
+        return state, traces

@@ -1,7 +1,11 @@
-"""Serving: prefill + decode steps and a batched greedy/temperature sampler.
+"""LM serving: prefill + decode steps and a batched greedy/temperature sampler.
 
 serve_step == one ``decode_step`` (a new token against a KV cache of
 ``seq_len``) — the thing the decode_* / long_* dry-run cells lower.
+
+This is the *language-model* side of the serve package (DESIGN.md §6); the
+production serving layer for the paper's own workload — batched Max-Cut
+annealing — is :mod:`repro.serve.anneal_service` (DESIGN.md §7).
 """
 from __future__ import annotations
 

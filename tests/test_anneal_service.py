@@ -1,0 +1,238 @@
+"""Shape-bucketed annealing service (DESIGN.md §7).
+
+The serving contracts under test:
+
+* one compiled plateau program per shape bucket — counted by trace-time
+  side effects AND by the jitted functions' cache sizes (jit cache misses);
+* batched, padded, chunked runs are bit-identical on the live lanes to the
+  unpadded single-problem drivers (padding invariance, all three backends);
+* chunked execution streams per-chunk best reports and early-stops on
+  target_cut;
+* SA and PT-SSA requests ride the same entry.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    SAHyperParams,
+    SSAHyperParams,
+    anneal,
+    anneal_sa,
+    bucket_n,
+    gset,
+    memory,
+    pad_model,
+)
+from repro.core.pt import PTSSAHyperParams, anneal_pt_ssa
+from repro.serve import AnnealRequest, AnnealService
+
+HP = SSAHyperParams(n_trials=3, m_shot=4, tau=4, i0_min=1, i0_max=8)
+BACKENDS = ["sparse", "dense", "pallas"]
+
+
+def _mixed_problems():
+    """Heterogeneous sizes spanning two buckets (min_bucket=16 → 64, 128)."""
+    return [
+        gset.toroidal_grid(36, seed=1, name="t36"),
+        gset.king_graph(49, seed=2, name="k49"),
+        gset.toroidal_grid(64, seed=3, name="t64"),
+        gset.toroidal_grid(100, seed=4, name="t100"),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# The acceptance property: mixed-size batches == per-problem unpadded runs
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_mixed_batch_bit_identical_to_unpadded_runs(backend):
+    problems = _mixed_problems()
+    reqs = [AnnealRequest(problem=p, hp=HP, seed=10 + i)
+            for i, p in enumerate(problems)]
+    svc = AnnealService(backend=backend, min_bucket=16)
+    responses = svc.solve(reqs)
+    for i, (p, resp) in enumerate(zip(problems, responses)):
+        ref = anneal(p, HP, seed=10 + i, record="best", noise="xorshift",
+                     backend="sparse", track_energy=False)
+        np.testing.assert_array_equal(ref.best_energy, resp.result.best_energy)
+        np.testing.assert_array_equal(ref.best_cut, resp.result.best_cut)
+        np.testing.assert_array_equal(ref.best_m, resp.result.best_m)
+        assert resp.result.best_m.shape == (HP.n_trials, p.n)  # live lanes only
+        assert resp.bucket == bucket_n(p.n, 16)
+
+
+# ---------------------------------------------------------------------------
+# Padding-invariance property: padded-to-next-bucket == unpadded, live lanes
+# ---------------------------------------------------------------------------
+@given(st.integers(0, 10_000))
+@settings(max_examples=3, deadline=None)
+def test_padding_invariance_property(seed):
+    """A problem zero-padded to its bucket (zero J rows/cols, zero h) yields
+    the identical best cut and best spins on the live lanes — all three
+    backends."""
+    p = gset.king_graph(36, seed=seed % 7)
+    model = p.to_ising()
+    nb = bucket_n(model.n, 16)
+    assert nb > model.n  # the property is about actual padding
+    padded = pad_model(model, nb)
+    assert padded.n == nb
+    assert np.all(np.asarray(padded.h[model.n:]) == 0)
+    assert np.all(np.asarray(padded.nbr_w[model.n:]) == 0)
+
+    ref = anneal(p, HP, seed=seed, record="best", noise="xorshift",
+                 backend="sparse", track_energy=False)
+    for backend in BACKENDS:
+        svc = AnnealService(backend=backend, min_bucket=16)
+        resp = svc.solve([AnnealRequest(problem=p, hp=HP, seed=seed)])[0]
+        np.testing.assert_array_equal(ref.best_cut, resp.result.best_cut)
+        np.testing.assert_array_equal(ref.best_m, resp.result.best_m)
+
+
+# ---------------------------------------------------------------------------
+# One compile per bucket (the retrace/recompile fix), counted two ways
+# ---------------------------------------------------------------------------
+def test_same_bucket_batch_compiles_plateau_program_once():
+    svc = AnnealService(backend="sparse", min_bucket=16)
+    reqs = [
+        AnnealRequest(problem=gset.toroidal_grid(36, seed=s, name=f"g{s}"),
+                      hp=HP, seed=s)
+        for s in range(4)
+    ]
+    svc.solve(reqs)
+    # Trace-time side-effect counters: the plateau chunk program traced once.
+    assert svc.stats["traces_chunk"] == 1
+    assert svc.stats["traces_init"] == 1
+    assert svc.stats["program_cache_misses"] == 1
+    # jax.jit's own cache agrees: one miss per jitted program.
+    (_, init_fn, chunk_fn), = svc._programs.values()
+    assert init_fn._cache_size() == 1
+    assert chunk_fn._cache_size() == 1
+
+
+def test_one_compile_per_bucket_for_mixed_sizes():
+    svc = AnnealService(backend="sparse", min_bucket=16)
+    reqs = [AnnealRequest(problem=p, hp=HP, seed=i)
+            for i, p in enumerate(_mixed_problems())]
+    svc.solve(reqs)
+    # 36/49/64 → bucket 64; 100 → bucket 128: two buckets, two programs.
+    assert svc.stats["traces_chunk"] == 2
+    assert len(svc._programs) == 2
+
+
+def test_executable_reused_across_solve_calls():
+    svc = AnnealService(backend="sparse", min_bucket=16)
+    mk = lambda s: [AnnealRequest(  # noqa: E731
+        problem=gset.toroidal_grid(36, seed=s), hp=HP, seed=s)]
+    svc.solve(mk(0))
+    svc.solve(mk(1))
+    svc.solve(mk(2))
+    assert svc.stats["traces_chunk"] == 1  # compiled once, reused twice
+    assert svc.stats["program_cache_hits"] == 2
+
+
+# ---------------------------------------------------------------------------
+# Chunked execution: streaming reports + early stop
+# ---------------------------------------------------------------------------
+def test_chunk_reports_stream_and_early_stop():
+    p = gset.toroidal_grid(36, seed=1)
+    hp = SSAHyperParams(n_trials=3, m_shot=10, tau=4, i0_min=1, i0_max=8)
+    events = []
+    svc = AnnealService(backend="sparse", min_bucket=16)
+    resp = svc.solve(
+        [AnnealRequest(problem=p, hp=hp, seed=0, target_cut=1)],
+        progress=events.append,
+    )[0]
+    assert resp.chunks_run < resp.chunks_total  # early stop fired
+    assert resp.result.overall_best_cut >= 1
+    assert len(events) == resp.chunks_run
+    assert [e.chunk for e in events] == list(range(resp.chunks_run))
+    # the streamed trace is monotone (a running best) and matches the result
+    trace = resp.chunk_best_cut
+    assert len(trace) == resp.chunks_run
+    assert all(a <= b for a, b in zip(trace, trace[1:]))
+    assert trace[-1] == resp.result.overall_best_cut
+    assert svc.stats["early_stops"] == 1
+
+
+def test_untargeted_requests_run_to_completion():
+    p = gset.toroidal_grid(36, seed=1)
+    hp = SSAHyperParams(n_trials=3, m_shot=4, tau=4, i0_min=1, i0_max=8)
+    svc = AnnealService(backend="sparse", min_bucket=16)
+    resp = svc.solve([AnnealRequest(problem=p, hp=hp, seed=0)])[0]
+    assert resp.chunks_run == resp.chunks_total == hp.m_shot
+
+
+def test_chunked_equals_unchunked():
+    p = gset.toroidal_grid(36, seed=5)
+    hp = SSAHyperParams(n_trials=3, m_shot=6, tau=4, i0_min=1, i0_max=8)
+    r1 = AnnealService(backend="sparse", min_bucket=16, chunk_shots=1).solve(
+        [AnnealRequest(problem=p, hp=hp, seed=3)])[0]
+    r3 = AnnealService(backend="sparse", min_bucket=16, chunk_shots=3).solve(
+        [AnnealRequest(problem=p, hp=hp, seed=3)])[0]
+    np.testing.assert_array_equal(r1.result.best_energy, r3.result.best_energy)
+    assert r1.chunks_run == 6 and r3.chunks_run == 2
+
+
+# ---------------------------------------------------------------------------
+# SA and PT-SSA ride the same service entry
+# ---------------------------------------------------------------------------
+def test_sa_requests_via_service():
+    problems = [gset.toroidal_grid(36, seed=1), gset.king_graph(49, seed=2)]
+    hp = SAHyperParams(n_trials=4, n_cycles=400)
+    svc = AnnealService(backend="sparse", min_bucket=16)
+    responses = svc.solve(
+        [AnnealRequest(problem=p, hp=hp, seed=1) for p in problems]
+    )
+    for p, r in zip(problems, responses):
+        assert r.result.best_m.shape == (hp.n_trials, p.n)
+        # padded lanes never proposed → reported spins reproduce the cut
+        cuts = p.cut_value(np.asarray(r.result.best_m, np.int32))
+        np.testing.assert_array_equal(np.asarray(cuts), r.result.best_cut)
+        # sanity vs the single-problem driver's solution quality
+        ref = anneal_sa(p, hp, seed=1, track_energy=False)
+        assert r.result.overall_best_cut >= 0.7 * max(ref.overall_best_cut, 1)
+
+
+def test_ptssa_requests_bit_identical_to_driver():
+    problems = [gset.toroidal_grid(36, seed=1), gset.king_graph(49, seed=2)]
+    hp = PTSSAHyperParams(n_replicas=6, n_rounds=8, tau=10)
+    svc = AnnealService(backend="sparse", min_bucket=16, chunk_shots=2)
+    responses = svc.solve(
+        [AnnealRequest(problem=p, hp=hp, seed=2) for p in problems]
+    )
+    for p, r in zip(problems, responses):
+        ref = anneal_pt_ssa(p, hp, seed=2, backend="sparse", noise="xorshift")
+        np.testing.assert_array_equal(ref.best_energy, r.result.best_energy)
+        np.testing.assert_array_equal(ref.best_cut, r.result.best_cut)
+
+
+def test_ptssa_rejects_pallas_backend():
+    with pytest.raises(ValueError, match="per-replica I0"):
+        AnnealService(backend="pallas", min_bucket=16).solve(
+            [AnnealRequest(problem=gset.toroidal_grid(36, seed=1),
+                           hp=PTSSAHyperParams(n_replicas=4, n_rounds=2, tau=5))]
+        )
+
+
+# ---------------------------------------------------------------------------
+# Bucketing + padding-overhead memory model
+# ---------------------------------------------------------------------------
+def test_bucket_n_powers_of_two():
+    assert bucket_n(800) == 1024
+    assert bucket_n(1024) == 1024
+    assert bucket_n(1025) == 2048
+    assert bucket_n(10, min_bucket=64) == 64
+
+
+def test_padding_overhead_model():
+    hp = SSAHyperParams()  # Table II: tau=100
+    # N=800 → bucket 1024: 224 dead lanes × 100 stored cycles per iteration
+    assert memory.padding_overhead_bits_per_iteration(800, hp) == 224 * 100
+    # conventional SSA stores every plateau → steps× the waste
+    assert memory.padding_overhead_bits_per_iteration(
+        800, hp, hardware_aware=False
+    ) == 224 * 100 * memory.memory_ratio(hp)
+    # exactly-bucket-sized problems waste nothing
+    assert memory.padding_overhead_bits_per_iteration(1024, hp) == 0
+    assert memory.padding_overhead_fraction(800) == pytest.approx(224 / 1024)

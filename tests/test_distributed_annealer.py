@@ -1,11 +1,16 @@
 """The distributed (pjit-able) iteration step must reproduce the core
-annealer exactly (same noise stream, same storage policy)."""
+annealer exactly (same noise stream, same storage policy) — and the batched
+step (the serving layer's problem axis on the mesh) must reproduce the
+single-problem step per problem."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import SSAHyperParams, anneal, gset
-from repro.core.distributed import make_iteration_step
+from repro.core.distributed import (
+    make_batched_iteration_step,
+    make_iteration_step,
+)
 from repro.core.rng import xorshift_init, xorshift_next_bits
 
 
@@ -59,3 +64,57 @@ def test_iteration_step_improves_over_iterations():
     np.testing.assert_array_equal(
         np.asarray(cuts), (g.w_total - np.asarray(best_H)) // 2
     )
+
+
+def test_batched_iteration_step_matches_per_problem_steps():
+    """B stacked problems through the batched step == B single-problem steps."""
+    problems = [gset.king_graph(36, seed=5), gset.toroidal_grid(36, seed=7)]
+    models = [p.to_ising() for p in problems]
+    hp = SSAHyperParams(n_trials=4, m_shot=2, tau=5, i0_min=1, i0_max=8)
+    T, N, B = hp.n_trials, 36, len(models)
+
+    step1 = jax.jit(make_iteration_step(hp, mesh=None))
+    stepB = jax.jit(make_batched_iteration_step(hp, mesh=None))
+
+    # identical per-problem init for both paths
+    rngs = [xorshift_init(20 + i, (T, N)) for i in range(B)]
+    ms, its = [], []
+    rng1 = []
+    for r in rngs:
+        r, r0 = xorshift_next_bits(r)
+        rng1.append(r)
+        m = r0.astype(jnp.float32)
+        ms.append(m)
+        its.append(jnp.where(m > 0, 0, -1).astype(jnp.int32))
+    Js = [jnp.asarray(mo.dense_J(), jnp.float32) for mo in models]
+    hs = [jnp.asarray(mo.h, jnp.int32) for mo in models]
+    bH = jnp.full((T,), 2**30, jnp.int32)
+
+    singles = []
+    for i in range(B):
+        st = (rng1[i], ms[i], its[i], bH, ms[i].astype(jnp.int8))
+        for _ in range(hp.m_shot):
+            st = step1(*st, Js[i], hs[i])
+        singles.append(st)
+
+    stB = (
+        jnp.stack(rng1, axis=1),            # (4, B, T, N)
+        jnp.stack(ms),
+        jnp.stack(its),
+        jnp.stack([bH] * B),
+        jnp.stack([m.astype(jnp.int8) for m in ms]),
+    )
+    JB, hB = jnp.stack(Js), jnp.stack(hs)
+    for _ in range(hp.m_shot):
+        stB = stepB(*stB, JB, hB)
+
+    for i in range(B):
+        np.testing.assert_array_equal(
+            np.asarray(stB[3][i]), np.asarray(singles[i][3]), err_msg="best_H"
+        )
+        np.testing.assert_array_equal(
+            np.asarray(stB[4][i]), np.asarray(singles[i][4]), err_msg="best_m"
+        )
+        np.testing.assert_array_equal(
+            np.asarray(stB[1][i]), np.asarray(singles[i][1]), err_msg="m"
+        )

@@ -80,6 +80,38 @@ def test_plateau_sweep(r, n, c, eligible, dtype):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=name)
 
 
+@pytest.mark.parametrize("eligible", [True, False])
+def test_plateau_batched_matches_per_problem(eligible):
+    """The (B, R-tile)-grid batched kernel == B independent B=1 launches."""
+    rng = np.random.default_rng(7)
+    B, r, n, c = 3, 4, 36, 5
+    Js, hs = [], []
+    for b in range(B):
+        _, model, J = _dense_problem(n, seed=10 + b)
+        Js.append(np.asarray(J, np.float32))
+        hs.append(np.asarray(model.h, np.int32))
+    J = jnp.asarray(np.stack(Js))
+    h = jnp.asarray(np.stack(hs))
+    m = jnp.asarray(rng.choice([-1.0, 1.0], size=(B, r, n)).astype(np.float32))
+    itanh = jnp.asarray(rng.integers(-4, 4, size=(B, r, n)), jnp.int32)
+    noise = jnp.asarray(rng.choice([-1, 1], size=(B, c, r, n)).astype(np.int8))
+    bH = jnp.full((B, r), 2**30, jnp.int32)
+    bm = m.astype(jnp.int8)
+    out_b = ssa_update.ssa_plateau_batched(
+        m, itanh, J, h, noise, jnp.int32(8), bH, bm,
+        n_rnd=2, eligible=eligible, block_r=4,
+    )
+    for b in range(B):
+        out_1 = ssa_update.ssa_plateau(
+            m[b], itanh[b], J[b], h[b], noise[b], jnp.int32(8), bH[b], bm[b],
+            n_rnd=2, eligible=eligible, block_r=4,
+        )
+        for a, o, name in zip(out_b, out_1, ["m", "itanh", "best_H", "best_m"]):
+            np.testing.assert_array_equal(
+                np.asarray(a[b]), np.asarray(o), err_msg=f"problem {b}: {name}"
+            )
+
+
 def test_plateau_chain_matches_ref_chain():
     """Chaining plateaus (heat→cold) through the kernel == chained oracle."""
     rng = np.random.default_rng(3)

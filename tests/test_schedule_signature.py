@@ -1,0 +1,68 @@
+"""Schedule.signature(): the stable, hashable executable-cache key component.
+
+Contract: two schedules that run the same per-cycle (I0, write-enable)
+program have the same signature regardless of how they were constructed;
+any per-cycle difference changes it.
+"""
+import numpy as np
+
+from repro.core.schedule import Schedule, hassa_schedule, ssa_schedule
+
+
+def _by_hand(i0_min, i0_max, tau):
+    """Hand-build the Eq. (4) plateau sequence a hassa_schedule would make."""
+    plateaus = []
+    v = i0_min
+    while True:
+        plateaus.append(min(v, i0_max))
+        if plateaus[-1] >= i0_max:
+            break
+        v <<= 1
+    plateaus = np.asarray(plateaus, dtype=np.int32)
+    return Schedule(
+        i0_per_cycle=np.repeat(plateaus, tau),
+        tau=tau,
+        steps=len(plateaus),
+        store_mask=np.repeat(plateaus == i0_max, tau),
+    )
+
+
+def test_equal_schedules_collide():
+    a = hassa_schedule(1, 8, 5)
+    b = _by_hand(1, 8, 5)
+    np.testing.assert_array_equal(a.i0_per_cycle, b.i0_per_cycle)
+    assert a.signature() == b.signature()
+
+
+def test_hassa_and_ssa_equivalence_collides():
+    """Sec. III-A: β_ssa = 2^-β_hassa makes the two schedules identical —
+    their signatures agree, so the service caches one program for both."""
+    a = hassa_schedule(1, 32, 10, beta_shift=1)
+    b = ssa_schedule(1, 32, 10, beta=0.5)
+    np.testing.assert_array_equal(a.i0_per_cycle, b.i0_per_cycle)
+    assert a.signature() == b.signature()
+
+
+def test_unequal_schedules_differ():
+    base = hassa_schedule(1, 8, 5)
+    assert base.signature() != hassa_schedule(1, 8, 6).signature()   # tau
+    assert base.signature() != hassa_schedule(1, 16, 5).signature()  # i0_max
+    assert base.signature() != hassa_schedule(2, 8, 5).signature()   # i0_min
+    # same I0 sequence, different write-enable → different program
+    hand = _by_hand(1, 8, 5)
+    flipped = Schedule(
+        i0_per_cycle=hand.i0_per_cycle,
+        tau=hand.tau,
+        steps=hand.steps,
+        store_mask=np.ones_like(hand.store_mask),
+    )
+    assert hand.signature() != flipped.signature()
+
+
+def test_signature_is_stable_and_hashable():
+    s = hassa_schedule(1, 8, 5)
+    sig = s.signature()
+    assert isinstance(sig, str) and sig == s.signature()
+    # usable directly as a dict key (the executable cache does exactly this)
+    cache = {(64, sig): "program"}
+    assert cache[(64, hassa_schedule(1, 8, 5).signature())] == "program"

@@ -7,7 +7,7 @@ import pytest
 from repro.configs import get_config
 from repro.models import model_defs
 from repro.models.params import init_params
-from repro.serve.engine import ServeConfig, generate
+from repro.serve.lm import ServeConfig, generate
 
 
 def _params_and_batch(arch, B=2, S=8):
