@@ -18,22 +18,41 @@ instances, written to ``BENCH_service.json``.  The acceptance bar for the
 serving PR is ≥3× aggregate spin-cycles/s on a batch of 8 G11-class
 instances.
 
+:func:`run_memory` is the packed-memory-subsystem benchmark: for each
+instance it solves through the AnnealService under both storage layouts and
+reports **measured** live-buffer bytes/spin next to warm-run spin-cycles/s,
+written to ``BENCH_memory.json``.  The dense pallas baseline runs the
+legacy pregen datapath (``noise_mode='pregen'``), so the per-plateau
+(C, T, N) int8 noise buffer it is charged for — sized from a real
+allocation at the run's τ — is one its timed plateaus genuinely
+materialize; the packed configuration runs the streamed kernel and holds no
+such buffer.  The acceptance bar for the packed-memory PR is a ≥4×
+dense/packed live-byte ratio at K2000 and an end-to-end G77 solve with
+tiled J (no (N, N) buffer).
+
     python -m benchmarks.timing                   # Table V rows
     python -m benchmarks.timing --service         # 8×G11-class acceptance run
     python -m benchmarks.timing --service-smoke   # CI: 3 toy instances,
                                                   #     sparse + pallas
+    python -m benchmarks.timing --memory          # dense vs packed, G11/K2000/G77
+    python -m benchmarks.timing --memory-smoke    # CI: same axes, reduced cycles
 """
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 
+import jax
 import numpy as np
 
-from repro.core import SAHyperParams, SSAHyperParams, anneal, anneal_sa, gset
+from repro.core import SAHyperParams, SSAHyperParams, anneal, anneal_sa, gset, memory
 
 from .common import emit
+
+# The dense/packed live-byte ratio the packed subsystem must hold at K2000.
+MEMORY_ACCEPT_RATIO = 4.0
 
 
 def run(problems=("G11", "King1"), trials: int = 8, m_shot: int = 10,
@@ -173,17 +192,181 @@ def run_service_smoke(json_path: str = "BENCH_service.json"):
     )
 
 
+# ---------------------------------------------------------------------------
+# Packed-memory benchmark: dense vs packed storage, measured live bytes
+# ---------------------------------------------------------------------------
+def _measure_config(model, backend_name, layout, hp, backend_opts):
+    """Measured live buffers of one (backend, layout) configuration.
+
+    Builds the batched backend exactly as the timed solve does, materializes
+    its engine state eagerly, and sizes the actual device arrays.  When the
+    configuration's datapath is the pregen one (``noise_mode='pregen'`` —
+    the dense baseline), it also sizes the (C, B, T, N) int8 noise buffer
+    that datapath materializes on every plateau of the timed run, from a
+    real allocation at the run's τ via the backend's own ``_pregen``.  A
+    streamed configuration is never charged for it (its kernel generates
+    noise in-kernel; tests assert no such buffer exists in its program).
+    """
+    from repro.core.engine import bucket_n, make_batched_backend
+
+    nb = bucket_n(model.n)
+    trials = hp.n_trials
+    bk = make_batched_backend(
+        backend_name, n_bucket=nb, n_trials=trials, n_rnd=hp.n_rnd,
+        noise="xorshift", storage_layout=layout, **backend_opts,
+    )
+    stacked = bk.stack([model])
+    ns0 = bk.init_noise([0], [model.n])
+    state = jax.block_until_ready(bk.init_state(stacked, ns0))
+    state_bytes = memory.tree_device_bytes(state)
+    noise_bytes = 0
+    if getattr(bk, "noise_mode", None) == "pregen":
+        _, noise = bk._pregen(ns0, hp.tau)
+        noise_bytes = memory.tree_device_bytes(jax.block_until_ready(noise))
+        del noise
+    j_mode = getattr(bk, "j_mode", "dense")
+    if j_mode != "dense" and "J" in stacked:  # survives python -O
+        raise RuntimeError("tiled mode leaked dense J into the stacked problem")
+    return {
+        "bucket": nb,
+        "j_mode": j_mode,
+        "noise_mode": getattr(bk, "noise_mode", "scan"),
+        "state_bytes": int(state_bytes),
+        "noise_bytes": int(noise_bytes),
+        "live_bytes": int(state_bytes + noise_bytes),
+        "bytes_per_spin": (state_bytes + noise_bytes) / (trials * nb),
+    }
+
+
+def run_memory(
+    instances=("G11", "K2000", "G77"),
+    json_path: str = "BENCH_memory.json",
+    smoke: bool = False,
+    csv_prefix: str = "memory_bench",
+):
+    """Dense vs packed storage: measured bytes/spin and spin-cycles/s.
+
+    G11 and K2000 run the resident pallas kernel (interpret mode on CPU);
+    G77 (N=14383) runs the tiled-J dense backend — the configuration whose
+    dense (N, N) J would be ~1 GB and is never materialized.  Solves go
+    through the AnnealService end-to-end; dense and packed layouts must
+    return identical best cuts (bit-identity, asserted).
+
+    The dense pallas baseline runs the *pregen* datapath
+    (``noise_mode='pregen'``: the pre-refactor configuration, bit-identical
+    results), so the (C, T, N) noise buffer it is charged for is one its
+    timed plateaus genuinely materialize.  The packed configuration runs
+    the streamed kernel.  Each layout's solve is timed on a warm second
+    call — the first call compiles; the reported spin-cycles/s is
+    steady-state, not trace time.
+    """
+    from repro.serve import AnnealRequest, AnnealService
+
+    # (backend, smoke hp, full hp) per instance.  K2000 keeps the Table-II
+    # plateau length τ=100 even in smoke (the cycle budget is cut via m_shot
+    # and i0_max instead) so the pregen baseline's noise buffer is measured
+    # at the canonical per-plateau depth.
+    specs = {
+        "G11": ("pallas",
+                SSAHyperParams(n_trials=4, m_shot=1, tau=4, i0_max=8),
+                SSAHyperParams(n_trials=8, m_shot=2, tau=20, i0_max=32)),
+        "K2000": ("pallas",
+                  SSAHyperParams(n_trials=2, m_shot=1, tau=100, i0_max=2),
+                  SSAHyperParams(n_trials=8, m_shot=1, tau=100, i0_max=8)),
+        "G77": ("dense",
+                SSAHyperParams(n_trials=2, m_shot=1, tau=2, i0_max=2),
+                SSAHyperParams(n_trials=4, m_shot=1, tau=4, i0_max=4)),
+    }
+    report = {
+        "smoke": smoke,
+        "acceptance_min_ratio": MEMORY_ACCEPT_RATIO,
+        "instances": {},
+    }
+    for name in instances:
+        backend_name, hp_smoke, hp_full = specs[name]
+        hp = hp_smoke if smoke else hp_full
+        p = gset.load(name)
+        model = p.to_ising()
+        row = {"n": p.n, "backend": backend_name, "trials": hp.n_trials,
+               "cycles": hp.total_cycles}
+        cuts = {}
+        for layout in ("dense", "packed"):
+            opts = (
+                {"noise_mode": "pregen"}
+                if backend_name == "pallas" and layout == "dense"
+                else {}
+            )
+            meas = _measure_config(model, backend_name, layout, hp, opts)
+            svc = AnnealService(backend=backend_name, noise="xorshift",
+                                storage_layout=layout, backend_opts=opts)
+            reqs = [AnnealRequest(problem=p, hp=hp, seed=0)]
+            svc.solve(reqs)  # warm-up: compile the plateau program
+            t0 = time.perf_counter()
+            resp = svc.solve(reqs)[0]
+            wall = time.perf_counter() - t0
+            spin_cycles = hp.total_cycles * hp.n_trials * p.n
+            meas.update({
+                "wall_s": wall,
+                "spin_cycles_per_s": spin_cycles / wall,
+                "best_cut": int(resp.result.overall_best_cut),
+            })
+            cuts[layout] = int(resp.result.overall_best_cut)
+            row[layout] = meas
+            emit(f"{csv_prefix}/{name}/{layout}", wall * 1e6,
+                 f"bytes_per_spin={meas['bytes_per_spin']:.2f};"
+                 f"spin_cycles_per_s={meas['spin_cycles_per_s']:.3e};"
+                 f"best={meas['best_cut']};j_mode={meas['j_mode']};"
+                 f"noise_mode={meas['noise_mode']}")
+        if cuts["dense"] != cuts["packed"]:  # gate survives python -O
+            raise RuntimeError(
+                f"{name}: packed/dense bit-identity broke: {cuts}"
+            )
+        row["ratio_dense_over_packed"] = (
+            row["dense"]["live_bytes"] / row["packed"]["live_bytes"]
+        )
+        emit(f"{csv_prefix}/{name}/ratio", 0.0,
+             f"{row['ratio_dense_over_packed']:.2f}x")
+        report["instances"][name] = row
+
+    if "K2000" in report["instances"]:
+        k_ratio = report["instances"]["K2000"]["ratio_dense_over_packed"]
+        report["k2000_ratio"] = k_ratio
+        report["acceptance_ok"] = bool(k_ratio >= MEMORY_ACCEPT_RATIO)
+        emit(f"{csv_prefix}/k2000_acceptance", 0.0,
+             f"ratio={k_ratio:.2f};ok={report['acceptance_ok']}")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {json_path}")
+    return report
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--service", action="store_true",
                     help="8×G11-class service-vs-loop acceptance benchmark")
     ap.add_argument("--service-smoke", action="store_true",
                     help="CI smoke: 3 toy instances, sparse + pallas")
-    ap.add_argument("--json", default="BENCH_service.json")
+    ap.add_argument("--memory", action="store_true",
+                    help="dense vs packed measured bytes/spin (G11/K2000/G77)")
+    ap.add_argument("--memory-smoke", action="store_true",
+                    help="CI smoke: --memory on a reduced cycle budget")
+    ap.add_argument("--json", default=None)
     args = ap.parse_args()
-    if args.service_smoke:
-        run_service_smoke(json_path=args.json)
+    if args.memory or args.memory_smoke:
+        report = run_memory(json_path=args.json or "BENCH_memory.json",
+                            smoke=args.memory_smoke)
+        if report.get("acceptance_ok") is False:
+            print(
+                f"FAIL: K2000 dense/packed live-byte ratio "
+                f"{report['k2000_ratio']:.2f} is below the "
+                f"{MEMORY_ACCEPT_RATIO}x acceptance bar",
+                file=sys.stderr,
+            )
+            sys.exit(1)
+    elif args.service_smoke:
+        run_service_smoke(json_path=args.json or "BENCH_service.json")
     elif args.service:
-        run_service(json_path=args.json)
+        run_service(json_path=args.json or "BENCH_service.json")
     else:
         run()

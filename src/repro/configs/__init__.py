@@ -54,4 +54,4 @@ def get_config(name: str, reduced: bool = False) -> ModelConfig:
 
 
 # Paper-native annealing problem configs (``--problem <id>``)
-ANNEAL_PROBLEMS = ("G11", "G12", "G13", "King1", "K2000")
+ANNEAL_PROBLEMS = ("G11", "G12", "G13", "King1", "K2000", "G77", "G81")

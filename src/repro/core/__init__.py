@@ -11,10 +11,12 @@ Public API:
 """
 from . import gset, memory  # noqa: F401
 from .engine import (  # noqa: F401
+    TILED_J_THRESHOLD,
     BaseResult,
     BatchedBackend,
     DenseBackend,
     EngineState,
+    PackedEngineState,
     PallasBackend,
     Plateau,
     PlateauBackend,
@@ -22,10 +24,12 @@ from .engine import (  # noqa: F401
     bucket_n,
     make_backend,
     make_batched_backend,
+    pack_state,
     pad_model,
     padded_noise_init,
     run_schedule,
     schedule_plateaus,
+    unpack_state,
 )
 from .ising import IsingModel, MaxCutProblem, fig4_example, ising_energy  # noqa: F401
 from .pt import (  # noqa: F401

@@ -20,9 +20,13 @@ single-matvec semantics as every local backend — bit-identical, tested).
 ``make_batched_iteration_step`` is the same chain over a leading problem
 axis — `run_plateau_scan` is batch-transparent, so the bucketed service
 batch threads straight through to the mesh (problems on `data`, spins on
-`model`).  ``anneal_step_lowering`` / ``batched_anneal_step_lowering``
-lower the pjit'd steps for the dry-run; the same steps run for real on any
-mesh.
+`model`).  It also carries the packed-memory subsystem's axes
+(DESIGN.md §4): ``storage_layout='packed'`` makes the state crossing the
+pjit launch boundary uint32 spin bitplanes, and ``j_mode='tiled'`` replaces
+the (B, N, N) J argument with the stacked adjacency and streams
+(tile_n, N) slabs — both bit-identical per problem to the default step.
+``anneal_step_lowering`` / ``batched_anneal_step_lowering`` lower the
+pjit'd steps for the dry-run; the same steps run for real on any mesh.
 """
 from __future__ import annotations
 
@@ -32,7 +36,14 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from .engine import EngineState, run_plateau_scan, schedule_plateaus
+from .engine import (
+    EngineState,
+    pack_spins,
+    run_plateau_scan,
+    schedule_plateaus,
+    unpack_spins,
+)
+from .ising import local_fields_tiled
 from .rng import xorshift_next_bits
 from .ssa import SSAHyperParams
 
@@ -109,7 +120,14 @@ def anneal_step_lowering(
         return jitted.lower(*shapes)
 
 
-def make_batched_iteration_step(hp: SSAHyperParams, mesh: Optional[Mesh] = None):
+def make_batched_iteration_step(
+    hp: SSAHyperParams,
+    mesh: Optional[Mesh] = None,
+    *,
+    storage_layout: str = "dense",
+    j_mode: str = "dense",
+    tile_n: int = 512,
+):
     """One full iteration over B stacked (bucket-padded) problems.
 
     The serving layer's batch axis on the mesh: problems shard over `data`,
@@ -118,10 +136,30 @@ def make_batched_iteration_step(hp: SSAHyperParams, mesh: Optional[Mesh] = None)
     :func:`make_iteration_step` with a leading problem axis — per problem
     bit-identical to the single-problem step (tested).
 
-    step(rng (4,B,T,N) u32, m (B,T,N) f32, itanh (B,T,N) i32,
-         best_H (B,T) i32, best_m (B,T,N) i8, J (B,N,N) f32, h (B,N) i32)
-    → updated state tuple.
+    Default (dense layout, dense J):
+      step(rng (4,B,T,N) u32, m (B,T,N) f32, itanh (B,T,N) i32,
+           best_H (B,T) i32, best_m (B,T,N) i8, J (B,N,N) f32, h (B,N) i32)
+      → updated state tuple.
+
+    ``storage_layout='packed'`` replaces m/best_m at the step boundary with
+    (B, T, ceil(N/32)) uint32 bitplanes — the HBM-resident state between
+    pjit launches is the packed layout, 32×/8× smaller than f32/i8 spins.
+    ``j_mode='tiled'`` replaces J with the stacked padded adjacency
+    ``nbr_idx (B,N,D) i32, nbr_w (B,N,D) i32`` and streams (tile_n, N) J
+    slabs per problem — no (B, N, N) buffer, admitting G77/G81-class N.
+    Both are bit-identical per problem to the default step (tested).
+
+    Sharding caveat: the "spins over `model`" layout above applies to the
+    dense-J step (the matmul contraction is what GSPMD partitions).  The
+    tiled step constrains spins to P("data", None, None) — replicated over
+    the model axis, each device scattering/contracting its problems' slabs
+    locally — trading redundant field compute for zero collectives; its
+    scale-out axis is the problem batch on `data`.
     """
+    if storage_layout not in ("dense", "packed"):
+        raise ValueError(f"unknown storage_layout {storage_layout!r}")
+    if j_mode not in ("dense", "tiled"):
+        raise ValueError(f"unknown j_mode {j_mode!r}")
     plateaus = schedule_plateaus(hp.schedule("hassa"), "i0max")
 
     def constrain(x, spec):
@@ -129,26 +167,47 @@ def make_batched_iteration_step(hp: SSAHyperParams, mesh: Optional[Mesh] = None)
             return x
         return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
 
-    def step(rng, m, itanh, best_H, best_m, J, h):
+    def step(rng, m, itanh, best_H, best_m, *problem):
+        n = itanh.shape[-1]
+        if j_mode == "tiled":
+            nbr_idx, nbr_w, h = problem
+
+            def field_fn(m8):
+                mc = constrain(m8, P("data", None, None))
+                return jax.vmap(
+                    lambda mm, hh, ii, ww: local_fields_tiled(
+                        mm, hh, ii, ww, tile_n=tile_n
+                    )
+                )(mc, h, nbr_idx, nbr_w)
+        else:
+            J, h = problem
+
+            def field_fn(m8):
+                mf = constrain(m8.astype(jnp.float32), P("data", None, "model"))
+                return (
+                    h[:, None, :] + jnp.einsum("btn,bnk->btk", mf, J)
+                ).astype(jnp.int32)
+
         h3 = h[:, None, :]  # (B, 1, N): broadcasts against (B, T, N) spins
-
-        def field_fn(m8):
-            mf = constrain(m8.astype(jnp.float32), P("data", None, "model"))
-            return (h3 + jnp.einsum("btn,bnk->btk", mf, J)).astype(jnp.int32)
-
-        state = EngineState(rng, m.astype(jnp.int8), itanh, best_H, best_m)
+        if storage_layout == "packed":
+            m8 = unpack_spins(m, n)
+            bm8 = unpack_spins(best_m, n)
+        else:
+            m8, bm8 = m.astype(jnp.int8), best_m
+        state = EngineState(rng, m8, itanh, best_H, bm8)
         for p in plateaus:
             state, _, _ = run_plateau_scan(
                 field_fn, xorshift_next_bits, h3, hp.n_rnd, state, p.i0,
                 length=p.length, eligible=p.eligible,
             )
-        return (
-            state.noise_state,
-            constrain(state.m.astype(jnp.float32), P("data", None, "model")),
-            state.itanh,
-            state.best_H,
-            state.best_m,
-        )
+        if storage_layout == "packed":
+            m_out, bm_out = pack_spins(state.m), pack_spins(state.best_m)
+        else:
+            m_out = constrain(
+                state.m.astype(jnp.float32), P("data", None, "model")
+            )
+            bm_out = state.best_m
+        return (state.noise_state, m_out, state.itanh, state.best_H, bm_out)
 
     return step
 
@@ -159,26 +218,49 @@ def batched_anneal_step_lowering(
     n_spins: int = 2048,
     n_trials: int = 512,
     hp: Optional[SSAHyperParams] = None,
+    *,
+    storage_layout: str = "dense",
+    j_mode: str = "dense",
+    max_degree: int = 4,
+    tile_n: int = 512,
 ):
     """Lower+compile the batched iteration step (dry-run, no allocation)."""
     hp = hp or SSAHyperParams(n_trials=n_trials)
-    step = make_batched_iteration_step(hp, mesh)
+    step = make_batched_iteration_step(
+        hp, mesh, storage_layout=storage_layout, j_mode=j_mode, tile_n=tile_n
+    )
     B, T, N = n_problems, n_trials, n_spins
     dm = NamedSharding(mesh, P("data", None, "model"))
     dd = NamedSharding(mesh, P("data"))
-    jm = NamedSharding(mesh, P("data", "model", None))
     hb = NamedSharding(mesh, P("data", None))
-    shapes = (
+    if storage_layout == "packed":
+        nw = (N + 31) // 32
+        spin_sh = NamedSharding(mesh, P("data", None, None))
+        m_shape = jax.ShapeDtypeStruct((B, T, nw), jnp.uint32)
+        bm_shape = jax.ShapeDtypeStruct((B, T, nw), jnp.uint32)
+    else:
+        spin_sh = dm
+        m_shape = jax.ShapeDtypeStruct((B, T, N), jnp.float32)
+        bm_shape = jax.ShapeDtypeStruct((B, T, N), jnp.int8)
+    shapes = [
         jax.ShapeDtypeStruct((4, B, T, N), jnp.uint32),  # rng lanes
-        jax.ShapeDtypeStruct((B, T, N), jnp.float32),    # m
+        m_shape,                                         # m (layout-dependent)
         jax.ShapeDtypeStruct((B, T, N), jnp.int32),      # itanh
         jax.ShapeDtypeStruct((B, T), jnp.int32),         # best_H
-        jax.ShapeDtypeStruct((B, T, N), jnp.int8),       # best_m
-        jax.ShapeDtypeStruct((B, N, N), jnp.float32),    # J (per problem)
-        jax.ShapeDtypeStruct((B, N), jnp.int32),         # h
-    )
+        bm_shape,                                        # best_m
+    ]
+    if j_mode == "tiled":
+        prob_shapes = [
+            jax.ShapeDtypeStruct((B, N, max_degree), jnp.int32),  # nbr_idx
+            jax.ShapeDtypeStruct((B, N, max_degree), jnp.int32),  # nbr_w
+        ]
+        prob_sh = [NamedSharding(mesh, P("data", None, None))] * 2
+    else:
+        prob_shapes = [jax.ShapeDtypeStruct((B, N, N), jnp.float32)]  # J
+        prob_sh = [NamedSharding(mesh, P("data", "model", None))]
+    shapes += prob_shapes + [jax.ShapeDtypeStruct((B, N), jnp.int32)]  # h
     rng_sh = NamedSharding(mesh, P(None, "data", None, "model"))
-    shardings = (rng_sh, dm, dm, dd, dm, jm, hb)
+    shardings = tuple([rng_sh, spin_sh, dm, dd, spin_sh] + prob_sh + [hb])
     jitted = jax.jit(step, in_shardings=shardings, donate_argnums=(0, 1, 2, 3, 4))
     with mesh:
-        return jitted.lower(*shapes)
+        return jitted.lower(*tuple(shapes))

@@ -18,11 +18,22 @@ too:
   update of state m(t) is reused to evaluate H(m(t)) for solution tracking
   and energy traces (the seed implementation evaluated it twice in
   ``record='best'`` mode).
-* :class:`PallasBackend` — the resident :func:`repro.kernels.ssa_update.ssa_plateau`
-  kernel: one ``pallas_call`` per plateau with J pinned in VMEM, noise
-  pre-generated for the plateau and streamed in.  Per-cycle HBM traffic
+* :class:`PallasBackend` — the resident plateau kernel: one ``pallas_call``
+  per plateau with J pinned in VMEM.  With xorshift noise this is the
+  streamed-noise packed kernel
+  (:func:`repro.kernels.ssa_update.ssa_plateau_packed`): uint32-bitplane
+  HBM refs, per-cycle noise generated in-kernel from carried xorshift
+  lanes — no (C, R, N) noise buffer exists anywhere.  Per-cycle HBM traffic
   drops from O(N²) to O(R·N) — the TPU transcription of the FPGA's
   "everything on-chip" design point.
+
+Storage layouts (DESIGN.md §4): every backend carries a
+``storage_layout`` axis — 'dense' keeps :class:`EngineState` (int8 spins),
+'packed' keeps :class:`PackedEngineState` (uint32 bitplanes between
+launches).  Results are bit-identical; only the resident bytes differ.
+Dense-field backends additionally carry ``j_mode`` — 'tiled' streams
+(tile_n, N) J slabs instead of materializing (N, N), admitting
+G77/G81-class instances.
 
 HA-SSA's storage policy is expressed as per-plateau *eligibility*: a plateau
 with ``eligible=True`` folds the states it produces into the running
@@ -54,14 +65,19 @@ from .ising import (
     MaxCutProblem,
     local_fields_dense,
     local_fields_sparse,
+    local_fields_tiled,
 )
 from .rng import threefry_noise, xorshift_init, xorshift_next_bits
 from .schedule import Schedule
 
 __all__ = [
     "BIG_ENERGY",
+    "TILED_J_THRESHOLD",
     "BaseResult",
     "EngineState",
+    "PackedEngineState",
+    "pack_state",
+    "unpack_state",
     "Plateau",
     "PlateauBackend",
     "SparseBackend",
@@ -69,6 +85,8 @@ __all__ = [
     "PallasBackend",
     "BACKENDS",
     "make_backend",
+    "resolve_j_mode",
+    "resolve_noise_mode",
     "normalize_problem",
     "finalize_cut",
     "schedule_plateaus",
@@ -95,35 +113,21 @@ __all__ = [
 # Sentinel "no solution yet" energy (any real H is far below this).
 BIG_ENERGY = 2**30
 
+# Dense (N, N) J above this spin count is not materialized: j_mode='auto'
+# resolves to the tiled path that streams (tile_n, N) slabs instead.
+TILED_J_THRESHOLD = 4096
+
 
 # ---------------------------------------------------------------------------
-# Bit packing (the 800-bit BRAM word, as uint32 lanes)
+# Bit packing (the 800-bit BRAM word, as uint32 lanes) — the codec lives in
+# repro.kernels.bitplane so the Pallas kernels and the engine share one bit
+# layout; re-exported here for the core-level callers.
 # ---------------------------------------------------------------------------
-def packed_words(n: int) -> int:
-    return (n + 31) // 32
-
-
-def pack_spins(m: jnp.ndarray) -> jnp.ndarray:
-    """Pack ±1 spins [..., N] into uint32 bitplanes [..., ceil(N/32)]."""
-    n = m.shape[-1]
-    nw = packed_words(n)
-    pad = nw * 32 - n
-    bits = (m > 0).astype(jnp.uint32)
-    if pad:
-        bits = jnp.concatenate(
-            [bits, jnp.zeros(bits.shape[:-1] + (pad,), jnp.uint32)], axis=-1
-        )
-    bits = bits.reshape(bits.shape[:-1] + (nw, 32))
-    shifts = jnp.arange(32, dtype=jnp.uint32)
-    return jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)
-
-
-def unpack_spins(packed: jnp.ndarray, n: int) -> jnp.ndarray:
-    """Inverse of pack_spins; returns int8 spins in {-1,+1}, shape [..., n]."""
-    shifts = jnp.arange(32, dtype=jnp.uint32)
-    bits = (packed[..., None] >> shifts) & jnp.uint32(1)
-    flat = bits.reshape(bits.shape[:-2] + (-1,))[..., :n]
-    return jnp.where(flat == 1, 1, -1).astype(jnp.int8)
+from repro.kernels.bitplane import (  # noqa: E402
+    pack_spins,
+    packed_words,
+    unpack_spins,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -268,6 +272,45 @@ class EngineState(NamedTuple):
     best_m: jnp.ndarray      # (T, N) int8 spins of the running best
 
 
+class PackedEngineState(NamedTuple):
+    """EngineState with spins stored as uint32 bitplanes (DESIGN.md §4).
+
+    Under ``storage_layout='packed'`` this is the state that lives in HBM
+    between plateau/chunk launches: spins and best-spins occupy 1 bit per
+    (trial, spin) — 8× below int8, 32× below the float32 crossing the old
+    kernel boundary — matching the FPGA's one-spin-per-BRAM-bit layout.
+    The Itanh FSM counter stays int32 (it is genuinely multi-bit state).
+    """
+
+    noise_state: Any              # xorshift (4,T,N) u32 lanes or threefry key
+    m_packed: jnp.ndarray         # (T, ceil(N/32)) uint32 bitplanes
+    itanh: jnp.ndarray            # (T, N) int32
+    best_H: jnp.ndarray           # (T,) int32
+    best_m_packed: jnp.ndarray    # (T, ceil(N/32)) uint32
+
+
+def pack_state(state: EngineState) -> PackedEngineState:
+    """Pack an engine state's spin planes (exact: spins are ±1)."""
+    return PackedEngineState(
+        state.noise_state,
+        pack_spins(state.m),
+        state.itanh,
+        state.best_H,
+        pack_spins(state.best_m),
+    )
+
+
+def unpack_state(state: PackedEngineState, n: int) -> EngineState:
+    """Inverse of :func:`pack_state` for an N-spin model."""
+    return EngineState(
+        state.noise_state,
+        unpack_spins(state.m_packed, n),
+        state.itanh,
+        state.best_H,
+        unpack_spins(state.best_m_packed, n),
+    )
+
+
 def run_plateau_scan(
     field_fn: Callable[[jnp.ndarray], jnp.ndarray],
     noise_step: Callable,
@@ -363,11 +406,15 @@ class PlateauBackend:
         n_trials: int,
         n_rnd: int = 2,
         noise: str = "threefry",
+        storage_layout: str = "dense",
     ):
+        if storage_layout not in ("dense", "packed"):
+            raise ValueError(f"unknown storage_layout {storage_layout!r}")
         self.model = model
         self.n_trials = int(n_trials)
         self.n_rnd = int(n_rnd)
         self.noise = noise
+        self.storage_layout = storage_layout
         self.h = jnp.asarray(model.h, jnp.int32)
         lanes = (self.n_trials, model.n)
         if noise == "xorshift":
@@ -385,18 +432,24 @@ class PlateauBackend:
             raise ValueError(f"unknown noise {noise!r}")
 
     # -- protocol ---------------------------------------------------------
-    def init_state(self, seed: int) -> EngineState:
-        """Random ±1 start from the first noise draw (shared stream layout)."""
+    def init_state(self, seed: int):
+        """Random ±1 start from the first noise draw (shared stream layout).
+
+        Returns :class:`EngineState` (storage_layout='dense') or
+        :class:`PackedEngineState` (storage_layout='packed'); drivers stay
+        layout-agnostic by only touching state through backend methods.
+        """
         ns = self._noise_init(seed)
         ns, r0 = self._noise_step(ns)
         m0 = r0.astype(jnp.int8)
         itanh0 = jnp.where(m0 > 0, 0, -1).astype(jnp.int32)
         best_H = jnp.full((self.n_trials,), BIG_ENERGY, jnp.int32)
-        return EngineState(ns, m0, itanh0, best_H, m0)
+        st = EngineState(ns, m0, itanh0, best_H, m0)
+        return pack_state(st) if self.storage_layout == "packed" else st
 
     def run_plateau(
         self,
-        state: EngineState,
+        state,
         i0,
         *,
         length: int,
@@ -404,10 +457,33 @@ class PlateauBackend:
         track_energy: bool = False,
         emit: bool = False,
     ):
+        """Advance one plateau in this backend's storage layout.
+
+        The packed layout wraps the dense implementation in the exact
+        pack/unpack codec (spins are ±1, so the round trip is bit-exact);
+        the Pallas backend overrides this to keep the HBM-facing kernel
+        refs packed end-to-end.
+        """
+        if self.storage_layout == "packed":
+            st = unpack_state(state, self.model.n)
+            st, trace, planes = self._run_plateau_dense(
+                st, i0, length=length, eligible=eligible,
+                track_energy=track_energy, emit=emit,
+            )
+            return pack_state(st), trace, planes
+        return self._run_plateau_dense(
+            state, i0, length=length, eligible=eligible,
+            track_energy=track_energy, emit=emit,
+        )
+
+    def _run_plateau_dense(self, state, i0, *, length, eligible,
+                           track_energy=False, emit=False):
         raise NotImplementedError
 
-    def finalize(self, state: EngineState) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """Extract (best_H, best_m) after the last plateau."""
+    def finalize(self, state) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Extract (best_H, best_m int8) after the last plateau."""
+        if self.storage_layout == "packed":
+            return state.best_H, unpack_spins(state.best_m_packed, self.model.n)
         return state.best_H, state.best_m
 
     # -- shared scan implementation --------------------------------------
@@ -441,26 +517,68 @@ class SparseBackend(PlateauBackend):
     def _field(self, m):
         return local_fields_sparse(m.astype(jnp.int32), self.h, self.nbr_idx, self.nbr_w)
 
-    def run_plateau(self, state, i0, *, length, eligible, track_energy=False, emit=False):
+    def _run_plateau_dense(self, state, i0, *, length, eligible,
+                           track_energy=False, emit=False):
         return self._run_plateau_scan(
             state, i0, length=length, eligible=eligible,
             track_energy=track_energy, emit=emit,
         )
 
 
+def resolve_j_mode(j_mode: str, n: int) -> str:
+    """'auto' picks tiled above TILED_J_THRESHOLD spins, dense below."""
+    if j_mode == "auto":
+        return "tiled" if n > TILED_J_THRESHOLD else "dense"
+    if j_mode not in ("dense", "tiled"):
+        raise ValueError(f"unknown j_mode {j_mode!r}")
+    return j_mode
+
+
+def resolve_noise_mode(noise_mode: str, noise: str) -> str:
+    """Resident-kernel noise datapath: 'streamed' (in-kernel xorshift, no
+    noise buffer) vs 'pregen' (the legacy per-plateau (C, R, N) buffer).
+    'auto' streams whenever the source is xorshift; threefry cannot be
+    reproduced in-kernel, so it always pregenerates."""
+    if noise_mode == "auto":
+        return "streamed" if noise == "xorshift" else "pregen"
+    if noise_mode not in ("streamed", "pregen"):
+        raise ValueError(f"unknown noise_mode {noise_mode!r}")
+    if noise_mode == "streamed" and noise != "xorshift":
+        raise ValueError("noise_mode='streamed' requires noise='xorshift'")
+    return noise_mode
+
+
 class DenseBackend(PlateauBackend):
-    """(T,N)·(N,N) MXU matmul field (K2000-class dense instances)."""
+    """(T,N)·(N,N) MXU matmul field (K2000-class dense instances).
+
+    ``j_mode`` controls the coupling-matrix residency: 'dense' materializes
+    (N, N) J once; 'tiled' streams (tile_n, N) slabs scattered on the fly
+    from the padded adjacency (:func:`repro.core.ising.local_fields_tiled`) —
+    bit-identical, and the only way G77/G81-class N fits in memory.  'auto'
+    (the default) switches at TILED_J_THRESHOLD spins.
+    """
 
     name = "dense"
 
-    def __init__(self, model: IsingModel, *, j_dtype=jnp.float32, **kw):
+    def __init__(self, model: IsingModel, *, j_dtype=jnp.float32,
+                 j_mode: str = "auto", tile_n: int = 512, **kw):
         super().__init__(model, **kw)
-        self.J = jnp.asarray(model.dense_J(), j_dtype)
+        self.j_mode = resolve_j_mode(j_mode, model.n)
+        self.tile_n = int(tile_n)
+        if self.j_mode == "dense":
+            self.J = jnp.asarray(model.dense_J(), j_dtype)
+        else:
+            _, self.nbr_idx, self.nbr_w = model.device_arrays()
 
     def _field(self, m):
+        if self.j_mode == "tiled":
+            return local_fields_tiled(
+                m, self.h, self.nbr_idx, self.nbr_w, tile_n=self.tile_n
+            )
         return local_fields_dense(m, self.h, self.J)
 
-    def run_plateau(self, state, i0, *, length, eligible, track_energy=False, emit=False):
+    def _run_plateau_dense(self, state, i0, *, length, eligible,
+                           track_energy=False, emit=False):
         return self._run_plateau_scan(
             state, i0, length=length, eligible=eligible,
             track_energy=track_energy, emit=emit,
@@ -470,9 +588,15 @@ class DenseBackend(PlateauBackend):
 class PallasBackend(PlateauBackend):
     """The resident plateau kernel: one `pallas_call` per plateau.
 
-    J is pinned in VMEM for all C cycles of the plateau; the plateau's noise
-    is pre-generated ((C, T, N) int8) and streamed in, and only final state +
-    running best come back — per-cycle HBM traffic is O(T·N), not O(N²).
+    J is pinned in VMEM for all C cycles of the plateau.  With ``xorshift``
+    noise the plateau runs the **streamed-noise packed kernel**
+    (:func:`repro.kernels.ssa_update.ssa_plateau_packed`): the per-cycle
+    noise is generated *inside* the kernel by stepping the carried
+    xorshift128 lanes — bit-identical to pre-generated draws, but no
+    (C, T, N) noise buffer exists anywhere — and the HBM-facing spin refs
+    are uint32 bitplanes.  ``threefry`` noise cannot be reproduced in-kernel
+    and keeps the per-plateau (C, T, N) int8 pregen path (the
+    statistical-reference configuration, not the production one).
 
     Per-cycle *outputs* (energy traces, trajectory planes) are the one thing
     the resident kernel deliberately does not produce; plateaus that need
@@ -491,6 +615,7 @@ class PallasBackend(PlateauBackend):
         j_dtype=jnp.float32,
         block_r: int = 8,
         interpret: Optional[bool] = None,
+        noise_mode: str = "auto",
         **kw,
     ):
         super().__init__(model, **kw)
@@ -503,6 +628,7 @@ class PallasBackend(PlateauBackend):
         self.J = jnp.asarray(model.dense_J(), j_dtype)
         self.block_r = int(block_r)
         self.interpret = interpret
+        self.noise_mode = resolve_noise_mode(noise_mode, self.noise)
 
     def _field(self, m):
         return self._kops.local_field(m.astype(jnp.float32), self.h, self.J)
@@ -515,27 +641,65 @@ class PallasBackend(PlateauBackend):
         return jax.lax.scan(draw, ns, None, length=length)
 
     def run_plateau(self, state, i0, *, length, eligible, track_energy=False, emit=False):
+        packed = self.storage_layout == "packed"
         if emit or track_energy:
-            return self._run_plateau_scan(
-                state, i0, length=length, eligible=eligible,
+            st = unpack_state(state, self.model.n) if packed else state
+            st, trace, planes = self._run_plateau_scan(
+                st, i0, length=length, eligible=eligible,
                 track_energy=track_energy, emit=emit,
             )
-        ns, noise = self._pregen_noise(state.noise_state, length)
+            return (pack_state(st) if packed else st), trace, planes
+        if self.noise_mode == "streamed":
+            # Streamed path: packed HBM refs, noise generated in-kernel.
+            mp = state.m_packed if packed else pack_spins(state.m)
+            bmp = state.best_m_packed if packed else pack_spins(state.best_m)
+            mp_o, it_o, rng_o, bh_o, bmp_o = self._kssa.ssa_plateau_packed(
+                mp,
+                state.itanh,
+                self.J,
+                self.h,
+                state.noise_state,
+                jnp.asarray(i0, jnp.int32),
+                state.best_H,
+                bmp,
+                n_cycles=int(length),
+                n_rnd=self.n_rnd,
+                eligible=bool(eligible),
+                block_r=self.block_r,
+                interpret=self.interpret,
+            )
+            if packed:
+                return PackedEngineState(rng_o, mp_o, it_o, bh_o, bmp_o), None, None
+            n = self.model.n
+            return (
+                EngineState(
+                    rng_o, unpack_spins(mp_o, n), it_o, bh_o, unpack_spins(bmp_o, n)
+                ),
+                None,
+                None,
+            )
+        # Pregen path: the legacy per-plateau (C, T, N) buffer — mandatory
+        # for threefry (not reproducible in-kernel), opt-in for xorshift
+        # (noise_mode='pregen'; bit-identical to streamed, used as the
+        # measured baseline in benchmarks/timing.py --memory).
+        st = unpack_state(state, self.model.n) if packed else state
+        ns, noise = self._pregen_noise(st.noise_state, length)
         m_o, it_o, bh_o, bm_o = self._kssa.ssa_plateau(
-            state.m.astype(jnp.float32),
-            state.itanh,
+            st.m.astype(jnp.float32),
+            st.itanh,
             self.J,
             self.h,
             noise,
             jnp.asarray(i0, jnp.int32),
-            state.best_H,
-            state.best_m,
+            st.best_H,
+            st.best_m,
             n_rnd=self.n_rnd,
             eligible=bool(eligible),
             block_r=self.block_r,
             interpret=self.interpret,
         )
-        return EngineState(ns, m_o.astype(jnp.int8), it_o, bh_o, bm_o), None, None
+        out = EngineState(ns, m_o.astype(jnp.int8), it_o, bh_o, bm_o)
+        return (pack_state(out) if packed else out), None, None
 
 
 BACKENDS = {
@@ -731,11 +895,15 @@ class BatchedBackend:
         n_trials: int,
         n_rnd: int = 2,
         noise: str = "xorshift",
+        storage_layout: str = "dense",
     ):
+        if storage_layout not in ("dense", "packed"):
+            raise ValueError(f"unknown storage_layout {storage_layout!r}")
         self.n_bucket = int(n_bucket)
         self.n_trials = int(n_trials)
         self.n_rnd = int(n_rnd)
         self.noise = noise
+        self.storage_layout = storage_layout
         lanes = (self.n_trials, self.n_bucket)
         if noise == "xorshift":
             self._noise_step_one = xorshift_next_bits
@@ -765,22 +933,51 @@ class BatchedBackend:
         )
 
     # -- traced -----------------------------------------------------------
-    def init_state(self, problem: dict, noise0) -> EngineState:
+    def init_state(self, problem: dict, noise0):
         """Random ±1 start from the first noise draw (matches PlateauBackend)."""
         ns, r0 = self._noise_step(noise0)
         m0 = r0.astype(jnp.int8)
         itanh0 = jnp.where(m0 > 0, 0, -1).astype(jnp.int32)
         best_H = jnp.full(m0.shape[:-1], BIG_ENERGY, jnp.int32)
-        return EngineState(ns, m0, itanh0, best_H, m0)
+        st = EngineState(ns, m0, itanh0, best_H, m0)
+        return pack_state(st) if self.storage_layout == "packed" else st
 
-    def run_plateau(self, problem: dict, state: EngineState, i0, *, length, eligible):
+    def run_plateau(self, problem: dict, state, i0, *, length, eligible):
+        if self.storage_layout == "packed":
+            st = unpack_state(state, self.n_bucket)
+            st = self._run_plateau_dense(
+                problem, st, i0, length=length, eligible=eligible
+            )
+            return pack_state(st)
+        return self._run_plateau_dense(
+            problem, state, i0, length=length, eligible=eligible
+        )
+
+    def run_shots(self, problem: dict, state, plateaus, n_shots: int):
+        """Advance ``n_shots`` full iterations (plateau chains) — one chunk.
+
+        The chunk launch boundary is where the storage layout is *real*:
+        under 'packed' the state entering/leaving this method — the HBM-
+        resident buffers between service chunks — carries spins as uint32
+        bitplanes.
+        """
+        if self.storage_layout == "packed":
+            st = unpack_state(state, self.n_bucket)
+            st = self._run_shots_dense(problem, st, plateaus, n_shots)
+            return pack_state(st)
+        return self._run_shots_dense(problem, state, plateaus, n_shots)
+
+    def _run_plateau_dense(self, problem: dict, state: EngineState, i0, *,
+                           length, eligible):
         raise NotImplementedError
 
-    def run_shots(self, problem: dict, state: EngineState, plateaus, n_shots: int):
-        """Advance ``n_shots`` full iterations (plateau chains) — one chunk."""
+    def _run_shots_dense(self, problem: dict, state: EngineState, plateaus,
+                         n_shots: int):
         raise NotImplementedError
 
-    def finalize(self, state: EngineState) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    def finalize(self, state) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        if self.storage_layout == "packed":
+            return state.best_H, unpack_spins(state.best_m_packed, self.n_bucket)
         return state.best_H, state.best_m
 
 
@@ -799,13 +996,13 @@ class _VmapBatchedBackend(BatchedBackend):
             )
         return st
 
-    def run_plateau(self, problem, state, i0, *, length, eligible):
+    def _run_plateau_dense(self, problem, state, i0, *, length, eligible):
         p = (Plateau(int(i0), int(length), bool(eligible)),)
         return jax.vmap(lambda pr, st: self._run_one_plateaus(pr, st, p))(
             problem, state
         )
 
-    def run_shots(self, problem, state, plateaus, n_shots):
+    def _run_shots_dense(self, problem, state, plateaus, n_shots):
         plateaus = tuple(plateaus)
 
         def one(prob, st):
@@ -818,32 +1015,37 @@ class _VmapBatchedBackend(BatchedBackend):
         return jax.vmap(one)(problem, state)
 
 
+def _stack_sparse_models(models, n_bucket: int) -> dict:
+    """Stacked, bucket-padded adjacency views {h, nbr_idx, nbr_w}."""
+    padded = [pad_model(m, n_bucket) for m in models]
+    d = max(m.max_degree for m in padded)
+    idxs, ws, hs = [], [], []
+    for m in padded:
+        extra = d - m.max_degree
+        idx, w = np.asarray(m.nbr_idx), np.asarray(m.nbr_w)
+        if extra:
+            self_idx = np.tile(
+                np.arange(m.n, dtype=np.int32)[:, None], (1, extra)
+            )
+            idx = np.concatenate([idx, self_idx], axis=1)
+            w = np.concatenate([w, np.zeros((m.n, extra), np.int32)], axis=1)
+        idxs.append(idx)
+        ws.append(w)
+        hs.append(np.asarray(m.h, np.int32))
+    return {
+        "h": jnp.asarray(np.stack(hs), jnp.int32),
+        "nbr_idx": jnp.asarray(np.stack(idxs), jnp.int32),
+        "nbr_w": jnp.asarray(np.stack(ws), jnp.int32),
+    }
+
+
 class BatchedSparseBackend(_VmapBatchedBackend):
     """Padded-adjacency gather field, vmapped over the problem axis."""
 
     name = "sparse"
 
     def stack(self, models):
-        padded = [pad_model(m, self.n_bucket) for m in models]
-        d = max(m.max_degree for m in padded)
-        idxs, ws, hs = [], [], []
-        for m in padded:
-            extra = d - m.max_degree
-            idx, w = np.asarray(m.nbr_idx), np.asarray(m.nbr_w)
-            if extra:
-                self_idx = np.tile(
-                    np.arange(m.n, dtype=np.int32)[:, None], (1, extra)
-                )
-                idx = np.concatenate([idx, self_idx], axis=1)
-                w = np.concatenate([w, np.zeros((m.n, extra), np.int32)], axis=1)
-            idxs.append(idx)
-            ws.append(w)
-            hs.append(np.asarray(m.h, np.int32))
-        return {
-            "h": jnp.asarray(np.stack(hs), jnp.int32),
-            "nbr_idx": jnp.asarray(np.stack(idxs), jnp.int32),
-            "nbr_w": jnp.asarray(np.stack(ws), jnp.int32),
-        }
+        return _stack_sparse_models(models, self.n_bucket)
 
     def _field_one(self, prob, m):
         return local_fields_sparse(
@@ -865,18 +1067,33 @@ def _stack_dense_models(models, n_bucket: int, j_dtype) -> dict:
 
 
 class BatchedDenseBackend(_VmapBatchedBackend):
-    """(T,N)·(N,N) matmul field per problem, vmapped over the problem axis."""
+    """(T,N)·(N,N) matmul field per problem, vmapped over the problem axis.
+
+    ``j_mode='tiled'`` (auto above TILED_J_THRESHOLD spins) stacks the
+    adjacency instead of dense J and streams (tile_n, N) slabs per problem —
+    no (B, N, N) buffer ever exists, which is what admits G77/G81-class
+    buckets through the service.
+    """
 
     name = "dense"
 
-    def __init__(self, *, j_dtype=jnp.float32, **kw):
+    def __init__(self, *, j_dtype=jnp.float32, j_mode: str = "auto",
+                 tile_n: int = 512, **kw):
         super().__init__(**kw)
         self.j_dtype = j_dtype
+        self.j_mode = resolve_j_mode(j_mode, self.n_bucket)
+        self.tile_n = int(tile_n)
 
     def stack(self, models):
+        if self.j_mode == "tiled":
+            return _stack_sparse_models(models, self.n_bucket)
         return _stack_dense_models(models, self.n_bucket, self.j_dtype)
 
     def _field_one(self, prob, m):
+        if self.j_mode == "tiled":
+            return local_fields_tiled(
+                m, prob["h"], prob["nbr_idx"], prob["nbr_w"], tile_n=self.tile_n
+            )
         return local_fields_dense(m, prob["h"], prob["J"])
 
 
@@ -887,12 +1104,19 @@ class BatchedPallasBackend(BatchedBackend):
     each grid step (b, i) pins problem b's J in VMEM and runs every cycle of
     the plateau for one R-tile of trials — the serving transcription of the
     FPGA's "one pipeline, many instances" operating mode.
+
+    With ``xorshift`` noise the plateau is the streamed-noise packed kernel
+    (:func:`repro.kernels.ssa_update.ssa_plateau_packed_batched`): noise is
+    generated in-kernel from the carried lanes and the HBM-facing spin refs
+    are uint32 bitplanes — no (B, C, T, N) noise buffer exists anywhere.
+    ``threefry`` keeps per-plateau pregen (reference path only).
     """
 
     name = "pallas"
 
     def __init__(self, *, j_dtype=jnp.float32, block_r: int = 8,
-                 interpret: Optional[bool] = None, **kw):
+                 interpret: Optional[bool] = None, noise_mode: str = "auto",
+                 **kw):
         super().__init__(**kw)
         from repro.kernels import ssa_update as kssa  # lazy
 
@@ -900,6 +1124,7 @@ class BatchedPallasBackend(BatchedBackend):
         self.j_dtype = j_dtype
         self.block_r = int(block_r)
         self.interpret = interpret
+        self.noise_mode = resolve_noise_mode(noise_mode, self.noise)
 
     def stack(self, models):
         return _stack_dense_models(models, self.n_bucket, self.j_dtype)
@@ -911,7 +1136,51 @@ class BatchedPallasBackend(BatchedBackend):
 
         return jax.lax.scan(draw, ns, None, length=length)
 
+    def _plateau_packed(self, problem, st: PackedEngineState, i0, length,
+                        eligible) -> PackedEngineState:
+        mp_o, it_o, rng_o, bh_o, bmp_o = self._kssa.ssa_plateau_packed_batched(
+            st.m_packed,
+            st.itanh,
+            problem["J"],
+            problem["h"],
+            st.noise_state,
+            jnp.asarray(i0, jnp.int32),
+            st.best_H,
+            st.best_m_packed,
+            n_cycles=int(length),
+            n_rnd=self.n_rnd,
+            eligible=bool(eligible),
+            block_r=self.block_r,
+            interpret=self.interpret,
+        )
+        return PackedEngineState(rng_o, mp_o, it_o, bh_o, bmp_o)
+
     def run_plateau(self, problem, state, i0, *, length, eligible):
+        if self.noise_mode != "streamed":
+            return super().run_plateau(
+                problem, state, i0, length=length, eligible=eligible
+            )
+        packed_in = self.storage_layout == "packed"
+        st = state if packed_in else pack_state(state)
+        st = self._plateau_packed(problem, st, i0, length, eligible)
+        return st if packed_in else unpack_state(st, self.n_bucket)
+
+    def run_shots(self, problem, state, plateaus, n_shots):
+        plateaus = tuple(plateaus)
+        if self.noise_mode != "streamed":
+            return super().run_shots(problem, state, plateaus, n_shots)
+        packed_in = self.storage_layout == "packed"
+        st = state if packed_in else pack_state(state)
+
+        def iteration(st, _):
+            for p in plateaus:
+                st = self._plateau_packed(problem, st, p.i0, p.length, p.eligible)
+            return st, None
+
+        st, _ = jax.lax.scan(iteration, st, None, length=n_shots)
+        return st if packed_in else unpack_state(st, self.n_bucket)
+
+    def _run_plateau_dense(self, problem, state, i0, *, length, eligible):
         ns, noise = self._pregen(state.noise_state, length)  # (C, B, T, N)
         noise = jnp.swapaxes(noise, 0, 1)                    # (B, C, T, N)
         m_o, it_o, bh_o, bm_o = self._kssa.ssa_plateau_batched(
@@ -930,12 +1199,10 @@ class BatchedPallasBackend(BatchedBackend):
         )
         return EngineState(ns, m_o.astype(jnp.int8), it_o, bh_o, bm_o)
 
-    def run_shots(self, problem, state, plateaus, n_shots):
-        plateaus = tuple(plateaus)
-
+    def _run_shots_dense(self, problem, state, plateaus, n_shots):
         def iteration(st, _):
             for p in plateaus:
-                st = self.run_plateau(
+                st = self._run_plateau_dense(
                     problem, st, p.i0, length=p.length, eligible=p.eligible
                 )
             return st, None

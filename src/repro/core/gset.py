@@ -116,6 +116,10 @@ _GENERATORS = {
     "G13": lambda: toroidal_grid(800, seed=13, name="G13-like"),
     "King1": lambda: king_graph(800, seed=1, name="King1"),
     "K2000": lambda: complete_graph(2000, seed=2000, name="K2000-like"),
+    # Large-N G-set scenario (tiled-J / packed-storage territory: a dense
+    # (N, N) J would be 0.8–1.6 GB f32; the engine streams slabs instead).
+    "G77": lambda: toroidal_grid(14383, seed=77, name="G77-like"),
+    "G81": lambda: toroidal_grid(20000, seed=81, name="G81-like"),
 }
 
 

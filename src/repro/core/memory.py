@@ -18,8 +18,22 @@ power-of-two shape buckets, so every stored bitplane carries
 ``bucket(N) - N`` dead bits per cycle.  The ``padding_overhead_*`` models
 quantify that waste so the paper's memory comparison stays honest under
 bucketing (benchmarks/memory_table.py reports the column).
+Measured accounting (this module's second half) turns the closed-form
+models into asserted runtime facts: :func:`live_device_bytes` sums every
+live jax device buffer (`jax.live_arrays`), :func:`tree_device_bytes`
+sizes a concrete state pytree, and :func:`measure_live_bytes` wraps a
+builder and reports the live-byte delta it left behind.
+`benchmarks/memory_table.py` prints measured next to analytic and exits
+nonzero when the measured HA-SSA/SSA ratio regresses; `benchmarks/timing.py
+--memory` writes both to BENCH_memory.json.
 """
 from __future__ import annotations
+
+import gc
+from typing import Any, Callable, Tuple
+
+import jax
+import numpy as np
 
 from .engine import bucket_n
 from .schedule import n_temp_steps
@@ -32,6 +46,9 @@ __all__ = [
     "bits_per_trial",
     "padding_overhead_bits_per_iteration",
     "padding_overhead_fraction",
+    "live_device_bytes",
+    "tree_device_bytes",
+    "measure_live_bytes",
 ]
 
 
@@ -82,3 +99,46 @@ def padding_overhead_fraction(n_spins: int, min_bucket: int = 64) -> float:
     """Fraction of each stored bitplane wasted on pad lanes: 1 - N/bucket(N)."""
     nb = bucket_n(n_spins, min_bucket)
     return 1.0 - n_spins / nb
+
+
+# ---------------------------------------------------------------------------
+# Measured accounting: the analytic models, asserted against live buffers
+# ---------------------------------------------------------------------------
+def _array_nbytes(a) -> int:
+    nbytes = getattr(a, "nbytes", None)
+    if nbytes is not None:
+        return int(nbytes)
+    return int(np.prod(a.shape)) * np.dtype(a.dtype).itemsize
+
+
+def live_device_bytes() -> int:
+    """Total bytes of every live jax device array (`jax.live_arrays`)."""
+    return sum(_array_nbytes(a) for a in jax.live_arrays())
+
+
+def tree_device_bytes(tree: Any) -> int:
+    """Bytes of the concrete arrays in a pytree (an engine state, a stack)."""
+    return sum(
+        _array_nbytes(leaf)
+        for leaf in jax.tree_util.tree_leaves(tree)
+        if hasattr(leaf, "dtype")
+    )
+
+
+def measure_live_bytes(build: Callable[[], Any]) -> Tuple[Any, int]:
+    """Run ``build()`` and measure the live-device-byte delta it leaves.
+
+    The delta is taken over `jax.live_arrays` after a gc pass on both sides,
+    so it reports the buffers the builder actually left resident (its return
+    value plus anything it cached) — the measured counterpart of the Eq.
+    (5)/(6) closed forms.  Returns ``(result, delta_bytes)``.
+    """
+    gc.collect()
+    before = live_device_bytes()
+    out = build()
+    try:
+        jax.block_until_ready(out)
+    except (TypeError, ValueError):
+        pass  # non-array results (dataclasses of np arrays) are already done
+    gc.collect()
+    return out, live_device_bytes() - before

@@ -23,9 +23,19 @@ grouped into constant-I0 plateaus — HA-SSA's unit of execution and storage —
 and each plateau is advanced by a pluggable :class:`~repro.core.engine.PlateauBackend`:
 
 * ``backend='sparse'`` — padded-adjacency gather field, `lax.scan` per plateau;
-* ``backend='dense'``  — (T,N)·(N,N) MXU matmul field, `lax.scan` per plateau;
-* ``backend='pallas'`` — the resident ``ssa_plateau`` kernel: one
-  ``pallas_call`` per plateau with J pinned in VMEM (DESIGN.md §2.3).
+* ``backend='dense'``  — (T,N)·(N,N) MXU matmul field, `lax.scan` per plateau
+  (``j_mode='tiled'`` streams (tile_n, N) J slabs for G77/G81-class N);
+* ``backend='pallas'`` — the resident plateau kernel: one ``pallas_call``
+  per plateau with J pinned in VMEM (DESIGN.md §2.3).  With ``xorshift``
+  noise this is the **streamed-noise packed kernel**: per-cycle noise is
+  generated inside the kernel from the carried xorshift lanes and the
+  HBM-facing spin refs are uint32 bitplanes — no (C, R, N) noise buffer is
+  ever allocated, in the driver or anywhere else.  (``threefry`` keeps the
+  per-plateau pregen reference path; it cannot be reproduced in-kernel.)
+
+``storage_layout='packed'`` additionally keeps the engine state *between*
+plateaus as uint32 bitplanes (DESIGN.md §4) — bit-identical results, 8–32×
+smaller resident spin storage.
 
 All three advance the field contraction **once per cycle** (the field used
 for the Eq. 2a update of m(t) is reused for H(m(t))) and produce bit-identical
@@ -142,6 +152,7 @@ def anneal(
     track_energy: bool = True,
     schedule_kind: str = "hassa",  # 'hassa' Eq.(4) | 'ssa' Eq.(3)
     total_cycles: Optional[int] = None,  # cycle-count duration (Fig. 12 mode)
+    storage_layout: str = "dense",  # 'dense' | 'packed' bitplane state
     backend_opts: Optional[dict] = None,  # extra backend kwargs (block_r, …)
 ) -> AnnealResult:
     """Run SSA/HA-SSA on a MAX-CUT or raw Ising instance.
@@ -161,9 +172,11 @@ def anneal(
     """
     maxcut, model = normalize_problem(problem)
     sched = hp.schedule(schedule_kind)
+    opts = dict(backend_opts or {})
+    opts.setdefault("storage_layout", storage_layout)
     bk = make_backend(
         backend, model, n_trials=hp.n_trials, n_rnd=hp.n_rnd, noise=noise,
-        **(backend_opts or {}),
+        **opts,
     )
     plateaus = schedule_plateaus(sched, storage)
     stored_per_iter = sum(p.length for p in plateaus if p.eligible)

@@ -2,5 +2,26 @@
 
 Validated against ref.py oracles in interpret mode (CPU container);
 TPU (Mosaic) is the compile target.
+
+`bitplane` (the pure-jnp spin/noise codec) imports eagerly — `repro.core`
+depends on it for the packed storage layout.  The Pallas-backed modules
+(`ops`, `ref`, `ssa_update`) load lazily so importing the codec never pulls
+in the kernel toolchain.
 """
-from . import ops, ref, ssa_update  # noqa: F401
+from . import bitplane  # noqa: F401
+
+_LAZY = ("ops", "ref", "ssa_update")
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+
+        mod = importlib.import_module(f".{name}", __name__)
+        globals()[name] = mod
+        return mod
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_LAZY))

@@ -1,0 +1,79 @@
+"""Bitplane codec: ±1 spins as uint32 sign-bit words (DESIGN.md §4).
+
+The FPGA stores one spin per BRAM bit — an 800-spin state is a single
+800-bit word.  The TPU transcription is this codec: a spin vector
+``m ∈ {-1,+1}^N`` becomes ``ceil(N/32)`` uint32 words, bit ``k`` of word
+``w`` holding the sign of spin ``n = 32·w + k`` (1 ⇔ +1).  The same layout
+is used
+
+* for the HBM-resident engine state under ``storage_layout='packed'``
+  (`repro.core.engine`): spins and best-spins live as bitplanes between
+  plateau launches, 32× smaller than the seed's float32 spins;
+* for the trajectory planes of ``record='traj'`` (the Eq. 5/6 witness);
+* inside the streamed-noise resident kernel
+  (`repro.kernels.ssa_update.ssa_plateau_packed_batched`), whose HBM-facing
+  spin refs are these words — `_unpack_pm1_f32` / `_pack_pm1` are the
+  kernel-side halves of the codec, operating on lane-aligned (N % 128 == 0)
+  tiles in VMEM.
+
+Everything here is pure `jnp` on uint32 (no Pallas imports), so the codec
+is usable from `repro.core` without pulling in the kernel toolchain, and
+identically inside kernel bodies (interpret mode and Mosaic share the ops).
+
+Tail handling: for N not a multiple of 32 the last word's high bits are
+zero-padded on pack and sliced off on unpack — roundtrip-exact for any N
+(property-tested in tests/test_bitplane.py).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "packed_words",
+    "pack_spins",
+    "unpack_spins",
+    "packed_nbytes",
+]
+
+# Host constant (never a traced value, safe under jit) — jnp ops accept it.
+_SHIFTS = np.arange(32, dtype=np.uint32)
+
+
+def _shifts():
+    return _SHIFTS
+
+
+def packed_words(n: int) -> int:
+    """Words needed for an N-spin bitplane: ceil(N/32)."""
+    return (int(n) + 31) // 32
+
+
+def packed_nbytes(n: int) -> int:
+    """Bytes of one packed N-spin plane (uint32 words)."""
+    return 4 * packed_words(n)
+
+
+def pack_spins(m: jnp.ndarray) -> jnp.ndarray:
+    """Pack ±1 spins [..., N] into uint32 bitplanes [..., ceil(N/32)].
+
+    Bit k of word w is the sign bit of spin 32·w + k (1 ⇔ m > 0); tail bits
+    of the last word are 0.  Accepts any numeric spin dtype.
+    """
+    n = m.shape[-1]
+    nw = packed_words(n)
+    pad = nw * 32 - n
+    bits = (m > 0).astype(jnp.uint32)
+    if pad:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros(bits.shape[:-1] + (pad,), jnp.uint32)], axis=-1
+        )
+    bits = bits.reshape(bits.shape[:-1] + (nw, 32))
+    return jnp.sum(bits << _shifts(), axis=-1, dtype=jnp.uint32)
+
+
+def unpack_spins(packed: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Inverse of pack_spins; returns int8 spins in {-1,+1}, shape [..., n]."""
+    bits = (packed[..., None] >> _shifts()) & jnp.uint32(1)
+    flat = bits.reshape(bits.shape[:-2] + (-1,))[..., :n]
+    return jnp.where(flat == 1, 1, -1).astype(jnp.int8)

@@ -7,25 +7,34 @@ The FPGA's spin-gate array computes, for all spins in one clock,
     m       = sign(Itanh)
 
 On TPU we batch replicas (trials) on a leading axis so the field computation
-is a (R,N)·(N,N) matmul on the MXU; the FSM is a fused VPU epilogue.  Two
+is a (R,N)·(N,N) matmul on the MXU; the FSM is a fused VPU epilogue.  Three
 kernels:
 
-* :func:`local_field_kernel` — tiled matmul ``m @ J + h`` with a standard
+* :func:`local_field` — tiled matmul ``m @ J + h`` with a standard
   (R-tile, N-tile, K-tile) grid and a float32 VMEM accumulator.  Used as the
   drop-in dense-field backend.  Exact: ±1 spins × integer J accumulate in
   f32 (< 2^24).
 
-* :func:`ssa_plateau_kernel` — the **resident** kernel: one launch executes
-  all C cycles of a temperature plateau with J pinned in VMEM, streaming only
-  noise in and nothing but final state + running best out.  This is the
-  TPU answer to the FPGA's "everything on-chip" design point: per-cycle HBM
-  traffic drops from O(N²) (re-reading J) to O(R·N) (noise), raising
-  arithmetic intensity by ~C×.  It also fuses the solution tracking (energy
-  + arg-best restricted to storage-eligible plateaus), which is HA-SSA's
-  storage policy executed entirely on-chip.
+* :func:`ssa_plateau` / :func:`ssa_plateau_batched` — the **resident**
+  kernel: one launch executes all C cycles of a temperature plateau with J
+  pinned in VMEM, streaming only pre-generated noise in and nothing but
+  final state + running best out.  Per-cycle HBM traffic drops from O(N²)
+  (re-reading J) to O(R·N) (noise), raising arithmetic intensity by ~C×.
+  It also fuses the solution tracking (energy + arg-best restricted to
+  storage-eligible plateaus), which is HA-SSA's storage policy executed
+  entirely on-chip.  Since the packed kernel landed this is the *threefry
+  reference path* (threefry noise cannot be generated in-kernel).
 
-Both are validated against :mod:`.ref` in interpret mode (CPU) over a
-shape/dtype sweep; TPU is the compile target.
+* :func:`ssa_plateau_packed` / :func:`ssa_plateau_packed_batched` — the
+  **streamed-noise packed** kernel (DESIGN.md §4): the HBM-facing spin refs
+  are uint32 bitplanes (`repro.kernels.bitplane` layout) and the per-cycle
+  noise is generated *inside* the kernel by stepping carried xorshift128
+  lanes, bit-identical to `repro.core.rng.xorshift_next_bits` — the noise
+  buffer is gone entirely and per-plateau HBM traffic is O(R·N) lanes +
+  O(R·N/32) packed spins.  The production path for xorshift noise.
+
+All are validated against :mod:`.ref` oracles / the scan engine in
+interpret mode (CPU) over a shape/dtype sweep; TPU is the compile target.
 """
 from __future__ import annotations
 
@@ -42,6 +51,8 @@ __all__ = [
     "local_field",
     "ssa_plateau",
     "ssa_plateau_batched",
+    "ssa_plateau_packed",
+    "ssa_plateau_packed_batched",
     "pad_to",
     "DEFAULT_INTERPRET",
 ]
@@ -280,6 +291,256 @@ def ssa_plateau_batched(
         bh_o[:, :R, 0],
         bm_o[:, :R, :N],
     )
+
+
+# ---------------------------------------------------------------------------
+# Kernel C: streamed-noise packed plateau kernel — the bit-packed datapath
+# ---------------------------------------------------------------------------
+def _unpack_pm1_f32(words: jnp.ndarray) -> jnp.ndarray:
+    """Kernel-side codec: (bR, Nw) u32 words → (bR, 32·Nw) f32 spins ±1.
+
+    Bit layout matches repro.kernels.bitplane (bit k of word w = spin
+    32·w + k; 1 ⇔ +1).  Runs on lane-aligned tiles (32·Nw % 128 == 0).
+    """
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    flat = bits.reshape(words.shape[0], -1)
+    return jnp.where(flat == 1, 1.0, -1.0).astype(jnp.float32)
+
+
+def _pack_pm1(m: jnp.ndarray) -> jnp.ndarray:
+    """Kernel-side codec: (bR, N) ±1 f32 → (bR, N/32) u32 words (N % 32 == 0)."""
+    bits = (m > 0).astype(jnp.uint32).reshape(m.shape[0], -1, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def _plateau_streamed_kernel(
+    i0_ref,      # (1, 1) int32 scalar
+    mp_ref,      # (1, bR, Nw) uint32   spins, packed sign bits
+    it_ref,      # (1, bR, N)  int32    Itanh state
+    j_ref,       # (1, N, N)   J dtype  resident couplings of THIS problem
+    h_ref,       # (1, 1, N)   int32    biases
+    rng_ref,     # (1, 4, bR, N) uint32 xorshift128 lanes (carried)
+    bh_ref,      # (1, bR, 1)  int32    running best energy (input)
+    bmp_ref,     # (1, bR, Nw) uint32   running best spins, packed (input)
+    mp_out,      # (1, bR, Nw) uint32
+    it_out,      # (1, bR, N)  int32
+    rng_out,     # (1, 4, bR, N) uint32
+    bh_out,      # (1, bR, 1)  int32
+    bmp_out,     # (1, bR, Nw) uint32
+    m_s,         # scratch (bR, N) float32
+    it_s,        # scratch (bR, N) int32
+    rng_s,       # scratch (4, bR, N) uint32
+    bh_s,        # scratch (bR, 1) float32 (exact ints)
+    bm_s,        # scratch (bR, N) float32 (±1)
+    *,
+    n_cycles: int,
+    n_rnd: int,
+    eligible: bool,
+):
+    """All C cycles of a plateau with packed HBM refs and in-kernel noise.
+
+    The HBM-facing spin state is the uint32 bitplane codec; the per-cycle
+    noise is generated *inside* the kernel by stepping the carried Marsaglia
+    xorshift128 lanes (bit-identical to repro.core.rng.xorshift_next_bits),
+    so no (C, R, N) noise buffer exists anywhere.  Per-plateau HBM traffic
+    drops from O(C·R·N) int8 noise to O(R·N) uint32 lanes + O(R·N/32)
+    packed spins.
+    """
+    m_s[...] = _unpack_pm1_f32(mp_ref[0])
+    it_s[...] = it_ref[0]
+    rng_s[...] = rng_ref[0]
+    bh_s[...] = bh_ref[0].astype(jnp.float32)
+    bm_s[...] = _unpack_pm1_f32(bmp_ref[0])
+    i0 = i0_ref[0, 0]
+    hf = h_ref[0].astype(jnp.float32)  # (1, N)
+    jm = j_ref[0]
+    one = jnp.uint32(1)
+
+    def energy(m, field):
+        hm = jnp.sum(hf * m, axis=-1, keepdims=True)
+        mf_ = jnp.sum(m * field, axis=-1, keepdims=True)
+        return -(hm + mf_) * 0.5
+
+    def track_best(m, field):
+        if not eligible:
+            return
+        H = energy(m, field)
+        better = H < bh_s[...]
+        bh_s[...] = jnp.where(better, H, bh_s[...])
+        bm_s[...] = jnp.where(better, m, bm_s[...])
+
+    def body(c, _):
+        field = (
+            jnp.dot(m_s[...], jm, preferred_element_type=jnp.float32) + hf
+        )
+        # m_s currently holds m(t0+c): produced by THIS plateau for c >= 1.
+        @pl.when(c >= 1)
+        def _():
+            track_best(m_s[...], field)
+
+        # One Marsaglia xorshift128 step per lane — the FPGA's per-spin-gate
+        # bit stream, bit-identical to repro.core.rng.xorshift_next_bits.
+        x, y, z, w = rng_s[0], rng_s[1], rng_s[2], rng_s[3]
+        t = x ^ (x << jnp.uint32(11))
+        w_new = (w ^ (w >> jnp.uint32(19))) ^ (t ^ (t >> jnp.uint32(8)))
+        rng_s[0] = y
+        rng_s[1] = z
+        rng_s[2] = w
+        rng_s[3] = w_new
+        r = jnp.where((w_new >> jnp.uint32(31)) & one, 1, -1).astype(jnp.int32)
+
+        I = field.astype(jnp.int32) + n_rnd * r + it_s[...]
+        it_new = jnp.clip(I, -i0, i0 - 1)
+        it_s[...] = it_new
+        m_s[...] = jnp.where(it_new >= 0, 1.0, -1.0).astype(jnp.float32)
+        return 0
+
+    jax.lax.fori_loop(0, n_cycles, body, 0)
+    # final state m(t0+C): one more field evaluation for its energy
+    field = jnp.dot(m_s[...], jm, preferred_element_type=jnp.float32) + hf
+    track_best(m_s[...], field)
+
+    mp_out[...] = _pack_pm1(m_s[...])[None]
+    it_out[...] = it_s[...][None]
+    rng_out[...] = rng_s[...][None]
+    bh_out[...] = bh_s[...].astype(jnp.int32)[None]
+    bmp_out[...] = _pack_pm1(bm_s[...])[None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_cycles", "n_rnd", "eligible", "block_r", "interpret"),
+)
+def ssa_plateau_packed_batched(
+    m_packed: jnp.ndarray,   # (B, R, Nw) uint32 packed ±1 spins
+    itanh: jnp.ndarray,      # (B, R, N) int32
+    J: jnp.ndarray,          # (B, N, N) float32/bfloat16 — one J per problem
+    h: jnp.ndarray,          # (B, N) int32
+    rng: jnp.ndarray,        # (B, 4, R, N) uint32 xorshift lanes (carried)
+    i0: jnp.ndarray,         # scalar int32 (shared: same schedule per bucket)
+    best_H: jnp.ndarray,     # (B, R) int32
+    best_m_packed: jnp.ndarray,  # (B, R, Nw) uint32
+    *,
+    n_cycles: int,
+    n_rnd: int = 2,
+    eligible: bool = True,
+    block_r: int = 8,
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Streamed-noise resident plateau for B stacked problems, packed refs.
+
+    Semantically `ssa_plateau_batched` with the plateau's noise equal to
+    ``n_cycles`` successive `xorshift_next_bits` draws from ``rng`` — but no
+    (B, C, R, N) buffer is ever materialized: noise bits are generated in
+    VMEM from the carried lanes, and the HBM-facing spin state crosses the
+    launch boundary as uint32 bitplanes (32× smaller than float32 spins).
+
+    Returns (m_packed, itanh, rng, best_H, best_m_packed) after the plateau.
+    """
+    interpret = DEFAULT_INTERPRET if interpret is None else interpret
+    B, R, N = itanh.shape
+    LANE = 128
+    Np = N + (-N) % LANE
+    Nwp = Np // 32
+    # Pad packed words up to the padded lane count; zero words decode to -1
+    # pad spins, which J's zero pad rows/cols make inert.
+    mp = pad_to(pad_to(m_packed, 2, Nwp), 1, block_r)
+    bmp = pad_to(pad_to(best_m_packed, 2, Nwp), 1, block_r)
+    itp = pad_to(pad_to(itanh, 2, LANE), 1, block_r)
+    Jp = pad_to(pad_to(J, 1, LANE), 2, LANE)
+    hp = pad_to(h.astype(jnp.int32).reshape(B, 1, -1), 2, LANE)
+    # Zero-state pad lanes are xorshift fixed points (constant -1 noise).
+    rngp = pad_to(pad_to(rng, 3, LANE), 2, block_r)
+    bhp = pad_to(best_H.reshape(B, -1, 1), 1, block_r)
+    Rp = itp.shape[1]
+    grid = (B, Rp // block_r)
+    i0a = jnp.asarray(i0, jnp.int32).reshape(1, 1)
+
+    kernel = functools.partial(
+        _plateau_streamed_kernel, n_cycles=n_cycles, n_rnd=n_rnd,
+        eligible=eligible,
+    )
+    mp_o, it_o, rng_o, bh_o, bmp_o = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, i: (0, 0)),
+            pl.BlockSpec((1, block_r, Nwp), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_r, Np), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, Np, Np), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, 1, Np), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, 4, block_r, Np), lambda b, i: (b, 0, i, 0)),
+            pl.BlockSpec((1, block_r, 1), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_r, Nwp), lambda b, i: (b, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_r, Nwp), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_r, Np), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, 4, block_r, Np), lambda b, i: (b, 0, i, 0)),
+            pl.BlockSpec((1, block_r, 1), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_r, Nwp), lambda b, i: (b, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Rp, Nwp), jnp.uint32),
+            jax.ShapeDtypeStruct((B, Rp, Np), jnp.int32),
+            jax.ShapeDtypeStruct((B, 4, Rp, Np), jnp.uint32),
+            jax.ShapeDtypeStruct((B, Rp, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, Rp, Nwp), jnp.uint32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_r, Np), jnp.float32),
+            pltpu.VMEM((block_r, Np), jnp.int32),
+            pltpu.VMEM((4, block_r, Np), jnp.uint32),
+            pltpu.VMEM((block_r, 1), jnp.float32),
+            pltpu.VMEM((block_r, Np), jnp.float32),
+        ],
+        interpret=interpret,
+    )(i0a, mp, itp, Jp.astype(J.dtype), hp, rngp, bhp, bmp)
+    nw = (N + 31) // 32
+    return (
+        mp_o[:, :R, :nw],
+        it_o[:, :R, :N],
+        rng_o[:, :, :R, :N],
+        bh_o[:, :R, 0],
+        bmp_o[:, :R, :nw],
+    )
+
+
+def ssa_plateau_packed(
+    m_packed: jnp.ndarray,   # (R, Nw) uint32
+    itanh: jnp.ndarray,      # (R, N) int32
+    J: jnp.ndarray,          # (N, N)
+    h: jnp.ndarray,          # (N,) int32
+    rng: jnp.ndarray,        # (4, R, N) uint32
+    i0: jnp.ndarray,
+    best_H: jnp.ndarray,     # (R,) int32
+    best_m_packed: jnp.ndarray,  # (R, Nw) uint32
+    *,
+    n_cycles: int,
+    n_rnd: int = 2,
+    eligible: bool = True,
+    block_r: int = 8,
+    interpret: Optional[bool] = None,
+):
+    """B=1 slice of :func:`ssa_plateau_packed_batched` (one kernel body)."""
+    mp, it, rs, bh, bmp = ssa_plateau_packed_batched(
+        m_packed[None],
+        itanh[None],
+        J[None],
+        h[None],
+        rng[None],
+        i0,
+        best_H[None],
+        best_m_packed[None],
+        n_cycles=n_cycles,
+        n_rnd=n_rnd,
+        eligible=eligible,
+        block_r=block_r,
+        interpret=interpret,
+    )
+    return mp[0], it[0], rs[0], bh[0], bmp[0]
 
 
 @functools.partial(

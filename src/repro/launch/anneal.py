@@ -37,6 +37,7 @@ def _run_service(problem_names, hp, args):
         for i, p in enumerate(problems)
     ]
     svc = AnnealService(backend=args.backend, noise=args.noise,
+                        storage_layout=args.storage_layout,
                         chunk_shots=args.chunk_shots)
 
     def progress(ev):
@@ -86,6 +87,10 @@ def main():
     ap.add_argument("--n-rnd", type=int, default=2)
     ap.add_argument("--beta-shift", type=int, default=1)
     ap.add_argument("--storage", choices=("i0max", "all"), default="i0max")
+    ap.add_argument("--storage-layout", choices=("dense", "packed"),
+                    default="dense",
+                    help="HBM-resident engine state: int8 spins or uint32 "
+                         "bitplanes (DESIGN.md §4; bit-identical results)")
     ap.add_argument("--backend", choices=("sparse", "dense", "pallas"),
                     default="sparse")
     ap.add_argument("--record", choices=("best", "traj"), default="best")
@@ -111,6 +116,7 @@ def main():
     t0 = time.time()
     r = anneal(p, hp, seed=args.seed, storage=args.storage, record=args.record,
                backend=args.backend, noise=args.noise,
+               storage_layout=args.storage_layout,
                track_energy=args.track_energy)
     dt = time.time() - t0
     spin_cycles = hp.total_cycles * hp.n_trials

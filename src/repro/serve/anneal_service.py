@@ -24,6 +24,14 @@ transcription is this service:
   in chunks; after each chunk the per-request best energy is reported
   (streaming progress) and a group whose requests have all reached their
   ``target_cut`` stops early.
+* **Packed storage + tiled J** — ``storage_layout='packed'`` carries the
+  engine state between chunk launches as uint32 spin bitplanes (and, for
+  the pallas backend with xorshift noise, runs the streamed-noise packed
+  kernel: no noise buffer, packed HBM refs).  The dense backend's
+  ``j_mode='auto'`` streams (tile_n, N) J slabs above
+  ``engine.TILED_J_THRESHOLD`` spins instead of materializing (B, N, N) —
+  G77/G81-class buckets (N = 10k–20k) serve through the same entry.  Both
+  axes ride the executable-cache key; results stay bit-identical.
 
 SA (:class:`~repro.core.sa.SAHyperParams`) and PT-SSA
 (:class:`~repro.core.pt.PTSSAHyperParams`) requests ride the same entry:
@@ -133,13 +141,24 @@ class AnnealService:
         backend: str = "sparse",
         *,
         noise: str = "xorshift",
+        storage_layout: str = "dense",
         chunk_shots: int = 1,
         sa_chunks: int = 8,
         min_bucket: int = 64,
         backend_opts: Optional[dict] = None,
     ):
+        """``storage_layout='packed'`` keeps the HBM-resident engine state
+        between chunk launches as uint32 spin bitplanes (DESIGN.md §4) — for
+        the pallas backend with xorshift noise the kernel's HBM-facing refs
+        are packed too, and noise is generated in-kernel (no (C, T, N)
+        buffer).  SSA results are bit-identical across layouts; SA/PT-SSA
+        groups always run the dense layout (their drivers own their state).
+        """
+        if storage_layout not in ("dense", "packed"):
+            raise ValueError(f"unknown storage_layout {storage_layout!r}")
         self.backend = backend
         self.noise = noise
+        self.storage_layout = storage_layout
         self.chunk_shots = int(chunk_shots)   # SSA iterations / PT rounds per chunk
         self.sa_chunks = int(sa_chunks)       # SA: report/early-stop points per run
         self.min_bucket = int(min_bucket)
@@ -218,14 +237,16 @@ class AnnealService:
 
         padded, b_live, b_bucket = self._pad_group(items)
         sig = self._group_key(req0, nb)[-1]
-        cache_key = ("ssa", self.backend, nb, b_bucket, hp.n_trials, hp.n_rnd,
-                     self.noise, req0.storage, sig, chunk)
+        cache_key = ("ssa", self.backend, self.storage_layout, nb, b_bucket,
+                     hp.n_trials, hp.n_rnd, self.noise, req0.storage, sig,
+                     chunk)
         ent = self._programs.get(cache_key)
         if ent is None:
             self.stats["program_cache_misses"] += 1
             bk = make_batched_backend(
                 self.backend, n_bucket=nb, n_trials=hp.n_trials,
-                n_rnd=hp.n_rnd, noise=self.noise, **self.backend_opts,
+                n_rnd=hp.n_rnd, noise=self.noise,
+                storage_layout=self.storage_layout, **self.backend_opts,
             )
 
             def init_fn(problem, ns0):
@@ -254,8 +275,9 @@ class AnnealService:
             lambda st: chunk_fn(stacked, st), state,
             lambda st: st.best_H,
         )
-        best_H = np.asarray(state.best_H)
-        best_m = np.asarray(state.best_m)
+        bh_dev, bm_dev = bk.finalize(state)  # layout-agnostic (unpacks bitplanes)
+        best_H = np.asarray(bh_dev)
+        best_m = np.asarray(bm_dev)
         wall = time.perf_counter() - t0
 
         for slot, (idx, req, maxcut, model) in enumerate(items):

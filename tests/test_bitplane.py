@@ -1,0 +1,119 @@
+"""Bitplane codec (repro.kernels.bitplane / DESIGN.md §4).
+
+The codec is THE storage format of the packed memory subsystem: the engine's
+packed state, the trajectory planes, and the streamed-noise kernel's
+HBM-facing refs all share this bit layout (bit k of word w = sign of spin
+32·w + k, 1 ⇔ +1).  Contracts under test: exact roundtrip for any N
+(including non-multiple-of-32 tails), zero tail bits on pack, agreement with
+the engine's re-exported symbols, and byte accounting.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import bitplane as bp
+
+
+def _random_spins(rng, shape):
+    return rng.choice(np.array([-1, 1], dtype=np.int8), size=shape)
+
+
+@pytest.mark.parametrize("n", [1, 5, 31, 32, 33, 64, 100, 800, 257])
+def test_roundtrip_exact(n):
+    rng = np.random.default_rng(n)
+    m = _random_spins(rng, (3, n))
+    packed = np.asarray(bp.pack_spins(m))
+    assert packed.shape == (3, bp.packed_words(n))
+    assert packed.dtype == np.uint32
+    out = np.asarray(bp.unpack_spins(packed, n))
+    np.testing.assert_array_equal(out, m)
+
+
+@given(st.integers(1, 300), st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_roundtrip_property(n, seed):
+    rng = np.random.default_rng(seed)
+    m = _random_spins(rng, (2, n))
+    out = np.asarray(bp.unpack_spins(bp.pack_spins(m), n))
+    np.testing.assert_array_equal(out, m)
+
+
+def test_tail_bits_are_zero():
+    """For N % 32 != 0 the last word's high bits must be zero-padded."""
+    n = 35  # one full word + 3 tail bits
+    m = np.ones((2, n), np.int8)  # all +1: every live bit set
+    packed = np.asarray(bp.pack_spins(m))
+    assert packed.shape[-1] == 2
+    np.testing.assert_array_equal(packed[:, 0], np.uint32(0xFFFFFFFF))
+    np.testing.assert_array_equal(packed[:, 1], np.uint32(0b111))
+
+
+def test_bit_layout_is_lsb_first():
+    """Bit k of word w holds spin 32·w + k (the kernel relies on this)."""
+    n = 40
+    m = -np.ones((1, n), np.int8)
+    m[0, 0] = 1    # word 0, bit 0
+    m[0, 33] = 1   # word 1, bit 1
+    packed = np.asarray(bp.pack_spins(m))
+    assert packed[0, 0] == 1
+    assert packed[0, 1] == 2
+
+
+def test_pack_accepts_any_numeric_dtype():
+    n = 50
+    rng = np.random.default_rng(0)
+    m8 = _random_spins(rng, (4, n))
+    for dtype in (np.int8, np.int32, np.float32):
+        np.testing.assert_array_equal(
+            np.asarray(bp.pack_spins(m8.astype(dtype))),
+            np.asarray(bp.pack_spins(m8)),
+        )
+
+
+def test_leading_batch_dims():
+    rng = np.random.default_rng(7)
+    m = _random_spins(rng, (2, 3, 70))
+    packed = bp.pack_spins(m)
+    assert packed.shape == (2, 3, bp.packed_words(70))
+    np.testing.assert_array_equal(np.asarray(bp.unpack_spins(packed, 70)), m)
+
+
+def test_word_and_byte_accounting():
+    assert bp.packed_words(1) == 1
+    assert bp.packed_words(32) == 1
+    assert bp.packed_words(33) == 2
+    assert bp.packed_words(800) == 25
+    assert bp.packed_nbytes(800) == 100  # the paper's 800-bit BRAM word
+    assert bp.packed_nbytes(33) == 8
+
+
+def test_engine_reexports_are_the_codec():
+    """repro.core.engine's pack/unpack ARE the kernel-side codec (one layout)."""
+    from repro.core import engine
+
+    assert engine.pack_spins is bp.pack_spins
+    assert engine.unpack_spins is bp.unpack_spins
+    assert engine.packed_words is bp.packed_words
+
+
+def test_pack_state_roundtrip():
+    """Engine-state packing is exact for ±1 spins and leaves other fields."""
+    import jax.numpy as jnp
+
+    from repro.core.engine import EngineState, pack_state, unpack_state
+
+    rng = np.random.default_rng(3)
+    n, t = 45, 3
+    m = _random_spins(rng, (t, n))
+    bm = _random_spins(rng, (t, n))
+    st = EngineState(
+        jnp.zeros((4, t, n), jnp.uint32),
+        jnp.asarray(m),
+        jnp.asarray(rng.integers(-8, 8, size=(t, n)), jnp.int32),
+        jnp.asarray(rng.integers(-50, 50, size=(t,)), jnp.int32),
+        jnp.asarray(bm),
+    )
+    back = unpack_state(pack_state(st), n)
+    for a, b in zip(st, back):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
