@@ -6,7 +6,7 @@ Every benchmark prints ``name,us_per_call,derived`` rows (harness contract).
 from __future__ import annotations
 
 import time
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 

@@ -1,75 +1,141 @@
-"""Paper Sec. VI-B: HA-SSA beyond ±1 MAX-CUT — integer weights / dense
-connectivity (TSP, number partitioning, graph isomorphism).
+"""Problem-frontend sweep: every family end-to-end through the service.
 
-Demonstrates the claim that HA-SSA inherits SSA's applicability to
-integer-weight Ising models, with hyperparameters scale-matched to |J|
-(core.problems.suggest_hyperparams).
+The paper demonstrates SSA/HA-SSA on G-set Max-Cut (and Sec. VI-B argues
+the extension to integer-weight Ising models); the problem frontend
+(:mod:`repro.problems`, DESIGN.md §9) opens generic QUBO, maximum
+independent set, graph coloring and number partitioning through the same
+:class:`~repro.serve.AnnealService`.  This benchmark is the end-to-end
+witness:
+
+* every family solves a smoke instance through the service on all three
+  backends (sparse / dense / pallas), decodes to a domain solution, and the
+  family's *feasibility verifier* must accept it — on every backend;
+* the three backends must agree on the decoded objective (they run the
+  same xorshift noise stream and are bit-identical per the engine
+  property tests — a disagreement here is a frontend bug);
+* ``hyperparams='auto'`` (local-energy-distribution autotuning,
+  :mod:`repro.core.autotune`) must **match or beat** the hand-set defaults
+  on the G11 cut and the QUBO smoke objective — the acceptance gate.
+
+Writes ``BENCH_problems.json`` and exits 1 if any gate fails.
+
+    python -m benchmarks.other_problems            # full sweep (nightly)
+    python -m benchmarks.other_problems --smoke    # CI: reduced budgets
 """
+
 from __future__ import annotations
 
+import argparse
+import json
+import sys
 import time
 
-import numpy as np
-
-from repro.core import anneal
-from repro.core.problems import (decode_gi, decode_partition, decode_tsp,
-                                 gi_problem, partition_problem,
-                                 suggest_hyperparams, tsp_problem,
-                                 tsp_tour_length)
+from repro.core import SSAHyperParams, gset
+from repro.problems import make_demo
+from repro.serve import AnnealRequest, AnnealService
 
 from .common import emit
 
+BACKENDS = ("sparse", "dense", "pallas")
 
-def run(csv_prefix: str = "sec6b_problems"):
-    # TSP: 5 cities on a line — optimum 2·span
-    pts = np.array([0, 2, 3, 7, 11])
-    dist = np.abs(pts[:, None] - pts[None, :])
-    p = tsp_problem(dist, penalty=int(2 * dist.max()))
-    hp = suggest_hyperparams(p.model, n_trials=16, m_shot=25)
-    t0 = time.perf_counter()
-    r = anneal(p.model, hp, seed=3, track_energy=False)
-    us = (time.perf_counter() - t0) * 1e6
-    tours = [decode_tsp(p, r.best_m[t]) for t in range(hp.n_trials)]
-    lens = [tsp_tour_length(p, t) for t in tours if t is not None]
-    emit(f"{csv_prefix}/tsp5", us,
-         f"feasible={len(lens)}/16;best={min(lens) if lens else None};optimal=22")
+# family → (smoke size, full size) in frontend units (see FAMILIES factories).
+SIZES = {
+    "qubo": (32, 96),
+    "mis": (48, 128),
+    "coloring": (36, 90),
+    "partition": (24, 48),
+}
 
-    # number partitioning
-    rng = np.random.default_rng(1)
-    values = rng.integers(1, 10, size=16)
-    model, _ = partition_problem(values)
-    hp = suggest_hyperparams(model, n_trials=16, m_shot=15)
-    t0 = time.perf_counter()
-    r = anneal(model, hp, seed=0, track_energy=False)
-    us = (time.perf_counter() - t0) * 1e6
-    resid = min(decode_partition(values, r.best_m[t]) for t in range(16))
-    emit(f"{csv_prefix}/partition16", us,
-         f"residual={resid};parity_floor={int(values.sum()) % 2}")
 
-    # graph isomorphism: 5-cycle vs relabeled 5-cycle
-    n = 5
-    A1 = np.zeros((n, n), dtype=int)
-    for a in range(n):
-        A1[a, (a + 1) % n] = A1[(a + 1) % n, a] = 1
-    perm = np.array([2, 4, 1, 0, 3])
-    inv = np.argsort(perm)
-    A2 = A1[np.ix_(inv, inv)]
-    model, _ = gi_problem(A1, A2)
-    hp = suggest_hyperparams(model, n_trials=16, m_shot=20)
+def _solve_one(backend, enc_or_problem, hp, *, seed=0, auto_base=None):
+    svc = AnnealService(backend=backend, noise="xorshift")
+    req = AnnealRequest(problem=enc_or_problem, hp=hp, seed=seed,
+                        auto_base=auto_base)
     t0 = time.perf_counter()
-    r = anneal(model, hp, seed=1, track_energy=False)
-    us = (time.perf_counter() - t0) * 1e6
-    ok = 0
-    for t in range(16):
-        mapping = decode_gi(n, r.best_m[t])
-        if mapping is None:
-            continue
-        P = np.zeros((n, n), dtype=int)
-        P[np.arange(n), mapping] = 1
-        if np.array_equal(P.T @ A1 @ P, A2):
-            ok += 1
-    emit(f"{csv_prefix}/gi5", us, f"valid_isomorphisms={ok}/16")
+    resp = svc.solve([req])[0]
+    return resp, time.perf_counter() - t0
+
+
+def run(smoke: bool = False, json_path: str = "BENCH_problems.json",
+        csv_prefix: str = "problems"):
+    base = (SSAHyperParams(n_trials=4, m_shot=2) if smoke
+            else SSAHyperParams(n_trials=16, m_shot=10))
+    report = {"smoke": smoke, "families": {}, "acceptance": {}}
+    failures = []
+
+    # -- family sweep: all backends, decoded-solution verification ---------
+    for kind, (n_smoke, n_full) in SIZES.items():
+        enc = make_demo(kind, n=n_smoke if smoke else n_full, seed=0)
+        row = {"name": enc.model.name, "n_spins": enc.model.n, "backends": {}}
+        objectives = {}
+        for backend in BACKENDS:
+            resp, wall = _solve_one(backend, enc, "auto", auto_base=base)
+            rhp = resp.request.hp
+            row["backends"][backend] = {
+                "objective": resp.objective,
+                "feasible": bool(resp.feasible),
+                "wall_s": wall,
+                "n_rnd": rhp.n_rnd,
+                "i0_max": rhp.i0_max,
+                "tau": rhp.tau,
+            }
+            objectives[backend] = resp.objective
+            emit(f"{csv_prefix}/{kind}/{backend}", wall * 1e6,
+                 f"objective={resp.objective};feasible={resp.feasible};"
+                 f"n_rnd={rhp.n_rnd};i0_max={rhp.i0_max}")
+            if not resp.feasible:
+                failures.append(f"{kind}/{backend}: decoded solution infeasible")
+        if len(set(objectives.values())) != 1:
+            failures.append(f"{kind}: backends disagree: {objectives}")
+        row["backends_agree"] = len(set(objectives.values())) == 1
+        report["families"][kind] = row
+
+    # -- acceptance: auto matches-or-beats hand on G11 and the QUBO case ---
+    g11 = gset.load("G11")
+    hand, _ = _solve_one("sparse", g11, base)
+    auto, _ = _solve_one("sparse", g11, "auto", auto_base=base)
+    g11_row = {
+        "hand_cut": int(hand.result.overall_best_cut),
+        "auto_cut": int(auto.result.overall_best_cut),
+        "auto_params": {"n_rnd": auto.request.hp.n_rnd,
+                        "i0_max": auto.request.hp.i0_max,
+                        "tau": auto.request.hp.tau},
+    }
+    emit(f"{csv_prefix}/acceptance/g11", 0.0,
+         f"hand={g11_row['hand_cut']};auto={g11_row['auto_cut']}")
+    if g11_row["auto_cut"] < g11_row["hand_cut"]:
+        failures.append(f"G11: auto cut {g11_row['auto_cut']} < "
+                        f"hand cut {g11_row['hand_cut']}")
+    report["acceptance"]["g11"] = g11_row
+
+    qenc = make_demo("qubo", n=SIZES["qubo"][0], seed=0)  # the QUBO smoke case
+    handq, _ = _solve_one("sparse", qenc, base)
+    autoq, _ = _solve_one("sparse", qenc, "auto", auto_base=base)
+    q_row = {"hand_objective": handq.objective, "auto_objective": autoq.objective}
+    emit(f"{csv_prefix}/acceptance/qubo", 0.0,
+         f"hand={q_row['hand_objective']};auto={q_row['auto_objective']}")
+    if autoq.objective > handq.objective:  # minimization
+        failures.append(f"qubo: auto objective {autoq.objective} > "
+                        f"hand objective {handq.objective}")
+    report["acceptance"]["qubo"] = q_row
+
+    report["failures"] = failures
+    report["ok"] = not failures
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {json_path}")
+    return report
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI: reduced instance sizes and cycle budgets")
+    ap.add_argument("--json", default="BENCH_problems.json")
+    args = ap.parse_args()
+    rep = run(smoke=args.smoke, json_path=args.json)
+    if not rep["ok"]:
+        for f in rep["failures"]:
+            print(f"FAIL: {f}", file=sys.stderr)
+        sys.exit(1)

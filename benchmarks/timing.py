@@ -45,7 +45,6 @@ import sys
 import time
 
 import jax
-import numpy as np
 
 from repro.core import SAHyperParams, SSAHyperParams, anneal, anneal_sa, gset, memory
 
@@ -352,6 +351,11 @@ if __name__ == "__main__":
     ap.add_argument("--memory-smoke", action="store_true",
                     help="CI smoke: --memory on a reduced cycle budget")
     ap.add_argument("--json", default=None)
+    ap.add_argument("--min-speedup", type=float, default=None,
+                    help="--service gate: fail if the batched service is not "
+                         "at least this many × faster than the per-request "
+                         "loop (nightly regression gate; PR-2 acceptance "
+                         "was 3x)")
     args = ap.parse_args()
     if args.memory or args.memory_smoke:
         report = run_memory(json_path=args.json or "BENCH_memory.json",
@@ -367,6 +371,19 @@ if __name__ == "__main__":
     elif args.service_smoke:
         run_service_smoke(json_path=args.json or "BENCH_service.json")
     elif args.service:
-        run_service(json_path=args.json or "BENCH_service.json")
+        report = run_service(json_path=args.json or "BENCH_service.json")
+        if args.min_speedup is not None:
+            slow = {
+                bk: r["speedup"]
+                for bk, r in report["backends"].items()
+                if r["speedup"] < args.min_speedup
+            }
+            if slow:
+                print(
+                    f"FAIL: service speedup below the {args.min_speedup}x "
+                    f"gate: {slow}",
+                    file=sys.stderr,
+                )
+                sys.exit(1)
     else:
         run()

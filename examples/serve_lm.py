@@ -5,7 +5,6 @@
 import argparse
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.models import model_defs

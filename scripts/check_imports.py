@@ -1,0 +1,42 @@
+"""Import-sanity gate: every module under src/repro must import cleanly.
+
+Walks the package tree and imports each module in a fresh interpreter-wide
+pass (no subprocess per module — a broken transitive import fails here just
+as it would for a user).  Run from the repo root:
+
+    PYTHONPATH=src python scripts/check_imports.py
+
+Used by the CI lint job; keeps lazy-import seams (repro.kernels loading
+Pallas on demand, the hypothesis test stub, …) honest.
+"""
+
+from __future__ import annotations
+
+import importlib
+import pkgutil
+import sys
+import traceback
+
+
+def main() -> int:
+    import repro
+
+    failures = []
+    modules = sorted(
+        m.name for m in pkgutil.walk_packages(repro.__path__, prefix="repro.")
+    )
+    for name in modules:
+        try:
+            importlib.import_module(name)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    print(f"imported {len(modules) - len(failures)}/{len(modules)} modules")
+    if failures:
+        print("FAILED imports:", *failures, sep="\n  ", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -16,7 +16,7 @@ import json
 import os
 import re
 import threading
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import numpy as np

@@ -5,7 +5,6 @@ shapes.py) plus the paper-native annealing problem configs.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict
 
 from repro.models import ModelConfig
 

@@ -10,6 +10,12 @@ Public API:
   memory                              — Eq.(5)/(6) memory models
 """
 from . import gset, memory  # noqa: F401
+from .autotune import (  # noqa: F401
+    AutotuneReport,
+    autotune_hyperparams,
+    resolve_hyperparams,
+    sample_local_fields,
+)
 from .engine import (  # noqa: F401
     TILED_J_THRESHOLD,
     BaseResult,

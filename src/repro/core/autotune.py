@@ -1,0 +1,178 @@
+"""Local-energy-distribution-based hyperparameter determination.
+
+The paper's Table II hyperparameters (n_rnd = 2, I0: 1→32) are tuned for
+±1-weight MAX-CUT; on integer-weight reductions (QUBO, partitioning, …) the
+same settings collapse — the noise is too weak to escape local minima and
+the Itanh clamp saturates far below the local-field scale.  The companion
+work *Local Energy Distribution Based Hyperparameter Determination for
+Stochastic Simulated Annealing* (arXiv:2304.11839) shows both knobs are
+functions of one measurable quantity: the distribution of local energies
+z_i = h_i + Σ_j J_ij m_j over random spin states.
+
+This module implements that determination, deterministically:
+
+* sample S random ±1 states from a seeded generator and measure the local
+  fields through the model's padded adjacency (pure NumPy — no compilation,
+  O(S·N·deg), negligible next to any anneal);
+* **noise magnitude** — n_rnd = round(σ), the sampled standard deviation:
+  the stochastic term then perturbs I on the same scale the couplings do
+  (the accept/escape balance of Eq. 2a);
+* **I0 clamp** — I0max = next_pow2(8·max|z|): the Itanh saturation range
+  covers the coldest useful temperature ≈ 8× the extreme local energy, kept
+  a power of two so the HA-SSA barrel-shift schedule (Eq. 4) reaches it
+  exactly; I0min stays 1 (the hottest plateau);
+* **per-plateau schedule scaling** — the plateau length τ is rescaled so
+  one iteration keeps the caller's cycle budget: more plateaus (larger
+  I0max ⇒ steps = log2(I0max)+1) each run proportionally fewer cycles.
+
+On G11-class ±1 MAX-CUT (4-regular): σ = 2, max|z| = 4, so the
+determination reproduces Table II exactly (n_rnd = 2, I0max = 32,
+τ unchanged) — autotune is a strict generalization of the paper's hand
+settings, property-tested in tests/test_autotune.py.
+
+Documented bounds (asserted in tests): n_rnd ∈ [1, 2^16],
+I0max a power of two in [8, 2^20], I0min = 1, τ ∈ [8, τ_base·steps_base],
+and identical outputs for identical (model, base, n_samples, seed).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from .ising import IsingModel
+from .schedule import n_temp_steps
+from .ssa import SSAHyperParams
+
+__all__ = [
+    "AutotuneReport",
+    "sample_local_fields",
+    "autotune_hyperparams",
+    "resolve_hyperparams",
+]
+
+# Documented output bounds (see module docstring).
+N_RND_MAX = 1 << 16
+I0_MAX_FLOOR = 8
+I0_MAX_CEIL = 1 << 20
+TAU_FLOOR = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class AutotuneReport:
+    """What the determination measured and decided (observability)."""
+
+    sigma: float          # std of sampled local fields
+    z_max: int            # max |local field| over samples
+    n_samples: int
+    seed: int
+    n_rnd: int
+    i0_min: int
+    i0_max: int
+    tau: int
+
+
+def sample_local_fields(
+    model: IsingModel, n_samples: int = 64, seed: int = 0
+) -> np.ndarray:
+    """Local fields z_i = h_i + Σ_j J_ij m_j over S seeded random states.
+
+    Returns an (S, N) int64 array.  Pure NumPy over the padded adjacency —
+    deterministic for a fixed seed, independent of backend and device.
+    The gather is chunked over samples so the transient (chunk, N, deg)
+    buffer stays bounded (~0.5 GB) even for dense large-N models (K2000:
+    N·deg ≈ 4M entries per sample).
+    """
+    n_samples = int(n_samples)
+    rng = np.random.default_rng(seed)
+    m = rng.integers(0, 2, size=(n_samples, model.n)) * 2 - 1  # ±1
+    nbr_idx = np.asarray(model.nbr_idx)
+    nbr_w = np.asarray(model.nbr_w, dtype=np.int64)
+    h = np.asarray(model.h, np.int64)
+    chunk = max(1, int(2**26 // max(model.n * model.max_degree, 1)))
+    out = np.empty((n_samples, model.n), dtype=np.int64)
+    for s0 in range(0, n_samples, chunk):
+        ms = m[s0 : s0 + chunk]
+        neigh = ms[:, nbr_idx]  # (chunk, N, D)
+        out[s0 : s0 + chunk] = h + (nbr_w * neigh).sum(axis=-1)
+    return out
+
+
+def _next_pow2(v: int) -> int:
+    v = int(v)
+    return 1 if v <= 1 else 1 << (v - 1).bit_length()
+
+
+def autotune_hyperparams(
+    model: IsingModel,
+    base: Optional[SSAHyperParams] = None,
+    *,
+    n_samples: int = 64,
+    seed: int = 0,
+) -> Tuple[SSAHyperParams, AutotuneReport]:
+    """Derive per-instance SSA hyperparameters from the local-field sample.
+
+    ``base`` supplies the *budget* knobs (n_trials, m_shot, the per-iteration
+    cycle budget via tau·steps, beta_shift); the *energy-scale* knobs
+    (n_rnd, i0_min, i0_max) and the per-plateau τ are determined here.
+    Deterministic for fixed (model, base, n_samples, seed).
+    """
+    base = base if base is not None else SSAHyperParams()
+    z = sample_local_fields(model, n_samples=n_samples, seed=seed)
+    sigma = float(z.std())
+    z_max = int(np.abs(z).max(initial=1))
+
+    n_rnd = int(np.clip(round(sigma), 1, N_RND_MAX))
+    i0_max = int(np.clip(_next_pow2(8 * z_max), I0_MAX_FLOOR, I0_MAX_CEIL))
+    i0_min = 1
+
+    # Per-plateau schedule scaling: keep the caller's per-iteration cycle
+    # budget (steps·τ) as the plateau count changes with the clamp range.
+    steps_base = n_temp_steps(base.i0_min, base.i0_max, base.beta_shift)
+    steps = n_temp_steps(i0_min, i0_max, base.beta_shift)
+    tau = int(np.clip(round(steps_base * base.tau / steps), TAU_FLOOR, None))
+
+    hp = SSAHyperParams(
+        n_trials=base.n_trials,
+        m_shot=base.m_shot,
+        n_rnd=n_rnd,
+        i0_min=i0_min,
+        i0_max=i0_max,
+        tau=tau,
+        beta_shift=base.beta_shift,
+    )
+    report = AutotuneReport(
+        sigma=sigma,
+        z_max=z_max,
+        n_samples=int(n_samples),
+        seed=int(seed),
+        n_rnd=n_rnd,
+        i0_min=i0_min,
+        i0_max=i0_max,
+        tau=tau,
+    )
+    return hp, report
+
+
+def resolve_hyperparams(
+    hp,
+    model: IsingModel,
+    *,
+    base: Optional[SSAHyperParams] = None,
+    seed: int = 0,
+) -> Tuple[SSAHyperParams, Optional[AutotuneReport]]:
+    """Resolve a request's hyperparameter spec: pass through or autotune.
+
+    ``hp='auto'`` (the :class:`~repro.serve.AnnealRequest` mode) maps to
+    :func:`autotune_hyperparams` on the unpadded model; concrete
+    hyperparameter objects pass through untouched.  The autotune draw is
+    seeded independently of the anneal seed so identical problems resolve
+    to identical hyperparameters and keep batching together in the service.
+    """
+    if isinstance(hp, str):
+        if hp != "auto":
+            raise ValueError(f"unknown hyperparameter mode {hp!r}; use 'auto'")
+        return autotune_hyperparams(model, base, seed=seed)
+    return hp, None

@@ -145,7 +145,7 @@ def ssa_cycle_update(field, itanh, r, i0, n_rnd):
     Returns:
       (m_new int8[...,N], itanh_new int32[...,N])
     """
-    I = field + n_rnd * r + itanh                       # (2a)
+    I = field + n_rnd * r + itanh  # noqa: E741 — Eq. (2a) current
     itanh_new = jnp.clip(I, -i0, i0 - 1)                # (2b)
     m_new = jnp.where(itanh_new >= 0, 1, -1).astype(jnp.int8)  # (2c)
     return m_new, itanh_new
@@ -163,12 +163,26 @@ def energy_from_field(m, field, h):
 # Problem / result plumbing shared by the SSA, SA and PT drivers
 # ---------------------------------------------------------------------------
 def normalize_problem(
-    problem: Union[MaxCutProblem, IsingModel],
+    problem: Union[MaxCutProblem, IsingModel, Any],
 ) -> Tuple[Optional[MaxCutProblem], IsingModel]:
-    """Split a problem into (maxcut-or-None, IsingModel)."""
+    """Split a problem into (maxcut-or-None, IsingModel).
+
+    Accepts a :class:`MaxCutProblem`, a raw :class:`IsingModel`, or any
+    encoded problem exposing an IsingModel ``model`` attribute (the
+    :class:`repro.problems.ProblemEncoding` frontend) — duck-typed so the
+    engine never imports the problems package.
+    """
     if isinstance(problem, MaxCutProblem):
         return problem, problem.to_ising()
-    return None, problem
+    if isinstance(problem, IsingModel):
+        return None, problem
+    model = getattr(problem, "model", None)
+    if isinstance(model, IsingModel):
+        return None, model
+    raise TypeError(
+        f"cannot interpret {type(problem).__name__} as an annealing problem; "
+        "pass a MaxCutProblem, an IsingModel, or a ProblemEncoding"
+    )
 
 
 def finalize_cut(best_H, maxcut: Optional[MaxCutProblem]):
@@ -418,10 +432,10 @@ class PlateauBackend:
         self.h = jnp.asarray(model.h, jnp.int32)
         lanes = (self.n_trials, model.n)
         if noise == "xorshift":
-            self._noise_init = lambda seed: xorshift_init(seed, lanes)
+            self._noise_init = lambda seed: xorshift_init(seed, lanes)  # noqa: E731
             self._noise_step = xorshift_next_bits
         elif noise == "threefry":
-            self._noise_init = lambda seed: jax.random.PRNGKey(seed)
+            self._noise_init = lambda seed: jax.random.PRNGKey(seed)  # noqa: E731
 
             def step(key):
                 key, sub = jax.random.split(key)

@@ -13,6 +13,11 @@ run on them unchanged:
 QUBO x∈{0,1}ⁿ with x = (1+m)/2 maps to Ising via
   J_ij = -Q_ij/2 (i≠j),  h_i = -(Q_ii/2 + Σ_{j≠i} Q_ij/4)·2 ... we keep all
 couplings integral by scaling Q by 4 up front (documented per encoder).
+
+The production problem frontend — encodings with decode/verify carried as
+one object, servable through :class:`repro.serve.AnnealService` — lives in
+:mod:`repro.problems` (DESIGN.md §9); this module keeps the original
+Sec. VI-B demonstrations (TSP, GI) and the legacy tuple-style entries.
 """
 from __future__ import annotations
 
@@ -43,6 +48,9 @@ def suggest_hyperparams(model: IsingModel, n_trials: int = 16, m_shot: int = 20)
     fluctuation scale must track |J| (empirically n_rnd ≈ |J|max/4 and
     I0max ≈ 8·|J|max keep the accept/escape balance — validated on TSP,
     partitioning, and GI in tests/test_problems.py).
+
+    This is the coarse *hand* heuristic; the measured, per-instance
+    determination is :func:`repro.core.autotune.autotune_hyperparams`.
     """
     from .ssa import SSAHyperParams
 
@@ -54,35 +62,9 @@ def suggest_hyperparams(model: IsingModel, n_trials: int = 16, m_shot: int = 20)
     )
 
 
-def qubo_to_ising(Q: np.ndarray, name: str = "qubo") -> Tuple[IsingModel, int]:
-    """Minimize xᵀQx over x∈{0,1}ⁿ as an Ising model (integer couplings).
-
-    With x = (1+m)/2:  xᵀQx = ¼ Σ_ij Q_ij (1+m_i)(1+m_j)
-      = const + ¼ Σ_ij Q_ij m_i m_j + ¼ Σ_i (Σ_j (Q_ij+Q_ji)) m_i.
-    Multiplying the objective by 4 keeps everything integral:
-      H = -Σ h m - ½ Σ J m m  with J_ij = -(Q_ij + Q_ji) (i≠j),
-      h_i = -(Q_ii + ½Σ_{j≠i}(Q_ij+Q_ji))·... we use the direct sum form
-      below; returns (model, offset) with 4·xᵀQx = H(m) + offset.
-    """
-    Q = np.asarray(Q, dtype=np.int64)
-    n = Q.shape[0]
-    S = Q + Q.T  # symmetric part ×2
-    # 4 xQx = Σ_ij S_ij (1+m_i)(1+m_j)/2 ... expand exactly:
-    # 4 xQx = Σ_ij Q_ij (1 + m_i + m_j + m_i m_j)
-    #       = sum(Q) + Σ_i m_i (rowQ_i + colQ_i) + Σ_ij Q_ij m_i m_j
-    const = int(Q.sum())
-    lin = Q.sum(axis=1) + Q.sum(axis=0)  # coefficient of m_i
-    quad = S.copy()
-    diag = np.diag(quad).copy()
-    np.fill_diagonal(quad, 0)
-    # Σ_ij Q_ij m_i m_j = ½ Σ_{i≠j} S_ij m_i m_j + Σ_i Q_ii (m_i²=1)
-    const += int(diag.sum() // 2)  # Q_ii m_i² terms (diag of S is 2Q_ii)
-    # H(m) = -Σ h m - ½ Σ_{i≠j} J m m ; we want 4xQx = H + offset
-    #  ⇒ h_i = -lin_i, J_ij = -S_ij (i≠j), offset = const
-    h = -lin
-    J = -quad
-    model = IsingModel.from_dense(J.astype(np.int64), h=h.astype(np.int64), name=name)
-    return model, const
+# Canonical home of the QUBO→Ising expansion is the problem frontend
+# (repro.problems.qubo); re-exported here for the Sec. VI-B callers.
+from repro.problems.qubo import qubo_to_ising  # noqa: E402, F401
 
 
 # ---------------------------------------------------------------------------
@@ -156,11 +138,15 @@ def tsp_tour_length(p: TSPProblem, tour: np.ndarray) -> int:
 # Number partitioning (integer weights, fully connected)
 # ---------------------------------------------------------------------------
 def partition_problem(values: np.ndarray) -> Tuple[IsingModel, np.ndarray]:
-    """Minimize (Σ v_i m_i)²: J_ij = -2 v_i v_j, h = 0 (up to constant)."""
-    v = np.asarray(values, dtype=np.int64)
-    J = -2 * np.outer(v, v)
-    np.fill_diagonal(J, 0)
-    return IsingModel.from_dense(J, name=f"partition{len(v)}"), v
+    """Minimize (Σ v_i m_i)²: J_ij = -2 v_i v_j, h = 0 (up to constant).
+
+    Legacy tuple-returning entry; the encoded form lives in
+    :func:`repro.problems.partition.partition_problem`.
+    """
+    from repro.problems.partition import partition_problem as _encode
+
+    p = _encode(values)
+    return p.model, p.values
 
 
 def decode_partition(values: np.ndarray, m: np.ndarray) -> int:

@@ -25,7 +25,7 @@ with HA-SSA's and SA's in the benchmarks and the serving layer.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Union
+from typing import Union
 
 import jax
 import jax.numpy as jnp

@@ -19,8 +19,6 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-import math
-from typing import Tuple
 
 import numpy as np
 

@@ -142,7 +142,7 @@ class AnnealResult(BaseResult):
 # ---------------------------------------------------------------------------
 def anneal(
     problem: Union[MaxCutProblem, IsingModel],
-    hp: SSAHyperParams = SSAHyperParams(),
+    hp: Union[SSAHyperParams, str] = SSAHyperParams(),
     seed: int = 0,
     *,
     storage: str = "i0max",        # 'i0max' (HA-SSA) | 'all' (conventional SSA)
@@ -154,14 +154,20 @@ def anneal(
     total_cycles: Optional[int] = None,  # cycle-count duration (Fig. 12 mode)
     storage_layout: str = "dense",  # 'dense' | 'packed' bitplane state
     backend_opts: Optional[dict] = None,  # extra backend kwargs (block_r, …)
+    auto_base: Optional[SSAHyperParams] = None,  # budget knobs for hp='auto'
 ) -> AnnealResult:
-    """Run SSA/HA-SSA on a MAX-CUT or raw Ising instance.
+    """Run SSA/HA-SSA on a MAX-CUT, raw Ising, or encoded problem instance.
 
     ``storage='i0max'`` + ``schedule_kind='hassa'`` is the paper's HA-SSA;
     ``storage='all'`` + ``schedule_kind='ssa'`` is conventional SSA.  The
     update path is shared, so with equal hyperparameters and the same noise
     stream the two produce bit-identical spin sequences (Sec. III-A, V-A) —
     property-tested.
+
+    ``hp='auto'`` derives the energy-scale hyperparameters (n_rnd, I0
+    clamp, per-plateau τ) from the instance's local-field distribution
+    (:mod:`repro.core.autotune`), taking the budget knobs from
+    ``auto_base`` (default: Table II).
 
     The hot loop iterates ``m_shot × steps`` plateaus over the selected
     backend; ``backend='pallas'`` executes each plateau as a single resident
@@ -171,6 +177,11 @@ def anneal(
     scan path instead.
     """
     maxcut, model = normalize_problem(problem)
+    if isinstance(hp, str):
+        # Lazy import: autotune imports SSAHyperParams from this module.
+        from .autotune import resolve_hyperparams
+
+        hp, _ = resolve_hyperparams(hp, model, base=auto_base)
     sched = hp.schedule(schedule_kind)
     opts = dict(backend_opts or {})
     opts.setdefault("storage_layout", storage_layout)

@@ -12,11 +12,10 @@ trainer and FT tests).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 __all__ = ["DataConfig", "synthetic_batch", "host_slice", "batch_spec"]
 

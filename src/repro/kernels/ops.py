@@ -7,7 +7,6 @@ the perf benchmarks.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

@@ -51,7 +51,7 @@ def ssa_plateau_ref(
             better = H < best_H
             best_H = jnp.where(better, H, best_H)
             best_m = jnp.where(better[:, None], m.astype(jnp.int8), best_m)
-        I = field + n_rnd * noise[c].astype(jnp.int32) + itanh
+        I = field + n_rnd * noise[c].astype(jnp.int32) + itanh  # noqa: E741
         itanh = jnp.clip(I, -i0, i0 - 1)
         m = jnp.where(itanh >= 0, 1.0, -1.0)
 

@@ -43,7 +43,6 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -190,7 +189,7 @@ def _plateau_kernel(
             track_best(c, m_s[...], field)
 
         r = noise_ref[0, c].astype(jnp.int32)
-        I = field.astype(jnp.int32) + n_rnd * r + it_s[...]
+        I = field.astype(jnp.int32) + n_rnd * r + it_s[...]  # noqa: E741
         it_new = jnp.clip(I, -i0, i0 - 1)
         it_s[...] = it_new
         m_s[...] = jnp.where(it_new >= 0, 1.0, -1.0).astype(jnp.float32)
@@ -391,7 +390,7 @@ def _plateau_streamed_kernel(
         rng_s[3] = w_new
         r = jnp.where((w_new >> jnp.uint32(31)) & one, 1, -1).astype(jnp.int32)
 
-        I = field.astype(jnp.int32) + n_rnd * r + it_s[...]
+        I = field.astype(jnp.int32) + n_rnd * r + it_s[...]  # noqa: E741
         it_new = jnp.clip(I, -i0, i0 - 1)
         it_s[...] = it_new
         m_s[...] = jnp.where(it_new >= 0, 1.0, -1.0).astype(jnp.float32)

@@ -17,6 +17,13 @@ Service mode (DESIGN.md §7): pass a comma list to ``--problem`` (or
 :class:`repro.serve.AnnealService` — bucketed, stacked, one compiled
 plateau program per shape bucket, with per-chunk streaming progress and
 optional ``--target-cut`` early stop.
+
+Problem frontend (DESIGN.md §9): ``--problem-kind qubo|mis|coloring|
+partition`` generates demo instances of the selected family (sized by
+``--problem-n``, seeded by ``--seed``, ``--count`` of them) and solves them
+through the service with decoded-solution verification.  ``--auto-tune``
+replaces the Table-II hyperparameters with the local-energy-distribution
+determination (:mod:`repro.core.autotune`) in every mode.
 """
 from __future__ import annotations
 
@@ -24,7 +31,7 @@ import argparse
 import time
 
 from repro.configs import ANNEAL_PROBLEMS
-from repro.core import SSAHyperParams, anneal, gset, memory
+from repro.core import SSAHyperParams, anneal, autotune_hyperparams, gset, memory
 
 
 def _run_service(problem_names, hp, args):
@@ -32,8 +39,9 @@ def _run_service(problem_names, hp, args):
 
     problems = [gset.load(name) for name in problem_names]
     requests = [
-        AnnealRequest(problem=p, hp=hp, seed=args.seed + i,
-                      storage=args.storage, target_cut=args.target_cut)
+        AnnealRequest(problem=p, hp="auto" if args.auto_tune else hp,
+                      seed=args.seed + i, storage=args.storage,
+                      target_cut=args.target_cut, auto_base=hp)
         for i, p in enumerate(problems)
     ]
     svc = AnnealService(backend=args.backend, noise=args.noise,
@@ -53,14 +61,17 @@ def _run_service(problem_names, hp, args):
     dt = time.time() - t0
     total_spin_cycles = 0
     for p, r in zip(problems, responses):
-        shots = r.chunks_run * (hp.m_shot // r.chunks_total)
+        rhp = r.request.hp  # resolved (autotuned hp differs from the base)
+        shots = r.chunks_run * (rhp.m_shot // r.chunks_total)
         total_spin_cycles += (
-            shots * hp.cycles_per_iter * hp.n_trials * p.n
+            shots * rhp.cycles_per_iter * rhp.n_trials * p.n
         )
+        tuned = (f" auto[n_rnd={rhp.n_rnd} i0_max={rhp.i0_max} "
+                 f"tau={rhp.tau}]" if r.autotune else "")
         print(f"{p.name}: best cut {r.result.overall_best_cut} "
               f"avg {r.result.mean_best_cut:.1f} "
               f"[bucket={r.bucket} batch={r.batch} "
-              f"chunks={r.chunks_run}/{r.chunks_total}]")
+              f"chunks={r.chunks_run}/{r.chunks_total}]{tuned}")
     info = svc.cache_info()
     print(f"batch of {len(problems)} in {dt:.1f}s "
           f"({total_spin_cycles/dt:.2e} aggregate spin-cycles/s; "
@@ -68,11 +79,56 @@ def _run_service(problem_names, hp, args):
           f"{info.get('traces_chunk', 0)} plateau-program trace(s))")
 
 
+def _run_problem_kind(hp, args):
+    """Demo instances of a problem family through the service (DESIGN.md §9)."""
+    from repro.problems import make_demo
+    from repro.serve import AnnealRequest, AnnealService
+
+    encs = [
+        make_demo(args.problem_kind, n=args.problem_n, seed=args.seed + i)
+        for i in range(args.count)
+    ]
+    requests = [
+        AnnealRequest(problem=enc, hp="auto" if args.auto_tune else hp,
+                      seed=args.seed + i, storage=args.storage, auto_base=hp)
+        for i, enc in enumerate(encs)
+    ]
+    svc = AnnealService(backend=args.backend, noise=args.noise,
+                        storage_layout=args.storage_layout,
+                        chunk_shots=args.chunk_shots)
+    t0 = time.time()
+    responses = svc.solve(requests)
+    dt = time.time() - t0
+    for enc, r in zip(encs, responses):
+        rhp = r.request.hp
+        tuned = (f" auto[n_rnd={rhp.n_rnd} i0_max={rhp.i0_max} "
+                 f"tau={rhp.tau}]" if r.autotune else "")
+        print(f"{enc.model.name}: objective={r.objective} "
+              f"feasible={r.feasible} energy={int(r.result.best_energy.min())} "
+              f"[bucket={r.bucket} batch={r.batch}]{tuned}")
+    info = svc.cache_info()
+    print(f"{len(encs)} × {args.problem_kind} in {dt:.1f}s "
+          f"({info['programs']} compiled program(s))")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--problem", default="G11",
                     help="instance name, or a comma list for service mode "
                          f"(known: {sorted(ANNEAL_PROBLEMS)})")
+    ap.add_argument("--problem-kind", default="gset",
+                    choices=("gset", "qubo", "mis", "coloring", "partition"),
+                    help="problem family: 'gset' uses --problem names; other "
+                         "kinds generate demo instances through the service "
+                         "frontend (DESIGN.md §9)")
+    ap.add_argument("--problem-n", type=int, default=0,
+                    help="demo instance size for non-gset kinds (0 = family "
+                         "default)")
+    ap.add_argument("--count", type=int, default=1,
+                    help="number of demo instances for non-gset kinds")
+    ap.add_argument("--auto-tune", action="store_true",
+                    help="derive n_rnd/I0 from the local-energy distribution "
+                         "(repro.core.autotune) instead of the Table-II flags")
     ap.add_argument("--service", action="store_true",
                     help="route through the AnnealService even for one problem")
     ap.add_argument("--target-cut", type=int, default=None,
@@ -105,11 +161,17 @@ def main():
         i0_min=args.i0_min, i0_max=args.i0_max, tau=args.tau,
         beta_shift=args.beta_shift,
     )
+    if args.problem_kind != "gset":
+        return _run_problem_kind(hp, args)
     names = args.problem.split(",")
     if args.service or len(names) > 1:
         return _run_service(names, hp, args)
 
     p = gset.load(args.problem)
+    if args.auto_tune:
+        hp, rep = autotune_hyperparams(p.to_ising(), hp)
+        print(f"auto-tune: sigma={rep.sigma:.2f} |z|max={rep.z_max} → "
+              f"n_rnd={hp.n_rnd} I0:{hp.i0_min}→{hp.i0_max} tau={hp.tau}")
     print(f"{p.name}: N={p.n} |E|={len(p.edges)}; {hp.total_cycles} cycles "
           f"× {hp.n_trials} trials; backend={args.backend}; "
           f"storage={args.storage} ({'HA-SSA' if args.storage == 'i0max' else 'SSA'})")

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 __all__ = [
     "HW",

@@ -15,9 +15,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs import shapes as shp
 from repro.models import cache_defs, model_defs
-from repro.models import transformer as T
 from repro.models.params import ParamDef, param_pspecs, param_shapes, tree_defs_map
-from repro.optim.adamw import AdamWConfig, OptState, zero1_spec
+from repro.optim.adamw import OptState, zero1_spec
 from repro.serve.lm import make_decode_step, make_prefill_step
 from repro.sharding import DEFAULT_RULES, ShardingRules, logical_to_spec
 from repro.train.step import TrainConfig, TrainState, make_train_step

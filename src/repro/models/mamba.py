@@ -20,7 +20,6 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.sharding import DEFAULT_RULES, ShardingRules, constrain
 

@@ -17,7 +17,7 @@ standard dropping MoE, which keeps every shape static for pjit.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -23,14 +23,13 @@ Three entry points (all mesh/rules-aware, pure functions of params):
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.sharding import DEFAULT_RULES, ShardingRules, constrain
+from repro.sharding import DEFAULT_RULES, constrain
 
 from . import layers as L
 from . import mamba as MB

@@ -9,7 +9,7 @@ in the compiled step, visible in the dry-run HLO).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -51,7 +51,9 @@ def cosine_schedule(cfg: AdamWConfig, step):
 
 def global_norm(tree) -> jnp.ndarray:
     leaves = jax.tree_util.tree_leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(leaf.astype(jnp.float32))) for leaf in leaves)
+    )
 
 
 def clip_by_global_norm(tree, max_norm):
@@ -94,7 +96,9 @@ def _moment_constrain(tree, param_specs, mesh: Optional[Mesh], zero1: bool):
 
 
 def adamw_init(params, cfg: AdamWConfig, *, mesh=None, param_specs=None) -> OptState:
-    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    def zeros(p):
+        return jnp.zeros_like(p, dtype=jnp.float32)
+
     mu = jax.tree_util.tree_map(zeros, params)
     nu = jax.tree_util.tree_map(zeros, params)
     mu = _moment_constrain(mu, param_specs, mesh, cfg.zero1)

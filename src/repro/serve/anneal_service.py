@@ -33,6 +33,14 @@ transcription is this service:
   G77/G81-class buckets (N = 10k–20k) serve through the same entry.  Both
   axes ride the executable-cache key; results stay bit-identical.
 
+Beyond Max-Cut, any :class:`~repro.problems.ProblemEncoding` (QUBO, MIS,
+coloring, partitioning — DESIGN.md §9) rides the same entry: the encoding's
+Ising model is bucketed/stacked like any other problem, and the response
+carries the decoded, feasibility-verified domain solution.  ``hp='auto'``
+resolves per-instance hyperparameters from the local-field distribution
+(:mod:`repro.core.autotune`) before grouping, so autotuning composes with
+batching and the executable cache instead of fragmenting them.
+
 SA (:class:`~repro.core.sa.SAHyperParams`) and PT-SSA
 (:class:`~repro.core.pt.PTSSAHyperParams`) requests ride the same entry:
 they are grouped, bucketed, stacked, chunked and early-stopped identically —
@@ -51,6 +59,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.autotune import AutotuneReport, resolve_hyperparams
 from repro.core.engine import (
     bucket_n,
     finalize_cut,
@@ -64,6 +73,7 @@ from repro.core.pt import PTSSAHyperParams, PTSSAResult, pt_ssa_rounds
 from repro.core.sa import SAHyperParams, SAResult, sa_cycles, sa_init
 from repro.core.schedule import sa_temperature_ladder
 from repro.core.ssa import AnnealResult, SSAHyperParams
+from repro.problems import ProblemEncoding
 
 __all__ = ["AnnealRequest", "AnnealResponse", "AnnealProgress", "AnnealService"]
 
@@ -74,19 +84,30 @@ HyperParams = Union[SSAHyperParams, SAHyperParams, PTSSAHyperParams]
 class AnnealRequest:
     """One problem + hyperparameters, as the service accepts it.
 
+    ``problem`` is a Max-Cut instance, a raw Ising model, or any encoded
+    problem from :mod:`repro.problems` (QUBO, MIS, coloring, partitioning…)
+    — encoded problems come back with a decoded, feasibility-verified domain
+    solution on the response.
+
     ``hp`` selects the algorithm: SSAHyperParams → SSA/HA-SSA (the paper's
     annealer), SAHyperParams → Metropolis SA, PTSSAHyperParams → PT on the
-    plateau engine.  ``target_cut`` arms chunk-level early stop: once the
-    request's best cut reaches it (and every other live request in its
-    batch group is also satisfied), remaining chunks are skipped.
+    plateau engine.  The string ``'auto'`` requests local-energy-distribution
+    autotuning (:mod:`repro.core.autotune`): the service measures the
+    instance's local-field distribution and derives per-instance n_rnd and
+    I0 clamp before bucketing, taking the budget knobs (trials, m_shot,
+    cycle budget) from ``auto_base``.  ``target_cut`` arms chunk-level early
+    stop: once the request's best cut reaches it (and every other live
+    request in its batch group is also satisfied), remaining chunks are
+    skipped.
     """
 
-    problem: Union[MaxCutProblem, IsingModel]
-    hp: HyperParams = SSAHyperParams()
+    problem: Union[MaxCutProblem, IsingModel, ProblemEncoding]
+    hp: Union[HyperParams, str] = SSAHyperParams()
     seed: int = 0
     storage: str = "i0max"         # SSA only: 'i0max' (HA-SSA) | 'all' (SSA)
     schedule_kind: str = "hassa"   # SSA only
     target_cut: Optional[int] = None
+    auto_base: Optional[SSAHyperParams] = None  # budget knobs for hp='auto'
 
 
 @dataclasses.dataclass
@@ -99,6 +120,10 @@ class AnnealResponse:
     chunks_run: int                # chunks executed (early stop may cut short)
     chunks_total: int
     chunk_best_cut: np.ndarray     # (chunks_run,) streaming best-objective trace
+    solution: object = None        # decoded domain solution (encoded problems)
+    objective: Optional[int] = None  # domain objective of `solution` if feasible
+    feasible: Optional[bool] = None  # verifier verdict (None: raw Ising/maxcut)
+    autotune: Optional[AutotuneReport] = None  # set when hp='auto' resolved
 
 
 @dataclasses.dataclass(frozen=True)
@@ -146,6 +171,7 @@ class AnnealService:
         sa_chunks: int = 8,
         min_bucket: int = 64,
         backend_opts: Optional[dict] = None,
+        autotune_seed: int = 0,
     ):
         """``storage_layout='packed'`` keeps the HBM-resident engine state
         between chunk launches as uint32 spin bitplanes (DESIGN.md §4) — for
@@ -162,6 +188,7 @@ class AnnealService:
         self.chunk_shots = int(chunk_shots)   # SSA iterations / PT rounds per chunk
         self.sa_chunks = int(sa_chunks)       # SA: report/early-stop points per run
         self.min_bucket = int(min_bucket)
+        self.autotune_seed = int(autotune_seed)
         self.backend_opts = dict(backend_opts or {})
         self._programs: dict = {}
         self.stats = collections.Counter()
@@ -174,12 +201,28 @@ class AnnealService:
         requests: Sequence[AnnealRequest],
         progress: Optional[Callable[[AnnealProgress], None]] = None,
     ) -> List[AnnealResponse]:
-        """Solve a batch of heterogeneous requests; responses keep order."""
+        """Solve a batch of heterogeneous requests; responses keep order.
+
+        ``hp='auto'`` requests are resolved *before* grouping — autotuned
+        hyperparameters are ordinary call-time arguments by the time the
+        bucketing and the compiled-executable cache see them, so the cache
+        keying machinery is untouched and identical problems (the autotune
+        draw is independent of the anneal seed) still batch together.
+        Encoded problems (:class:`~repro.problems.ProblemEncoding`) get
+        their best spins decoded and feasibility-verified on the response.
+        """
         self.stats["requests"] += len(requests)
         responses: List[Optional[AnnealResponse]] = [None] * len(requests)
+        reports: dict = {}
         groups = collections.defaultdict(list)
         for idx, req in enumerate(requests):
             maxcut, model = normalize_problem(req.problem)
+            if isinstance(req.hp, str):
+                hp, reports[idx] = resolve_hyperparams(
+                    req.hp, model, base=req.auto_base, seed=self.autotune_seed
+                )
+                req = dataclasses.replace(req, hp=hp)
+                self.stats["autotuned"] += 1
             nb = bucket_n(model.n, self.min_bucket)
             groups[self._group_key(req, nb)].append((idx, req, maxcut, model))
         self.stats["groups"] += len(groups)
@@ -189,6 +232,12 @@ class AnnealService:
                       "sa": self._solve_sa_group,
                       "ptssa": self._solve_ptssa_group}[kind]
             solver(nb, items, responses, progress)
+        for idx, resp in enumerate(responses):
+            resp.autotune = reports.get(idx)
+            enc = resp.request.problem
+            if isinstance(enc, ProblemEncoding):
+                sol, obj, feas = enc.best_feasible(resp.result.best_m)
+                resp.solution, resp.objective, resp.feasible = sol, obj, feas
         return responses  # type: ignore[return-value]
 
     def cache_info(self) -> dict:

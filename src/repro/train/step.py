@@ -11,12 +11,10 @@ Memory-scaling choices that matter at 1000+ nodes (DESIGN.md §6):
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models import transformer as T
 from repro.models.layers import COMPUTE_DTYPE
@@ -68,15 +66,17 @@ def chunked_ce_loss(
 
     def step(carry, hl):
         tot, cnt = carry
-        h, l = hl
+        h, lab = hl
         logits = jnp.einsum(
             "bsm,mv->bsv", h.astype(COMPUTE_DTYPE), head.astype(COMPUTE_DTYPE)
         ).astype(jnp.float32)
         logits = constrain(logits, mesh, ("batch", "seq", "vocab"),
                            rules.replace(seq=None))
         lse = jax.nn.logsumexp(logits, axis=-1)
-        ll = jnp.take_along_axis(logits, jnp.maximum(l, 0)[..., None], axis=-1)[..., 0]
-        mask = (l >= 0).astype(jnp.float32)
+        ll = jnp.take_along_axis(
+            logits, jnp.maximum(lab, 0)[..., None], axis=-1
+        )[..., 0]
+        mask = (lab >= 0).astype(jnp.float32)
         tot = tot + jnp.sum((lse - ll) * mask)
         cnt = cnt + jnp.sum(mask)
         return (tot, cnt), None

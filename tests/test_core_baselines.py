@@ -1,6 +1,5 @@
 """Tests for the SA and PT baselines + cross-method convergence claims."""
 import numpy as np
-import pytest
 
 from repro.core import (
     PTHyperParams,

@@ -39,7 +39,7 @@ def test_itanh_fsm_matches_eq2(field, itanh, r, i0, n_rnd):
     m_new, itanh_new = ssa_cycle_update(
         jnp.asarray([field]), jnp.asarray([itanh]), jnp.asarray([r]), jnp.int32(i0), n_rnd
     )
-    I = field + n_rnd * r + itanh
+    I = field + n_rnd * r + itanh  # noqa: E741 — Eq. (2a) current
     if I >= i0:
         expect_it = i0 - 1
     elif I < -i0:

@@ -11,7 +11,6 @@ import os
 import subprocess
 import sys
 
-import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -33,7 +32,7 @@ def _run(arch, shape, mesh, analysis=False):
         [sys.executable, "-c", code], capture_output=True, text=True, timeout=900,
     )
     assert out.returncode == 0, out.stderr[-3000:]
-    line = [l for l in out.stdout.splitlines() if l.startswith("RESULT:")][-1]
+    line = [x for x in out.stdout.splitlines() if x.startswith("RESULT:")][-1]
     return json.loads(line[len("RESULT:"):])
 
 

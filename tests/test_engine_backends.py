@@ -7,7 +7,6 @@ is integer-valued throughout and the dense/Pallas float32 accumulations are
 exact below 2^24, so equality is exact, not approximate.
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings
@@ -151,7 +150,7 @@ def test_pallas_backend_one_call_per_plateau():
 
 
 def test_backend_factory_accepts_instances_and_classes():
-    from repro.core.engine import DenseBackend, PlateauBackend
+    from repro.core.engine import DenseBackend
 
     model = fig4_example().to_ising()
     bk = make_backend("dense", model, n_trials=2)

@@ -1,9 +1,8 @@
 """Tests for the roofline extraction layer (HLO parsing + term math)."""
 import jax
-import numpy as np
 import pytest
 
-from repro.launch.hlo_analysis import (HW, RooflineReport, collective_bytes,
+from repro.launch.hlo_analysis import (RooflineReport, collective_bytes,
                                        count_hlo_ops, model_flops, shape_bytes)
 
 HLO = """

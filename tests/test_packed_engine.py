@@ -16,7 +16,6 @@ from hypothesis import strategies as st
 
 from repro.core import SSAHyperParams, anneal, gset
 from repro.core.engine import (
-    EngineState,
     PackedEngineState,
     make_backend,
     make_batched_backend,

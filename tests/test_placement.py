@@ -4,7 +4,6 @@ import pytest
 
 from repro.core.placement import (coactivation_stats, expert_placement,
                                   placement_ising, traffic_cost)
-from repro.core.ssa import SSAHyperParams
 
 
 def _clique_routing(E=16, K=4, T=500, seed=0):

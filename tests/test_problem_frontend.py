@@ -1,0 +1,172 @@
+"""Tests for the problem frontend (repro.problems, DESIGN.md §9).
+
+Three layers per family:
+
+* the QUBO→Ising identity — domain objective and Ising energy tied exactly
+  over *all* assignments of brute-force-small instances;
+* decode/verify semantics — totality, determinism, and the feasibility
+  verifier rejecting crafted infeasible solutions;
+* the round trip — encode → anneal → decode lands on a verified-feasible
+  solution, through the single-problem driver and through the
+  :class:`~repro.serve.AnnealService` on all three backends.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import SSAHyperParams, anneal, ising_energy
+from repro.problems import (
+    FAMILIES,
+    make_demo,
+    mis_problem,
+    partition_problem,
+    qubo_problem,
+    ring_coloring,
+)
+
+SMOKE_BASE = SSAHyperParams(n_trials=8, m_shot=3)
+
+
+def _all_energies(model, n):
+    """Energies of all 2^n assignments (bit k of the row index = spin k)."""
+    bits = np.arange(2**n, dtype=np.uint32)
+    m = 2 * ((bits[:, None] >> np.arange(n)) & 1).astype(np.int32) - 1
+    h, nbr_idx, nbr_w = model.device_arrays()
+    return np.asarray(ising_energy(jnp.asarray(m), h, nbr_idx, nbr_w)), m
+
+
+# ---------------------------------------------------------------------------
+# Energy ↔ domain-objective identities (exact, all assignments)
+# ---------------------------------------------------------------------------
+def test_qubo_energy_identity():
+    rng = np.random.default_rng(0)
+    enc = qubo_problem(rng.integers(-4, 5, size=(8, 8)))
+    H, ms = _all_energies(enc.model, 8)
+    for e, m in zip(H, ms):
+        x = enc.decode(m)
+        assert 4 * enc.objective(x) == int(e) + enc.offset
+
+
+def test_mis_energy_identity_and_optimum():
+    # 5-cycle: max independent set has size 2
+    edges = np.array([(v, (v + 1) % 5) for v in range(5)])
+    enc = mis_problem(5, edges, penalty=2)
+    H, ms = _all_energies(enc.model, 5)
+    for e, m in zip(H, ms):
+        sel = (np.asarray(m) > 0).astype(np.int64)  # raw (un-repaired) bits
+        conflicts = int((sel[edges[:, 0]] & sel[edges[:, 1]]).sum())
+        qubo_obj = enc.penalty * conflicts - int(sel.sum())
+        assert 4 * qubo_obj == int(e) + enc.offset
+    # the Ising ground state decodes to a maximum independent set
+    best = enc.decode(ms[int(H.argmin())])
+    assert enc.verify(best) and enc.objective(best) == 2
+
+
+def test_coloring_energy_identity_and_ground_state_is_proper():
+    enc = ring_coloring(4, 2)  # even cycle is 2-colorable: 8 spins
+    H, ms = _all_energies(enc.model, 8)
+    edges = enc.edges
+    A = 3  # max_degree + 1 = 2 + 1
+    for e, m in zip(H, ms):
+        x = (np.asarray(m).reshape(4, 2) > 0).astype(np.int64)
+        violations = int(((x.sum(axis=1) - 1) ** 2).sum())
+        colors_same = sum(
+            int((x[u] * x[v]).sum()) for u, v in edges
+        )  # Σ_c x_uc·x_vc per edge
+        assert 4 * (A * violations + colors_same) == int(e) + enc.offset
+    best = enc.decode(ms[int(H.argmin())])
+    assert enc.verify(best) and enc.objective(best) == 0
+
+
+def test_partition_energy_identity():
+    enc = partition_problem([3, 1, 4, 1, 5, 9, 2, 6])
+    H, ms = _all_energies(enc.model, 8)
+    for e, m in zip(H, ms):
+        s = enc.decode(m)
+        assert enc.objective(s) ** 2 == int(e) + enc.offset
+
+
+# ---------------------------------------------------------------------------
+# Decode / verify semantics
+# ---------------------------------------------------------------------------
+def test_mis_decode_repairs_to_independence():
+    edges = np.array([(v, (v + 1) % 6) for v in range(6)])
+    enc = mis_problem(6, edges)
+    all_in = np.ones(6, dtype=np.int8)  # every vertex selected: maximally bad
+    sel = enc.decode(all_in)
+    assert enc.verify(sel)
+    assert not enc.verify(np.ones(6, dtype=bool))  # raw mask is infeasible
+    # repair is deterministic
+    assert np.array_equal(sel, enc.decode(all_in))
+
+
+def test_coloring_decode_is_total_and_repairs():
+    enc = ring_coloring(6, 3)
+    monochrome = -np.ones(18, dtype=np.int8)  # nothing selected → all color 0
+    colors = enc.decode(monochrome)
+    assert colors.shape == (6,)
+    assert enc.verify(colors)  # greedy repair 3-colors a 6-cycle
+    assert np.array_equal(colors, enc.decode(monochrome))  # deterministic
+    bad = np.zeros(6, dtype=np.int64)
+    assert not enc.verify(bad)  # all-same coloring of a cycle is improper
+    assert enc.objective(bad) == 6
+
+
+def test_best_feasible_picks_best_and_flags_infeasible():
+    enc = partition_problem([2, 2, 4])
+    perfect = np.array([1, 1, -1], dtype=np.int8)  # residual 0
+    worst = np.array([1, 1, 1], dtype=np.int8)     # residual 8
+    sol, obj, feas = enc.best_feasible(np.stack([worst, perfect]))
+    assert feas and obj == 0 and np.array_equal(sol, [1, 1, -1])
+
+
+def test_qubo_verify_shape_guard():
+    enc = qubo_problem(np.eye(3, dtype=int))
+    assert enc.verify(np.array([1, 0, 1]))
+    assert not enc.verify(np.array([1, 0]))
+
+
+# ---------------------------------------------------------------------------
+# Round trips: encode → anneal → decode → verified feasible
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kind", sorted(FAMILIES))
+def test_family_round_trips_through_anneal(kind):
+    enc = make_demo(kind, seed=0)
+    r = anneal(enc, "auto", seed=0, track_energy=False, noise="xorshift",
+               auto_base=SMOKE_BASE)
+    sol, obj, feas = enc.best_feasible(r.best_m)
+    assert feas, f"{kind}: no feasible decoded solution"
+    assert obj is not None
+
+
+@settings(max_examples=4)
+@given(seed=st.integers(min_value=1, max_value=10_000),
+       kind=st.sampled_from(sorted(FAMILIES)))
+def test_round_trip_property(seed, kind):
+    """Any seeded instance of any family round-trips to a feasible solution."""
+    enc = make_demo(kind, seed=seed)
+    r = anneal(enc, "auto", seed=seed, track_energy=False, noise="xorshift",
+               auto_base=SSAHyperParams(n_trials=8, m_shot=2))
+    _, obj, feas = enc.best_feasible(r.best_m)
+    assert feas and obj is not None
+
+
+@pytest.mark.parametrize("backend", ("sparse", "dense", "pallas"))
+def test_families_through_service_all_backends(backend):
+    """Acceptance: every family solves through AnnealService per backend,
+    decoding to a verified-feasible solution (hp='auto')."""
+    from repro.serve import AnnealRequest, AnnealService
+
+    encs = [make_demo(kind, seed=0) for kind in sorted(FAMILIES)]
+    svc = AnnealService(backend=backend, noise="xorshift")
+    base = SSAHyperParams(n_trials=4, m_shot=2)
+    reqs = [AnnealRequest(problem=e, hp="auto", seed=0, auto_base=base)
+            for e in encs]
+    for enc, resp in zip(encs, svc.solve(reqs)):
+        assert resp.feasible, f"{enc.kind} infeasible on {backend}"
+        assert resp.objective is not None
+        assert resp.autotune is not None  # the resolution is observable
+        assert resp.request.hp.n_rnd == resp.autotune.n_rnd

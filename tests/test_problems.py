@@ -3,9 +3,8 @@ import itertools
 
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.core import SSAHyperParams, anneal, ising_energy
+from repro.core import anneal, ising_energy
 from repro.core.problems import (decode_gi, decode_partition, decode_tsp,
                                  gi_problem, partition_problem, qubo_to_ising,
                                  suggest_hyperparams, tsp_problem,

@@ -7,14 +7,11 @@ and otherwise test the pure functions with a fake mesh shape via
 jax.sharding.AbstractMesh).
 """
 import jax
-import jax.numpy as jnp
-import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.optim.adamw import zero1_spec
-from repro.sharding import (DEFAULT_RULES, ShardingRules, abstract_mesh,
-                            logical_to_spec, mesh_axis_size)
+from repro.sharding import (DEFAULT_RULES, abstract_mesh, logical_to_spec,
+                            mesh_axis_size)
 
 MESH = abstract_mesh((16, 16), ("data", "model"))
 POD = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
@@ -83,7 +80,7 @@ def test_zero1_extends_free_dim():
 def test_param_defs_spec_tree():
     from repro.configs import get_config
     from repro.models import model_defs
-    from repro.models.params import ParamDef, param_pspecs
+    from repro.models.params import param_pspecs
 
     cfg = get_config("granite-3-8b")
     defs = model_defs(cfg)

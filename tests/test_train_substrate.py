@@ -2,16 +2,15 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.data.pipeline import DataConfig, batch_spec, host_slice, synthetic_batch
-from repro.models import ModelConfig, forward
+from repro.models import ModelConfig
 from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
                                clip_by_global_norm, cosine_schedule, global_norm)
 from repro.train.step import (TrainConfig, chunked_ce_loss, init_train_state,
-                              make_loss_fn, make_train_step)
+                              make_train_step)
 
 CFG = ModelConfig(name="tiny", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
                   d_head=16, d_ff=128, vocab=97, remat="none")
