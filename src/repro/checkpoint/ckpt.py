@@ -21,7 +21,14 @@ from typing import Any, Dict, Optional
 import jax
 import numpy as np
 
-__all__ = ["save", "save_async", "restore", "latest_step", "CheckpointManager"]
+__all__ = [
+    "save",
+    "save_async",
+    "restore",
+    "latest_step",
+    "purge",
+    "CheckpointManager",
+]
 
 _SEP = "//"
 
@@ -102,6 +109,29 @@ def restore(directory: str, template, step: Optional[int] = None):
     return tree, meta
 
 
+def purge(directory: str):
+    """Remove every checkpoint (and sidecar/tmp) in ``directory``.
+
+    Used by short-lived checkpoint namespaces — e.g. the annealing service's
+    per-group chunk checkpoints, which are deleted once the group completes
+    so a later identical solve starts fresh instead of resuming a finished
+    run.  Only checkpoint-shaped files are touched; the directory itself is
+    removed if it ends up empty.
+    """
+    if not os.path.isdir(directory):
+        return
+    for fn in os.listdir(directory):
+        if re.fullmatch(r"ckpt_\d+\.(npz|json)(\.tmp)?", fn):
+            try:
+                os.remove(os.path.join(directory, fn))
+            except OSError:
+                pass
+    try:
+        os.rmdir(directory)
+    except OSError:
+        pass  # non-checkpoint files present — leave the directory
+
+
 @dataclasses.dataclass
 class CheckpointManager:
     """save-every-k + keep-last-n + async writes + resume."""
@@ -146,3 +176,7 @@ class CheckpointManager:
     def restore_latest(self, template):
         self.wait()
         return restore(self.directory, template)
+
+    def purge(self):
+        self.wait()
+        purge(self.directory)

@@ -88,6 +88,8 @@ __all__ = [
     "resolve_j_mode",
     "resolve_noise_mode",
     "normalize_problem",
+    "validate_model",
+    "MAX_MODEL_SPINS",
     "finalize_cut",
     "schedule_plateaus",
     "tile_plateaus",
@@ -183,6 +185,50 @@ def normalize_problem(
         f"cannot interpret {type(problem).__name__} as an annealing problem; "
         "pass a MaxCutProblem, an IsingModel, or a ProblemEncoding"
     )
+
+
+# Admission ceiling on the spin count: far above anything the backends can
+# actually serve today (G81 is 20k), but low enough that a corrupted or
+# adversarial shape is rejected before any padding/stacking is attempted.
+MAX_MODEL_SPINS = 1 << 22
+
+
+def validate_model(model: IsingModel, *, max_spins: int = MAX_MODEL_SPINS):
+    """Admission-time structural validation of an Ising model.
+
+    :meth:`IsingModel.from_edges` / :meth:`~IsingModel.from_dense` validate
+    at construction, but the dataclass can also be built directly — the
+    serving layer re-checks here so a malformed model is rejected with a
+    clear error instead of poisoning a compiled batch.  Raises ValueError
+    (callers wrap it into their own typed admission error).
+    """
+    n = int(model.n)
+    if n <= 0:
+        raise ValueError(f"model {model.name!r}: need n > 0, got {n}")
+    if n > max_spins:
+        raise ValueError(
+            f"model {model.name!r}: n={n} exceeds the service ceiling "
+            f"{max_spins} — absurd shape rejected at admission"
+        )
+    h = np.asarray(model.h)
+    idx = np.asarray(model.nbr_idx)
+    w = np.asarray(model.nbr_w)
+    if h.shape != (n,):
+        raise ValueError(f"model {model.name!r}: h shape {h.shape} != ({n},)")
+    if idx.ndim != 2 or idx.shape[0] != n or idx.shape != w.shape:
+        raise ValueError(
+            f"model {model.name!r}: adjacency shapes nbr_idx {idx.shape} / "
+            f"nbr_w {w.shape} inconsistent with n={n}"
+        )
+    for name, arr in (("h", h), ("nbr_w", w)):
+        if not np.all(np.isfinite(arr.astype(np.float64, copy=False))):
+            raise ValueError(
+                f"model {model.name!r}: non-finite values in {name}"
+            )
+    if idx.size and (int(idx.min()) < 0 or int(idx.max()) >= n):
+        raise ValueError(
+            f"model {model.name!r}: neighbor indices outside [0, {n})"
+        )
 
 
 def finalize_cut(best_H, maxcut: Optional[MaxCutProblem]):

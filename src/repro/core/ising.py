@@ -80,8 +80,18 @@ class IsingModel:
         name: str = "ising",
     ) -> "IsingModel":
         """Build from an undirected edge list (i, j, J_ij)."""
+        w_in = np.asarray(weights)
+        if np.issubdtype(w_in.dtype, np.floating) and not np.all(np.isfinite(w_in)):
+            raise ValueError("weights must be finite (got NaN/inf)")
+        h_in = None if h is None else np.asarray(h)
+        if (
+            h_in is not None
+            and np.issubdtype(h_in.dtype, np.floating)
+            and not np.all(np.isfinite(h_in))
+        ):
+            raise ValueError("h must be finite (got NaN/inf)")
         edges = np.asarray(edges, dtype=np.int64)
-        weights = np.asarray(weights, dtype=np.int64)
+        weights = w_in.astype(np.int64)
         if edges.ndim != 2 or edges.shape[1] != 2:
             raise ValueError(f"edges must be (E,2), got {edges.shape}")
         if len(weights) != len(edges):
@@ -109,7 +119,7 @@ class IsingModel:
             slot = (np.arange(len(ss)) - np.repeat(starts, deg)).astype(np.int64)
             nbr_idx[ss, slot] = dd
             nbr_w[ss, slot] = ww
-        hh = np.zeros(n, dtype=np.int64) if h is None else np.asarray(h, np.int64)
+        hh = np.zeros(n, dtype=np.int64) if h_in is None else h_in.astype(np.int64)
         model = IsingModel(
             n=n,
             h=hh.astype(np.int32),
@@ -128,6 +138,8 @@ class IsingModel:
     @staticmethod
     def from_dense(J: np.ndarray, h: Optional[np.ndarray] = None, name: str = "ising") -> "IsingModel":
         J = np.asarray(J)
+        if np.issubdtype(J.dtype, np.floating) and not np.all(np.isfinite(J)):
+            raise ValueError("J must be finite (got NaN/inf)")
         if not np.allclose(J, J.T):
             raise ValueError("J must be symmetric")
         if np.any(np.diag(J) != 0):

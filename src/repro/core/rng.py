@@ -20,7 +20,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["Xorshift128", "xorshift_init", "xorshift_next_bits", "threefry_noise"]
+__all__ = [
+    "Xorshift128",
+    "xorshift_init",
+    "xorshift_next_bits",
+    "xorshift_lanes_ok",
+    "threefry_noise",
+]
 
 _U32 = jnp.uint32
 
@@ -58,6 +64,23 @@ def xorshift_next_bits(state: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     new_state = jnp.stack([y, z, w, w_new], axis=0)
     noise = jnp.where((w_new >> _U32(31)) & _U32(1), 1, -1).astype(jnp.int32)
     return new_state, noise
+
+
+def xorshift_lanes_ok(state, axis: int = 0) -> bool:
+    """Integrity check on carried xorshift lanes: no all-zero lane.
+
+    The all-zero state is xorshift128's absorbing fixed point — a lane in it
+    emits constant noise forever.  :func:`xorshift_init` never produces one,
+    so finding one in a state that came back from disk (a resumed service
+    checkpoint) or over a wire means corruption; resume paths call this
+    before trusting restored lanes.  ``axis`` is the 4-word state axis
+    (0 for an unbatched ``(4, T, N)`` state, 1 for a batched
+    ``(B, 4, T, N)`` state).
+    """
+    arr = np.asarray(state)
+    if arr.ndim <= axis or arr.shape[axis] != 4:
+        return False
+    return not bool(np.all(arr == 0, axis=axis).any())
 
 
 class Xorshift128:

@@ -1,1 +1,2 @@
 from .resilience import *  # noqa: F401,F403
+from .faults import *  # noqa: F401,F403

@@ -1,0 +1,164 @@
+"""Fault injection for the annealing service (DESIGN.md §10).
+
+The service's resilience layer is only trustworthy if every failure path is
+exercised deliberately — this module is the chaos harness that does it.
+:class:`FaultInjector` is a registry of *armed* faults that the service
+fires at its hook points; each hook either raises a typed injected error
+(compile failure, OOM, process kill) or returns a corruption spec that the
+caller applies to its own readings (NaN burst).  Because the injector is
+plain host-side Python, faults land at exactly the boundaries where real
+faults land — program build, problem stacking, chunk boundaries — without
+touching the traced/compiled device code, so the recovery machinery under
+test is the production machinery.
+
+Hook points (fired by :class:`repro.serve.AnnealService`):
+
+=========  ==================================================  =============
+point      fires at                                            effect
+=========  ==================================================  =============
+'compile'  executable-cache miss, before tracing the program   raises
+           (ctx: backend, kind, bucket)                        InjectedCompileFailure
+'oom'      after stacking the problem arrays (ctx: backend,    raises
+           j_mode, bucket, batch)                              InjectedOOM
+'nan'      each chunk boundary, on the energy readings         returns the spec;
+           (ctx: kind, chunk)                                  caller plants NaN
+                                                               in ``spec.slots``
+'kill'     each chunk boundary, after the checkpoint write     raises
+           (ctx: kind, chunk)                                  InjectedKill
+=========  ==================================================  =============
+
+:func:`chaos_schedule` builds a seeded, finite fault plan over those points
+— the deterministic "chaos monkey" the chaos suite replays at many seeds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Dict, List, Optional, Tuple
+
+from repro.ft.resilience import SimulatedFailure
+
+__all__ = [
+    "InjectedFault",
+    "InjectedCompileFailure",
+    "InjectedOOM",
+    "InjectedKill",
+    "FaultSpec",
+    "FaultInjector",
+    "FAULT_POINTS",
+    "chaos_schedule",
+]
+
+FAULT_POINTS = ("compile", "oom", "nan", "kill")
+
+
+class InjectedFault(RuntimeError):
+    """Base class for injector-raised faults (never raised by real code)."""
+
+
+class InjectedCompileFailure(InjectedFault):
+    """Emulates a backend compile/lowering/launch failure."""
+
+
+class InjectedOOM(InjectedFault):
+    """Emulates a device allocation failure (RESOURCE_EXHAUSTED)."""
+
+
+class InjectedKill(InjectedFault, SimulatedFailure):
+    """Emulates the process dying mid-solve (must escape all handlers)."""
+
+
+@dataclasses.dataclass
+class FaultSpec:
+    """One armed fault: a hook point, a shot budget, and context filters.
+
+    ``match`` keys are compared against the hook's keyword context; a spec
+    only fires when every match key is present and equal.  ``slots`` names
+    the batch slots a 'nan' burst corrupts (empty = every slot).
+    """
+
+    point: str
+    count: int = 1
+    match: Dict[str, object] = dataclasses.field(default_factory=dict)
+    slots: Tuple[int, ...] = ()
+
+    def matches(self, ctx: Dict[str, object]) -> bool:
+        return self.count > 0 and all(
+            ctx.get(k) == v for k, v in self.match.items()
+        )
+
+
+class FaultInjector:
+    """Armed-fault registry + fired-fault log.
+
+    ``arm()`` registers a fault; ``fire()`` is called by the service at each
+    hook point and consumes the first matching armed spec.  Raising points
+    ('compile'/'oom'/'kill') raise their typed error; passive points
+    ('nan') return the spec for the caller to apply.  Every firing is
+    appended to ``log`` so tests can assert exactly which faults landed.
+    """
+
+    def __init__(self, specs: Optional[List[FaultSpec]] = None):
+        self.specs: List[FaultSpec] = list(specs or [])
+        self.log: List[Tuple[str, Dict[str, object]]] = []
+
+    def arm(self, point: str, *, count: int = 1, slots: Tuple[int, ...] = (),
+            **match) -> FaultSpec:
+        if point not in FAULT_POINTS:
+            raise ValueError(f"unknown fault point {point!r}; known: {FAULT_POINTS}")
+        spec = FaultSpec(point=point, count=int(count), match=dict(match),
+                         slots=tuple(slots))
+        self.specs.append(spec)
+        return spec
+
+    def fire(self, point: str, **ctx) -> Optional[FaultSpec]:
+        for spec in self.specs:
+            if spec.point != point or not spec.matches(ctx):
+                continue
+            spec.count -= 1
+            self.log.append((point, dict(ctx)))
+            detail = ", ".join(f"{k}={v}" for k, v in sorted(ctx.items()))
+            if point == "compile":
+                raise InjectedCompileFailure(f"injected compile failure ({detail})")
+            if point == "oom":
+                raise InjectedOOM(f"injected RESOURCE_EXHAUSTED ({detail})")
+            if point == "kill":
+                raise InjectedKill(f"injected process kill ({detail})")
+            return spec  # 'nan': caller plants the corruption
+        return None
+
+    @property
+    def exhausted(self) -> bool:
+        return all(s.count <= 0 for s in self.specs)
+
+
+def chaos_schedule(
+    seed: int,
+    *,
+    n_faults: int = 3,
+    points: Tuple[str, ...] = FAULT_POINTS,
+    fallback_backends: Tuple[str, ...] = ("pallas", "dense"),
+    max_chunk: int = 4,
+    n_slots: int = 2,
+) -> FaultInjector:
+    """A seeded, finite chaos plan: ``n_faults`` armed specs drawn from
+    ``points``.
+
+    Deterministic for a fixed seed, so a chaos run is replayable.  Compile
+    and OOM faults are matched to ``fallback_backends`` only (a fault armed
+    on the terminal backend of the fallback chain is a *test of surfacing*,
+    not of recovery — arm it explicitly when that is what you want).  Kill
+    and NaN faults land at a random chunk boundary below ``max_chunk``.
+    """
+    rng = random.Random(seed)
+    inj = FaultInjector()
+    for _ in range(int(n_faults)):
+        point = rng.choice(list(points))
+        if point in ("compile", "oom"):
+            inj.arm(point, backend=rng.choice(list(fallback_backends)))
+        elif point == "kill":
+            inj.arm(point, chunk=rng.randrange(max_chunk))
+        else:  # nan
+            inj.arm(point, chunk=rng.randrange(max_chunk),
+                    slots=(rng.randrange(max(1, n_slots)),))
+    return inj

@@ -34,6 +34,13 @@ from repro.configs import ANNEAL_PROBLEMS
 from repro.core import SSAHyperParams, anneal, autotune_hyperparams, gset, memory
 
 
+def _resilience_policy(args):
+    from repro.serve import ResiliencePolicy
+
+    return ResiliencePolicy(checkpoint_dir=args.checkpoint_dir,
+                            fallback=not args.no_fallback)
+
+
 def _run_service(problem_names, hp, args):
     from repro.serve import AnnealRequest, AnnealService
 
@@ -41,12 +48,14 @@ def _run_service(problem_names, hp, args):
     requests = [
         AnnealRequest(problem=p, hp="auto" if args.auto_tune else hp,
                       seed=args.seed + i, storage=args.storage,
-                      target_cut=args.target_cut, auto_base=hp)
+                      target_cut=args.target_cut, auto_base=hp,
+                      deadline_s=args.deadline_s)
         for i, p in enumerate(problems)
     ]
     svc = AnnealService(backend=args.backend, noise=args.noise,
                         storage_layout=args.storage_layout,
-                        chunk_shots=args.chunk_shots)
+                        chunk_shots=args.chunk_shots,
+                        resilience=_resilience_policy(args))
 
     def progress(ev):
         bests = ", ".join(
@@ -61,6 +70,10 @@ def _run_service(problem_names, hp, args):
     dt = time.time() - t0
     total_spin_cycles = 0
     for p, r in zip(problems, responses):
+        if r.result is None:  # retries exhausted (status='failed')
+            print(f"{p.name}: FAILED "
+                  f"({'; '.join(e.kind for e in r.events)})")
+            continue
         rhp = r.request.hp  # resolved (autotuned hp differs from the base)
         shots = r.chunks_run * (rhp.m_shot // r.chunks_total)
         total_spin_cycles += (
@@ -68,10 +81,13 @@ def _run_service(problem_names, hp, args):
         )
         tuned = (f" auto[n_rnd={rhp.n_rnd} i0_max={rhp.i0_max} "
                  f"tau={rhp.tau}]" if r.autotune else "")
+        degraded = "" if r.status == "ok" else f" status={r.status}"
         print(f"{p.name}: best cut {r.result.overall_best_cut} "
               f"avg {r.result.mean_best_cut:.1f} "
               f"[bucket={r.bucket} batch={r.batch} "
-              f"chunks={r.chunks_run}/{r.chunks_total}]{tuned}")
+              f"chunks={r.chunks_run}/{r.chunks_total}]{tuned}{degraded}")
+        for ev in r.events:
+            print(f"  event[{ev.t:.2f}s] {ev.kind}: {ev.detail}")
     info = svc.cache_info()
     print(f"batch of {len(problems)} in {dt:.1f}s "
           f"({total_spin_cycles/dt:.2e} aggregate spin-cycles/s; "
@@ -95,17 +111,23 @@ def _run_problem_kind(hp, args):
     ]
     svc = AnnealService(backend=args.backend, noise=args.noise,
                         storage_layout=args.storage_layout,
-                        chunk_shots=args.chunk_shots)
+                        chunk_shots=args.chunk_shots,
+                        resilience=_resilience_policy(args))
     t0 = time.time()
     responses = svc.solve(requests)
     dt = time.time() - t0
     for enc, r in zip(encs, responses):
+        if r.result is None:  # retries exhausted (status='failed')
+            print(f"{enc.model.name}: FAILED "
+                  f"({'; '.join(e.kind for e in r.events)})")
+            continue
         rhp = r.request.hp
         tuned = (f" auto[n_rnd={rhp.n_rnd} i0_max={rhp.i0_max} "
                  f"tau={rhp.tau}]" if r.autotune else "")
+        degraded = "" if r.status == "ok" else f" status={r.status}"
         print(f"{enc.model.name}: objective={r.objective} "
               f"feasible={r.feasible} energy={int(r.result.best_energy.min())} "
-              f"[bucket={r.bucket} batch={r.batch}]{tuned}")
+              f"[bucket={r.bucket} batch={r.batch}]{tuned}{degraded}")
     info = svc.cache_info()
     print(f"{len(encs)} × {args.problem_kind} in {dt:.1f}s "
           f"({info['programs']} compiled program(s))")
@@ -135,6 +157,15 @@ def main():
                     help="service mode: early-stop once every request hits it")
     ap.add_argument("--chunk-shots", type=int, default=1,
                     help="service mode: iterations per progress chunk")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="service mode: chunk-level checkpoint root — a "
+                         "killed solve resumes bit-identically (DESIGN.md §10)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="service mode: per-request wall-clock budget; expiry "
+                         "returns best-so-far with status='deadline'")
+    ap.add_argument("--no-fallback", action="store_true",
+                    help="service mode: disable the backend fallback chain "
+                         "(pallas→dense→sparse) — faults propagate instead")
     ap.add_argument("--trials", type=int, default=16)
     ap.add_argument("--m-shot", type=int, default=20)
     ap.add_argument("--tau", type=int, default=100)

@@ -11,3 +11,14 @@ from .anneal_service import (  # noqa: F401
     AnnealResponse,
     AnnealService,
 )
+from .resilience import (  # noqa: F401
+    STATUS_DEADLINE,
+    STATUS_FAILED,
+    STATUS_FALLBACK,
+    STATUS_OK,
+    STATUS_QUARANTINED,
+    AdmissionError,
+    QuarantineFault,
+    ResiliencePolicy,
+    ServiceEvent,
+)

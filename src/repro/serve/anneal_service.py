@@ -1,5 +1,7 @@
 """Shape-bucketed annealing service: one compiled plateau program serving
-batched heterogeneous Max-Cut requests (DESIGN.md §7).
+batched heterogeneous Max-Cut requests (DESIGN.md §7), with a resilience
+layer that degrades gracefully on any fault below the request boundary
+(DESIGN.md §10).
 
 The paper's operating mode is "one fixed pipeline, many instances": the FPGA
 streams Max-Cut problems through a single annealing datapath.  The TPU
@@ -9,11 +11,12 @@ transcription is this service:
   (:func:`repro.core.engine.bucket_n` / :func:`~repro.core.engine.pad_model`),
   so a heterogeneous request stream collapses onto a handful of shapes.
 * **Compiled-executable cache** — one jitted plateau program per
-  ``(algorithm, backend, N_bucket, B_bucket, n_trials, n_rnd, noise,
-  storage, Schedule.signature(), chunk)``.  Problem arrays are *arguments*
-  to the program, never closed-over constants, so every same-bucket request
-  group reuses the same executable: 4 G-set instances in one bucket compile
-  the plateau program exactly once (trace-count tested).
+  ``(algorithm, backend, backend_opts, N_bucket, B_bucket, n_trials, n_rnd,
+  noise, storage, Schedule.signature(), chunk)``.  Problem arrays are
+  *arguments* to the program, never closed-over constants, so every
+  same-bucket request group reuses the same executable: 4 G-set instances
+  in one bucket compile the plateau program exactly once (trace-count
+  tested).
 * **Problem-axis batching** — same-bucket requests are stacked on a leading
   problem axis and solved in ONE device launch via the engine's batched
   backends (vmap for sparse/dense, the (B, R-tile)-grid resident kernel for
@@ -33,25 +36,52 @@ transcription is this service:
   G77/G81-class buckets (N = 10k–20k) serve through the same entry.  Both
   axes ride the executable-cache key; results stay bit-identical.
 
+Resilience (DESIGN.md §10).  Because *all* live state between plateau
+chunks is a tiny explicit buffer — spin (bit)planes, the carried
+xorshift128 lanes, ``best_H`` and the chunk index — faults recover
+*bit-identically*, not best-effort:
+
+* **Chunk-level checkpoint/resume** — with
+  ``ResiliencePolicy(checkpoint_dir=...)`` each group snapshots its engine
+  state through :class:`repro.checkpoint.ckpt.CheckpointManager` at chunk
+  boundaries, keyed by a stable group fingerprint.  A process killed
+  mid-solve resumes from the last boundary and produces bit-identical
+  ``best_cut``/spins to an uninterrupted run (chaos-tested for all three
+  backends with ``noise='xorshift'``).
+* **Backend fallback chain** — a compile/launch failure walks
+  pallas→dense→sparse; a dense-J OOM downgrades to tiled-J first.  The
+  fallback re-enters the executable cache under its own key, and the
+  downgrade is recorded on ``AnnealResponse.status``/``events``.
+* **Watchdogs** — a per-request wall-clock ``deadline_s`` returns
+  best-so-far with ``status='deadline'`` at the next chunk boundary; a
+  non-finite energy detector quarantines the offending request (solo retry
+  with exponential backoff and a re-autotuned I0max) without touching its
+  batchmates' bit-exactness; admission validation rejects non-finite
+  weights and absurd shapes with typed :class:`AdmissionError`\\ s before
+  any device work happens.
+* **Fault injection** — every failure path above is exercised by the hook
+  points an attached :class:`repro.ft.faults.FaultInjector` fires
+  (compile / oom / nan / kill), driven by the chaos suite.
+
 Beyond Max-Cut, any :class:`~repro.problems.ProblemEncoding` (QUBO, MIS,
-coloring, partitioning — DESIGN.md §9) rides the same entry: the encoding's
-Ising model is bucketed/stacked like any other problem, and the response
-carries the decoded, feasibility-verified domain solution.  ``hp='auto'``
-resolves per-instance hyperparameters from the local-field distribution
-(:mod:`repro.core.autotune`) before grouping, so autotuning composes with
-batching and the executable cache instead of fragmenting them.
+coloring, partitioning — DESIGN.md §9) rides the same entry, and
+``hp='auto'`` resolves per-instance hyperparameters before grouping
+(:mod:`repro.core.autotune`), so autotuning composes with batching and the
+executable cache instead of fragmenting them.
 
 SA (:class:`~repro.core.sa.SAHyperParams`) and PT-SSA
 (:class:`~repro.core.pt.PTSSAHyperParams`) requests ride the same entry:
-they are grouped, bucketed, stacked, chunked and early-stopped identically —
-SA through the vmapped Metropolis core (`repro.core.sa.sa_run` pieces),
+they are grouped, bucketed, stacked, chunked, checkpointed and
+early-stopped identically — SA through the vmapped Metropolis core,
 PT-SSA through :func:`repro.core.pt.pt_ssa_rounds` with the replica ladder
-on the engine's trial axis.
+on the engine's trial axis.  (SA groups never need the backend fallback
+chain: their Metropolis core is backend-independent.)
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import os
 import time
 from typing import Callable, List, Optional, Sequence, Union
 
@@ -59,7 +89,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.autotune import AutotuneReport, resolve_hyperparams
+from repro.checkpoint.ckpt import CheckpointManager, latest_step
+from repro.core.autotune import (
+    AutotuneReport,
+    autotune_hyperparams,
+    resolve_hyperparams,
+)
 from repro.core.engine import (
     bucket_n,
     finalize_cut,
@@ -67,15 +102,38 @@ from repro.core.engine import (
     next_pow2,
     normalize_problem,
     schedule_plateaus,
+    validate_model,
 )
 from repro.core.ising import IsingModel, MaxCutProblem
 from repro.core.pt import PTSSAHyperParams, PTSSAResult, pt_ssa_rounds
+from repro.core.rng import xorshift_lanes_ok
 from repro.core.sa import SAHyperParams, SAResult, sa_cycles, sa_init
 from repro.core.schedule import sa_temperature_ladder
 from repro.core.ssa import AnnealResult, SSAHyperParams
+from repro.ft.faults import FaultInjector
 from repro.problems import ProblemEncoding
 
-__all__ = ["AnnealRequest", "AnnealResponse", "AnnealProgress", "AnnealService"]
+from .resilience import (
+    STATUS_DEADLINE,
+    STATUS_FAILED,
+    STATUS_FALLBACK,
+    STATUS_OK,
+    STATUS_QUARANTINED,
+    AdmissionError,
+    QuarantineFault,
+    ResiliencePolicy,
+    ServiceEvent,
+    classify_fault,
+    fallback_step,
+    group_fingerprint,
+)
+
+__all__ = [
+    "AnnealRequest",
+    "AnnealResponse",
+    "AnnealProgress",
+    "AnnealService",
+]
 
 HyperParams = Union[SSAHyperParams, SAHyperParams, PTSSAHyperParams]
 
@@ -92,13 +150,12 @@ class AnnealRequest:
     ``hp`` selects the algorithm: SSAHyperParams → SSA/HA-SSA (the paper's
     annealer), SAHyperParams → Metropolis SA, PTSSAHyperParams → PT on the
     plateau engine.  The string ``'auto'`` requests local-energy-distribution
-    autotuning (:mod:`repro.core.autotune`): the service measures the
-    instance's local-field distribution and derives per-instance n_rnd and
-    I0 clamp before bucketing, taking the budget knobs (trials, m_shot,
-    cycle budget) from ``auto_base``.  ``target_cut`` arms chunk-level early
-    stop: once the request's best cut reaches it (and every other live
-    request in its batch group is also satisfied), remaining chunks are
-    skipped.
+    autotuning (:mod:`repro.core.autotune`).  ``target_cut`` arms chunk-level
+    early stop.  ``deadline_s`` is the per-request wall-clock budget,
+    measured from the ``solve()`` call: once it elapses, the request stops
+    participating in its group's continuation and its response returns
+    best-so-far with ``status='deadline'`` at the next chunk boundary —
+    it never raises.
     """
 
     problem: Union[MaxCutProblem, IsingModel, ProblemEncoding]
@@ -108,12 +165,13 @@ class AnnealRequest:
     schedule_kind: str = "hassa"   # SSA only
     target_cut: Optional[int] = None
     auto_base: Optional[SSAHyperParams] = None  # budget knobs for hp='auto'
+    deadline_s: Optional[float] = None  # wall-clock budget from solve() entry
 
 
 @dataclasses.dataclass
 class AnnealResponse:
     request: AnnealRequest
-    result: object                 # AnnealResult | SAResult | PTSSAResult
+    result: object                 # AnnealResult | SAResult | PTSSAResult | None
     wall_s: float                  # group wall time (the batch solves together)
     bucket: int                    # padded N the request ran at
     batch: int                     # live requests stacked in its group
@@ -124,6 +182,8 @@ class AnnealResponse:
     objective: Optional[int] = None  # domain objective of `solution` if feasible
     feasible: Optional[bool] = None  # verifier verdict (None: raw Ising/maxcut)
     autotune: Optional[AutotuneReport] = None  # set when hp='auto' resolved
+    status: str = STATUS_OK        # 'ok'|'fallback'|'deadline'|'quarantined'|'failed'
+    events: List[ServiceEvent] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -145,20 +205,102 @@ def _largest_divisor_leq(n: int, k: int) -> int:
     return k
 
 
+def _opts_key(opts: dict) -> tuple:
+    """Hashable projection of backend_opts for the executable-cache key."""
+    return tuple(sorted((k, repr(v)) for k, v in opts.items()))
+
+
+class _GroupCtx:
+    """Per-attempt execution context for one request group.
+
+    Carries the effective backend (which the fallback chain may have
+    downgraded from the service default), the fault-injection hooks, the
+    group's checkpoint namespace, and the per-request statuses/events the
+    chunk loop accumulates (deadline expirations, resumes, …).
+    """
+
+    def __init__(self, service: "AnnealService", kind: str, nb: int, items,
+                 backend: str, backend_opts: dict, solve_t0: float,
+                 chunk: int, events: Optional[List[ServiceEvent]] = None):
+        self.kind = kind
+        self.backend = backend
+        self.backend_opts = dict(backend_opts)
+        self.solve_t0 = solve_t0
+        self.faults: Optional[FaultInjector] = service.faults
+        self.policy: ResiliencePolicy = service.policy
+        self.noise = service.noise
+        self.events: List[ServiceEvent] = list(events or [])
+        self.statuses: dict = {}
+        self.ckpt: Optional[CheckpointManager] = None
+        self._dir: Optional[str] = None
+        if self.policy.checkpoint_dir:
+            tag = group_fingerprint(kind, nb, backend, service.storage_layout,
+                                    service.noise, chunk, items)
+            self._dir = os.path.join(self.policy.checkpoint_dir, tag)
+            self.ckpt = CheckpointManager(
+                self._dir,
+                save_interval=max(1, int(self.policy.checkpoint_interval)),
+                keep=self.policy.keep_checkpoints,
+                async_save=False,  # deterministic crash window
+            )
+
+    # -- fault hooks ------------------------------------------------------
+    def fire(self, point: str, **ctx):
+        if self.faults is None:
+            return None
+        return self.faults.fire(point, **ctx)
+
+    def _event(self, kind: str, **detail):
+        self.events.append(
+            ServiceEvent(kind, detail, time.perf_counter() - self.solve_t0)
+        )
+
+    # -- checkpointing ----------------------------------------------------
+    def maybe_resume(self, template, n_items: int):
+        """(start_chunk, state, traces) — resuming if a valid snapshot exists."""
+        if self.ckpt is None or latest_step(self._dir) is None:
+            return 0, template, None
+        state, meta = self.ckpt.restore_latest(template)
+        traces = meta.get("traces")
+        ok = isinstance(traces, list) and len(traces) == n_items
+        if ok and self.noise == "xorshift":
+            lanes = getattr(state, "noise_state", None)
+            # Batched lane layout (B, 4, T, N): the 4-word axis is axis 1.
+            ok = lanes is not None and xorshift_lanes_ok(lanes, axis=1)
+        if not ok:
+            self._event("checkpoint_rejected", dir=self._dir)
+            return 0, template, None
+        start = int(meta["step"])
+        self._event("resume", chunk=start, dir=self._dir)
+        return start, state, [list(map(int, t)) for t in traces]
+
+    def save(self, step: int, state, traces):
+        if self.ckpt is not None:
+            self.ckpt.maybe_save(step, state, meta={"traces": traces})
+
+    def finish_success(self):
+        if self.ckpt is not None and self.policy.cleanup_on_success:
+            self.ckpt.purge()
+
+
 class AnnealService:
     """Batched annealing-as-a-service over the plateau engine.
 
-    One service instance owns a backend choice, a noise source and the
-    compiled-executable cache.  ``solve(requests)`` groups requests by
-    (algorithm, shape bucket, hyperparameters), stacks each group on the
-    problem axis, and runs it through one cached compiled program.
+    One service instance owns a backend choice, a noise source, the
+    compiled-executable cache, and a :class:`ResiliencePolicy`.
+    ``solve(requests)`` groups requests by (algorithm, shape bucket,
+    hyperparameters), stacks each group on the problem axis, and runs it
+    through one cached compiled program; any fault below the request
+    boundary (compile failure, OOM, non-finite energies, deadline) degrades
+    that group gracefully instead of failing the batch — see the module
+    docstring and DESIGN.md §10 for the failure model.
 
     Bit-exactness contract (noise='xorshift'): an SSA or PT-SSA request
-    solved through the service — padded, stacked, chunked — returns the
-    same best energy/spins on its live lanes as the corresponding
-    single-problem driver (`anneal` / `anneal_pt_ssa`) on the unpadded
-    instance.  SA requests are valid runs but not bit-comparable (their
-    threefry init draw is shape-dependent).
+    solved through the service — padded, stacked, chunked, checkpointed,
+    resumed — returns the same best energy/spins on its live lanes as the
+    corresponding single-problem driver (`anneal` / `anneal_pt_ssa`) on the
+    unpadded instance.  SA requests are valid runs but not bit-comparable
+    (their threefry init draw is shape-dependent).
     """
 
     def __init__(
@@ -172,13 +314,15 @@ class AnnealService:
         min_bucket: int = 64,
         backend_opts: Optional[dict] = None,
         autotune_seed: int = 0,
+        resilience: Optional[ResiliencePolicy] = None,
+        faults: Optional[FaultInjector] = None,
     ):
         """``storage_layout='packed'`` keeps the HBM-resident engine state
-        between chunk launches as uint32 spin bitplanes (DESIGN.md §4) — for
-        the pallas backend with xorshift noise the kernel's HBM-facing refs
-        are packed too, and noise is generated in-kernel (no (C, T, N)
-        buffer).  SSA results are bit-identical across layouts; SA/PT-SSA
-        groups always run the dense layout (their drivers own their state).
+        between chunk launches as uint32 spin bitplanes (DESIGN.md §4).
+        ``resilience`` configures checkpointing/fallback/retry (defaults:
+        fallback + admission validation on, checkpointing off); ``faults``
+        attaches a fault injector whose hook points the service fires
+        (testing/chaos only — never set in production).
         """
         if storage_layout not in ("dense", "packed"):
             raise ValueError(f"unknown storage_layout {storage_layout!r}")
@@ -190,6 +334,8 @@ class AnnealService:
         self.min_bucket = int(min_bucket)
         self.autotune_seed = int(autotune_seed)
         self.backend_opts = dict(backend_opts or {})
+        self.policy = resilience or ResiliencePolicy()
+        self.faults = faults
         self._programs: dict = {}
         self.stats = collections.Counter()
 
@@ -203,37 +349,51 @@ class AnnealService:
     ) -> List[AnnealResponse]:
         """Solve a batch of heterogeneous requests; responses keep order.
 
-        ``hp='auto'`` requests are resolved *before* grouping — autotuned
-        hyperparameters are ordinary call-time arguments by the time the
-        bucketing and the compiled-executable cache see them, so the cache
-        keying machinery is untouched and identical problems (the autotune
-        draw is independent of the anneal seed) still batch together.
-        Encoded problems (:class:`~repro.problems.ProblemEncoding`) get
-        their best spins decoded and feasibility-verified on the response.
+        ``solve([])`` returns ``[]``.  The same request object may appear
+        multiple times in one batch (aliased requests): each occurrence gets
+        its own response.  ``hp='auto'`` requests are resolved *before*
+        grouping — autotuned hyperparameters are ordinary call-time
+        arguments by the time the bucketing and the compiled-executable
+        cache see them.  Admission validation (non-finite weights, absurd
+        shapes, bad knobs) rejects the batch with a typed
+        :class:`AdmissionError` before any device work happens.
         """
+        if not requests:
+            return []
+        t_solve0 = time.perf_counter()
         self.stats["requests"] += len(requests)
         responses: List[Optional[AnnealResponse]] = [None] * len(requests)
         reports: dict = {}
         groups = collections.defaultdict(list)
         for idx, req in enumerate(requests):
-            maxcut, model = normalize_problem(req.problem)
+            try:
+                maxcut, model = normalize_problem(req.problem)
+            except TypeError as e:
+                raise AdmissionError(f"request {idx}: {e}") from e
+            if self.policy.validate_admission:
+                self._admit(idx, req, model)
             if isinstance(req.hp, str):
                 hp, reports[idx] = resolve_hyperparams(
                     req.hp, model, base=req.auto_base, seed=self.autotune_seed
                 )
                 req = dataclasses.replace(req, hp=hp)
                 self.stats["autotuned"] += 1
+            if isinstance(req.hp, PTSSAHyperParams) and self.backend == "pallas":
+                raise AdmissionError(
+                    "pt-ssa needs per-replica I0 columns; run the service with "
+                    "backend='sparse' or 'dense' for PTSSAHyperParams requests"
+                )
             nb = bucket_n(model.n, self.min_bucket)
             groups[self._group_key(req, nb)].append((idx, req, maxcut, model))
         self.stats["groups"] += len(groups)
         for key, items in sorted(groups.items(), key=lambda kv: repr(kv[0])):
             kind, nb = key[0], key[1]
-            solver = {"ssa": self._solve_ssa_group,
-                      "sa": self._solve_sa_group,
-                      "ptssa": self._solve_ptssa_group}[kind]
-            solver(nb, items, responses, progress)
+            self._solve_group_resilient(kind, nb, items, responses, progress,
+                                        t_solve0)
         for idx, resp in enumerate(responses):
             resp.autotune = reports.get(idx)
+            if resp.result is None:
+                continue
             enc = resp.request.problem
             if isinstance(enc, ProblemEncoding):
                 sol, obj, feas = enc.best_feasible(resp.result.best_m)
@@ -247,6 +407,21 @@ class AnnealService:
             "keys": sorted(repr(k) for k in self._programs),
             **{k: v for k, v in self.stats.items()},
         }
+
+    # ------------------------------------------------------------------
+    # Admission
+    # ------------------------------------------------------------------
+    def _admit(self, idx: int, req: AnnealRequest, model: IsingModel):
+        try:
+            validate_model(model)
+        except ValueError as e:
+            self.stats["admission_rejects"] += 1
+            raise AdmissionError(f"request {idx}: {e}") from e
+        if req.deadline_s is not None and not float(req.deadline_s) > 0:
+            self.stats["admission_rejects"] += 1
+            raise AdmissionError(
+                f"request {idx}: deadline_s must be > 0, got {req.deadline_s}"
+            )
 
     # ------------------------------------------------------------------
     # Grouping
@@ -273,9 +448,149 @@ class AnnealService:
         return padded, b_live, b_bucket
 
     # ------------------------------------------------------------------
+    # Resilient group dispatch: fallback chain + quarantine + retry
+    # ------------------------------------------------------------------
+    def _solve_group_resilient(self, kind, nb, items, responses, progress,
+                               solve_t0, *, requeue_quarantine: bool = True):
+        """Run one group with the resilience wrapper (DESIGN.md §10).
+
+        A classified compile/OOM fault walks the fallback chain and re-runs
+        the group from scratch on the downgraded backend (bit-identity is
+        preserved — the trajectory depends only on the noise stream, not the
+        backend).  A quarantine signal splits the group: healthy requests
+        re-run as a fresh group, offenders retry solo with backoff.  Kills
+        and unclassified errors propagate.
+        """
+        solver = {"ssa": self._solve_ssa_group,
+                  "sa": self._solve_sa_group,
+                  "ptssa": self._solve_ptssa_group}[kind]
+        backend, opts = self.backend, dict(self.backend_opts)
+        carried_events: List[ServiceEvent] = []
+        while True:
+            ctx = _GroupCtx(self, kind, nb, items, backend, opts, solve_t0,
+                            self._chunk_of(kind, items), events=carried_events)
+            try:
+                solver(nb, items, responses, progress, ctx)
+            except QuarantineFault as qf:
+                if not requeue_quarantine:
+                    raise
+                self.stats["quarantines"] += 1
+                self._handle_quarantine(kind, nb, items, qf, responses,
+                                        progress, solve_t0, ctx)
+                return
+            except Exception as exc:  # noqa: BLE001 — classified below
+                fault = None
+                if kind != "sa":  # SA's Metropolis core is backend-independent
+                    fault = classify_fault(exc, backend)
+                nxt = (fallback_step(backend, opts, fault, nb)
+                       if fault is not None and self.policy.fallback else None)
+                if nxt is None:
+                    raise
+                self.stats[f"fallback_{fault}"] += 1
+                carried_events = list(ctx.events)
+                carried_events.append(ServiceEvent(
+                    "fallback",
+                    {"from": backend, "to": nxt[0], "fault": fault,
+                     "from_opts": dict(opts), "to_opts": dict(nxt[1]),
+                     "error": f"{type(exc).__name__}: {exc}"[:200]},
+                    time.perf_counter() - solve_t0,
+                ))
+                backend, opts = nxt
+                continue
+            # Success: finalize statuses/events and clean up checkpoints.
+            default = (STATUS_FALLBACK
+                       if any(ev.kind == "fallback" for ev in ctx.events)
+                       else STATUS_OK)
+            for idx, *_rest in items:
+                resp = responses[idx]
+                resp.status = ctx.statuses.get(idx, default)
+                resp.events = list(ctx.events)
+            ctx.finish_success()
+            return
+
+    def _chunk_of(self, kind, items) -> int:
+        """The group's chunk width (part of its checkpoint fingerprint)."""
+        hp = items[0][1].hp
+        if kind == "ssa":
+            return _largest_divisor_leq(hp.m_shot, self.chunk_shots)
+        if kind == "ptssa":
+            return _largest_divisor_leq(hp.n_rounds, self.chunk_shots)
+        return hp.n_cycles // _largest_divisor_leq(hp.n_cycles, self.sa_chunks)
+
+    def _handle_quarantine(self, kind, nb, items, qf, responses, progress,
+                           solve_t0, ctx):
+        """Split a poisoned group: healthy slots re-run, offenders go solo.
+
+        Per-problem lanes are independent (the padding-invariance property),
+        so re-running the healthy requests as a fresh group is bit-identical
+        to what the original batch would have produced for them.
+        """
+        bad = set(qf.slots)
+        good = [it for s, it in enumerate(items) if s not in bad]
+        bad_items = [it for s, it in enumerate(items) if s in bad]
+        if good:
+            self._solve_group_resilient(kind, nb, good, responses, progress,
+                                        solve_t0)
+        for it in bad_items:
+            self._retry_solo(kind, nb, it, responses, progress, solve_t0)
+
+    def _retry_solo(self, kind, nb, item, responses, progress, solve_t0):
+        """Quarantined request: exponential backoff + re-autotuned I0max.
+
+        Each attempt re-derives the I0 clamp from the instance's local-field
+        distribution (:mod:`repro.core.autotune`) — if the non-finite energy
+        came from an I0/field-scale mismatch, the retuned clamp is the
+        principled fix; injected bursts simply clear on retry.  After
+        ``max_retries`` the response is returned with ``status='failed'``
+        (never an exception).
+        """
+        idx, req, maxcut, model = item
+        events: List[ServiceEvent] = [ServiceEvent(
+            "quarantine", {"request": idx},
+            time.perf_counter() - solve_t0,
+        )]
+        hp = req.hp
+        for attempt in range(self.policy.max_retries):
+            time.sleep(self.policy.backoff_base_s * (2 ** attempt))
+            if isinstance(hp, SSAHyperParams):
+                tuned, rep = autotune_hyperparams(
+                    model, hp, seed=self.autotune_seed + attempt + 1
+                )
+                hp = dataclasses.replace(hp, i0_max=tuned.i0_max)
+                detail = {"request": idx, "attempt": attempt,
+                          "i0_max": tuned.i0_max, "z_max": rep.z_max}
+            else:
+                detail = {"request": idx, "attempt": attempt}
+            events.append(ServiceEvent(
+                "retry", detail, time.perf_counter() - solve_t0
+            ))
+            req_retry = dataclasses.replace(req, hp=hp)
+            try:
+                self._solve_group_resilient(
+                    kind, nb, [(idx, req_retry, maxcut, model)], responses,
+                    progress, solve_t0, requeue_quarantine=False,
+                )
+            except QuarantineFault:
+                self.stats["retry_requarantined"] += 1
+                continue
+            resp = responses[idx]
+            resp.status = STATUS_QUARANTINED
+            resp.events = events + resp.events
+            self.stats["quarantine_recoveries"] += 1
+            return
+        self.stats["quarantine_failures"] += 1
+        responses[idx] = AnnealResponse(
+            request=req, result=None,
+            wall_s=time.perf_counter() - solve_t0, bucket=nb, batch=1,
+            chunks_run=0, chunks_total=0,
+            chunk_best_cut=np.zeros(0, np.int64),
+            status=STATUS_FAILED, events=events,
+        )
+
+    # ------------------------------------------------------------------
     # SSA / HA-SSA groups (the tentpole hot path)
     # ------------------------------------------------------------------
-    def _solve_ssa_group(self, nb, items, responses, progress):
+    def _solve_ssa_group(self, nb, items, responses, progress, ctx):
         t0 = time.perf_counter()
         _, req0, _, _ = items[0]
         hp: SSAHyperParams = req0.hp
@@ -286,16 +601,18 @@ class AnnealService:
 
         padded, b_live, b_bucket = self._pad_group(items)
         sig = self._group_key(req0, nb)[-1]
-        cache_key = ("ssa", self.backend, self.storage_layout, nb, b_bucket,
-                     hp.n_trials, hp.n_rnd, self.noise, req0.storage, sig,
-                     chunk)
+        backend, opts = ctx.backend, ctx.backend_opts
+        cache_key = ("ssa", backend, _opts_key(opts), self.storage_layout, nb,
+                     b_bucket, hp.n_trials, hp.n_rnd, self.noise, req0.storage,
+                     sig, chunk)
         ent = self._programs.get(cache_key)
         if ent is None:
+            ctx.fire("compile", backend=backend, kind="ssa", bucket=nb)
             self.stats["program_cache_misses"] += 1
             bk = make_batched_backend(
-                self.backend, n_bucket=nb, n_trials=hp.n_trials,
+                backend, n_bucket=nb, n_trials=hp.n_trials,
                 n_rnd=hp.n_rnd, noise=self.noise,
-                storage_layout=self.storage_layout, **self.backend_opts,
+                storage_layout=self.storage_layout, **opts,
             )
 
             def init_fn(problem, ns0):
@@ -313,6 +630,8 @@ class AnnealService:
         bk, init_fn, chunk_fn = ent
 
         stacked = bk.stack([model for _, _, _, model in padded])
+        ctx.fire("oom", backend=backend, kind="ssa", bucket=nb, batch=b_bucket,
+                 j_mode=getattr(bk, "j_mode", None))
         ns0 = bk.init_noise(
             [req.seed for _, req, _, _ in padded],
             [model.n for _, _, _, model in padded],
@@ -321,8 +640,8 @@ class AnnealService:
 
         state, chunk_traces = self._chunk_loop(
             "ssa", nb, items, n_chunks, progress,
-            lambda st: chunk_fn(stacked, st), state,
-            lambda st: st.best_H,
+            lambda st, c: chunk_fn(stacked, st), state,
+            lambda st: st.best_H, ctx,
         )
         bh_dev, bm_dev = bk.finalize(state)  # layout-agnostic (unpacks bitplanes)
         best_H = np.asarray(bh_dev)
@@ -351,7 +670,7 @@ class AnnealService:
     # ------------------------------------------------------------------
     # SA groups
     # ------------------------------------------------------------------
-    def _solve_sa_group(self, nb, items, responses, progress):
+    def _solve_sa_group(self, nb, items, responses, progress, ctx):
         t0 = time.perf_counter()
         _, req0, _, _ = items[0]
         hp: SAHyperParams = req0.hp
@@ -362,6 +681,7 @@ class AnnealService:
         cache_key = ("sa", nb, b_bucket, hp.n_trials, chunk_cycles)
         ent = self._programs.get(cache_key)
         if ent is None:
+            ctx.fire("compile", backend="sa-core", kind="sa", bucket=nb)
             self.stats["program_cache_misses"] += 1
 
             def init_fn(problem, keys):
@@ -407,16 +727,11 @@ class AnnealService:
             jnp.asarray(temps[c * chunk_cycles : (c + 1) * chunk_cycles])
             for c in range(n_chunks)
         ]
-        state_idx = [0]
-
-        def step(carry):
-            c = state_idx[0]
-            state_idx[0] += 1
-            return chunk_fn(stacked, carry, chunk_arrays[c], n_lives)
 
         carry, chunk_traces = self._chunk_loop(
-            "sa", nb, items, n_chunks, progress, step, carry,
-            lambda ca: ca[3],
+            "sa", nb, items, n_chunks, progress,
+            lambda ca, c: chunk_fn(stacked, ca, chunk_arrays[c], n_lives),
+            carry, lambda ca: ca[3], ctx,
         )
         _, _, _, best_H, best_m = carry
         best_H = np.asarray(best_H)
@@ -443,11 +758,12 @@ class AnnealService:
     # ------------------------------------------------------------------
     # PT-SSA groups
     # ------------------------------------------------------------------
-    def _solve_ptssa_group(self, nb, items, responses, progress):
+    def _solve_ptssa_group(self, nb, items, responses, progress, ctx):
         t0 = time.perf_counter()
         _, req0, _, _ = items[0]
         hp: PTSSAHyperParams = req0.hp
-        if self.backend == "pallas":
+        backend, opts = ctx.backend, ctx.backend_opts
+        if backend == "pallas":
             raise ValueError(
                 "pt-ssa needs per-replica I0 columns; run the service with "
                 "backend='sparse' or 'dense' for PTSSAHyperParams requests"
@@ -456,13 +772,15 @@ class AnnealService:
         n_chunks = hp.n_rounds // chunk
 
         padded, b_live, b_bucket = self._pad_group(items)
-        cache_key = ("ptssa", self.backend, nb, b_bucket, hp, self.noise, chunk)
+        cache_key = ("ptssa", backend, _opts_key(opts), nb, b_bucket, hp,
+                     self.noise, chunk)
         ent = self._programs.get(cache_key)
         if ent is None:
+            ctx.fire("compile", backend=backend, kind="ptssa", bucket=nb)
             self.stats["program_cache_misses"] += 1
             bk = make_batched_backend(
-                self.backend, n_bucket=nb, n_trials=hp.n_replicas,
-                n_rnd=hp.n_rnd, noise=self.noise, **self.backend_opts,
+                backend, n_bucket=nb, n_trials=hp.n_replicas,
+                n_rnd=hp.n_rnd, noise=self.noise, **opts,
             )
 
             def init_fn(problem, ns0):
@@ -488,6 +806,8 @@ class AnnealService:
         bk, init_fn, chunk_fn = ent
 
         stacked = bk.stack([model for _, _, _, model in padded])
+        ctx.fire("oom", backend=backend, kind="ptssa", bucket=nb,
+                 batch=b_bucket, j_mode=getattr(bk, "j_mode", None))
         ns0 = bk.init_noise(
             [req.seed for _, req, _, _ in padded],
             [model.n for _, _, _, model in padded],
@@ -503,17 +823,14 @@ class AnnealService:
             for _, req, _, _ in padded
         ])  # (B, n_rounds, 2)
         parities = jnp.arange(hp.n_rounds, dtype=jnp.int32) % 2
-        state_idx = [0]
 
-        def step(st):
-            c = state_idx[0]
-            state_idx[0] += 1
+        def step(st, c):
             sl = slice(c * chunk, (c + 1) * chunk)
             return chunk_fn(stacked, st, all_keys[:, sl], parities[sl])
 
         state, chunk_traces = self._chunk_loop(
             "ptssa", nb, items, n_chunks, progress, step, state,
-            lambda st: st.best_H,
+            lambda st: st.best_H, ctx,
         )
         best_H = np.asarray(state.best_H)
         best_m = np.asarray(state.best_m)
@@ -537,23 +854,55 @@ class AnnealService:
             )
 
     # ------------------------------------------------------------------
-    # Shared chunk loop: streaming best_H reports + early stop
+    # Shared chunk loop: streaming best_H reports, early stop, checkpoints,
+    # deadline watchdog, non-finite detector, fault hooks
     # ------------------------------------------------------------------
     def _chunk_loop(self, kind, nb, items, n_chunks, progress, step, state,
-                    best_of):
-        """Run up to n_chunks steps; report per-chunk bests; stop early when
-        every request that declared a target_cut has reached it (and all
-        requests declared one)."""
-        any_untargeted = any(req.target_cut is None for _, req, _, _ in items)
+                    best_of, ctx):
+        """Run up to n_chunks ``step(state, c)`` calls from the last
+        checkpoint; report per-chunk bests; stop early when every request is
+        done (target_cut reached or deadline expired).
+
+        Chunk boundaries are where all the resilience machinery lives: the
+        state snapshot (checkpoint), the kill/nan fault hooks, the
+        non-finite detector (quarantine), and the deadline watchdog.  A
+        deadline-expired request's streaming trace freezes at expiry; its
+        final result is whatever the state holds when its group stops.
+        """
         traces = [[] for _ in items]
-        for c in range(n_chunks):
-            state = step(state)
+        start = 0
+        if ctx is not None and ctx.ckpt is not None:
+            start, state, restored = ctx.maybe_resume(state, len(items))
+            if restored is not None:
+                traces = restored
+        done = [False] * len(items)
+        frozen = [False] * len(items)
+        for c in range(start, n_chunks):
+            state = step(state, c)
             best_H = np.asarray(best_of(state))  # device sync: the report
+            # Non-finite watchdog.  The 'nan' hook corrupts the detector's
+            # float view of the readings (slots it names), emulating a
+            # numeric blow-up; detection itself is the production check.
+            readings = best_H.astype(np.float64)
+            spec = ctx.fire("nan", kind=kind, chunk=c) if ctx else None
+            if spec is not None:
+                slots = [s for s in (spec.slots or range(len(items)))
+                         if s < len(items)]
+                for s in slots:
+                    readings[s] = np.nan
+            bad = tuple(
+                s for s in range(len(items))
+                if not np.all(np.isfinite(readings[s]))
+            )
+            if bad:
+                self.stats["nonfinite_detected"] += 1
+                raise QuarantineFault(bad)
             bests = []
             for slot, (idx, req, maxcut, model) in enumerate(items):
                 obj = np.asarray(finalize_cut(best_H[slot], maxcut))
                 best = int(np.max(obj))
-                traces[slot].append(best)
+                if not frozen[slot]:
+                    traces[slot].append(best)
                 bests.append(best)
             self.stats["chunks_run"] += 1
             if progress is not None:
@@ -562,10 +911,29 @@ class AnnealService:
                     request_indices=tuple(idx for idx, *_ in items),
                     best_cut=tuple(bests),
                 ))
-            if not any_untargeted and all(
-                b >= req.target_cut
-                for b, (_, req, _, _) in zip(bests, items)
-            ):
+            if ctx is not None:
+                ctx.save(c + 1, state, traces)
+                ctx.fire("kill", kind=kind, chunk=c)
+                now = time.perf_counter()
+                for slot, (idx, req, _, _) in enumerate(items):
+                    if done[slot]:
+                        continue
+                    if req.target_cut is not None and bests[slot] >= req.target_cut:
+                        done[slot] = True
+                    elif (req.deadline_s is not None
+                          and now - ctx.solve_t0 >= req.deadline_s):
+                        done[slot] = True
+                        frozen[slot] = True
+                        ctx.statuses[idx] = STATUS_DEADLINE
+                        ctx._event("deadline", request=idx, chunk=c,
+                                   best=bests[slot])
+                        self.stats["deadline_expirations"] += 1
+            else:
+                for slot, (idx, req, _, _) in enumerate(items):
+                    if (not done[slot] and req.target_cut is not None
+                            and bests[slot] >= req.target_cut):
+                        done[slot] = True
+            if done and all(done) and c + 1 < n_chunks:
                 self.stats["early_stops"] += 1
                 break
         return state, traces

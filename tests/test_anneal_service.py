@@ -236,3 +236,30 @@ def test_padding_overhead_model():
     # exactly-bucket-sized problems waste nothing
     assert memory.padding_overhead_bits_per_iteration(1024, hp) == 0
     assert memory.padding_overhead_fraction(800) == pytest.approx(224 / 1024)
+
+
+# ---------------------------------------------------------------------------
+# Request-boundary edge cases (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+def test_empty_batch_returns_empty():
+    svc = AnnealService(backend="sparse", min_bucket=16)
+    assert svc.solve([]) == []
+    assert svc.stats["requests"] == 0 and len(svc._programs) == 0
+
+
+def test_duplicate_and_aliased_requests():
+    """The same request object repeated in one batch: every occurrence gets
+    its own (identical) response; batchmates are unaffected."""
+    p = gset.toroidal_grid(36, seed=1)
+    hp = SSAHyperParams(n_trials=3, m_shot=4, tau=4, i0_min=1, i0_max=8)
+    req = AnnealRequest(problem=p, hp=hp, seed=7)
+    solo = AnnealService(backend="sparse", min_bucket=16).solve([req])[0]
+    svc = AnnealService(backend="sparse", min_bucket=16)
+    rs = svc.solve([req, req, AnnealRequest(problem=p, hp=hp, seed=8), req])
+    assert len(rs) == 4
+    for r in (rs[0], rs[1], rs[3]):
+        np.testing.assert_array_equal(r.result.best_energy,
+                                      solo.result.best_energy)
+        np.testing.assert_array_equal(r.result.best_m, solo.result.best_m)
+    assert rs[2].result.best_energy.shape == solo.result.best_energy.shape
+    assert all(r.status == "ok" for r in rs)

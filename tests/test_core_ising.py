@@ -109,3 +109,21 @@ def test_gset_parser():
 def test_self_loop_rejected():
     with pytest.raises(ValueError):
         IsingModel.from_edges(3, np.array([[0, 0]]), np.array([1]))
+
+
+def test_from_edges_rejects_nonfinite_weights():
+    edges = np.array([[0, 1], [1, 2]])
+    with pytest.raises(ValueError, match="finite"):
+        IsingModel.from_edges(3, edges, np.array([1.0, np.nan]))
+    with pytest.raises(ValueError, match="finite"):
+        IsingModel.from_edges(3, edges, np.array([1.0, np.inf]))
+    with pytest.raises(ValueError, match="finite"):
+        IsingModel.from_edges(3, edges, np.array([1.0, 2.0]),
+                              h=np.array([0.0, np.nan, 0.0]))
+
+
+def test_from_dense_rejects_nonfinite_J():
+    J = np.zeros((3, 3))
+    J[0, 1] = J[1, 0] = np.nan
+    with pytest.raises(ValueError, match="finite"):
+        IsingModel.from_dense(J)

@@ -102,3 +102,53 @@ def test_remesh_roundtrip():
     same = jax.tree_util.tree_map(
         lambda a, b: bool(jnp.all(a == b)), state.params, moved)
     assert all(jax.tree_util.tree_leaves(same))
+
+
+def test_straggler_monitor_single_host_never_flags():
+    """A single-host fleet has no peers: it is its own median, never a
+    straggler — even with wildly varying step times."""
+    mon = StragglerMonitor(n_hosts=1, threshold=1.5, warmup_steps=3)
+    for t in (0.1, 5.0, 0.1, 40.0, 0.1):
+        mon.record(0, t)
+    assert mon.stragglers() == []
+
+
+def test_straggler_monitor_warmup_boundary():
+    """Hosts below warmup_steps are excluded from both flagging and the
+    fleet median; flagging starts exactly at the warmup_steps-th record."""
+    mon = StragglerMonitor(n_hosts=3, threshold=1.5, warmup_steps=3)
+    # Slow host 2 has only 2 records: not ready, must not be flagged, and
+    # must not drag the median for the others.
+    for step in range(3):
+        mon.record(0, 1.0)
+        mon.record(1, 1.0)
+    for step in range(2):
+        mon.record(2, 50.0)
+    assert mon.stragglers() == []
+    # The 3rd record crosses the warmup boundary: now it flags.
+    mon.record(2, 50.0)
+    assert mon.stragglers() == [2]
+
+
+def test_straggler_monitor_no_ready_hosts():
+    mon = StragglerMonitor(n_hosts=4, warmup_steps=5)
+    for h in range(4):
+        mon.record(h, 1.0)
+    assert mon.stragglers() == []
+
+
+def test_remesh_single_device_mesh_namedsharding():
+    """Elastic re-mesh onto a 1-device mesh (the post-pod-loss floor):
+    NamedShardings from a Mesh of one device, values unchanged."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    state = init_train_state(CFG, TC, jax.random.PRNGKey(0))
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    shard = NamedSharding(mesh, P())  # fully replicated on the 1-device mesh
+    moved = remesh(state.params,
+                   lambda tree: jax.tree_util.tree_map(lambda _: shard, tree))
+    same = jax.tree_util.tree_map(
+        lambda a, b: bool(jnp.all(a == b)), state.params, moved)
+    assert all(jax.tree_util.tree_leaves(same))
+    for leaf in jax.tree_util.tree_leaves(moved):
+        assert leaf.sharding.mesh.devices.size == 1
