@@ -102,6 +102,32 @@ def run(csv_prefix: str = "table4_memory"):
     emit(f"{csv_prefix}/state_bytes_ratio", 0.0,
          f"{dense_state / packed_state:.2f}x")
 
+    # Coupling-matrix residency: the earlier table rows only counted spin
+    # planes + trajectory, silently omitting J itself — at N=800 the f32
+    # matrix dwarfs everything above.  The popcount datapath keeps J as
+    # sign/magnitude bitplanes (kernels.bitplane.PackedJ); report the
+    # analytic codec size next to the bytes the two dense-backend
+    # configurations actually pin on device.
+    from repro.core.engine import make_backend as _mk
+    from repro.kernels.bitplane import adjacency_weight_bits, packed_j_nbytes
+
+    model = g.to_ising()
+    jb = adjacency_weight_bits(model.n, model.nbr_idx, model.nbr_w)
+    bk_dense = _mk("dense", model, n_trials=hp_small.n_trials,
+                   noise="xorshift", field_mode="dense", j_mode="dense")
+    bk_pc = _mk("dense", model, n_trials=hp_small.n_trials,
+                noise="xorshift", field_mode="popcount")
+    dense_j = memory.tree_device_bytes(bk_dense.J)
+    packed_j = memory.tree_device_bytes(
+        (bk_pc.packed_j.sign, bk_pc.packed_j.mags, bk_pc.packed_j.base)
+    )
+    emit(f"{csv_prefix}/j_bits", 0.0, f"{jb}")
+    emit(f"{csv_prefix}/analytic_packed_j_bytes", 0.0,
+         f"{packed_j_nbytes(model.n, jb)}")
+    emit(f"{csv_prefix}/measured_j_bytes_dense", 0.0, f"{dense_j}")
+    emit(f"{csv_prefix}/measured_j_bytes_packed", 0.0, f"{packed_j}")
+    emit(f"{csv_prefix}/j_bytes_ratio", 0.0, f"{dense_j / packed_j:.2f}x")
+
     ok = measured_ratio >= (1.0 - RATIO_TOLERANCE) * ratio
     emit(f"{csv_prefix}/measured_vs_analytic_ok", 0.0, str(ok))
     return {

@@ -119,6 +119,23 @@ def run(smoke: bool = False, json_path: str = "BENCH_problems.json",
                         f"hand objective {handq.objective}")
     report["acceptance"]["qubo"] = q_row
 
+    if smoke:
+        # Structural witness for the 32-spin smoke regression (PR 7): on
+        # tiny instances the resident pallas kernel's launch overhead loses
+        # to the scan backends, so 'auto' must route them to dense.  Gate
+        # the resolver itself — cheaper and less flaky than re-timing it.
+        from repro.core.engine import MIN_RESIDENT_N, resolve_backend
+
+        picked = resolve_backend("auto", 32)
+        emit(f"{csv_prefix}/auto_backend_n32", 0.0,
+             f"{picked};min_resident_n={MIN_RESIDENT_N}")
+        if picked != "dense":
+            failures.append(
+                f"auto backend at n=32 resolved to {picked!r}, not 'dense' "
+                f"(MIN_RESIDENT_N={MIN_RESIDENT_N} regression)"
+            )
+        report["acceptance"]["auto_backend_n32"] = picked
+
     report["failures"] = failures
     report["ok"] = not failures
     if json_path:

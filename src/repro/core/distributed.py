@@ -43,7 +43,7 @@ from .engine import (
     schedule_plateaus,
     unpack_spins,
 )
-from .ising import local_fields_tiled
+from .ising import local_fields_popcount, local_fields_tiled
 from .rng import xorshift_next_bits
 from .ssa import SSAHyperParams
 
@@ -127,6 +127,7 @@ def make_batched_iteration_step(
     storage_layout: str = "dense",
     j_mode: str = "dense",
     tile_n: int = 512,
+    field_mode: str = "dense",
 ):
     """One full iteration over B stacked (bucket-padded) problems.
 
@@ -147,7 +148,11 @@ def make_batched_iteration_step(
     ``j_mode='tiled'`` replaces J with the stacked padded adjacency
     ``nbr_idx (B,N,D) i32, nbr_w (B,N,D) i32`` and streams (tile_n, N) J
     slabs per problem — no (B, N, N) buffer, admitting G77/G81-class N.
-    Both are bit-identical per problem to the default step (tested).
+    ``field_mode='popcount'`` (takes precedence over j_mode) replaces J
+    with the stacked `PackedJ` bitplanes ``sign (B,N,Nw) u32,
+    mags (B,nb,N,Nw) u32, base (B,N) i32`` and contracts by XNOR-popcount
+    (DESIGN.md §8) — exact-integer, ~32×/n_bits less J traffic.
+    All are bit-identical per problem to the default step (tested).
 
     Sharding caveat: the "spins over `model`" layout above applies to the
     dense-J step (the matmul contraction is what GSPMD partitions).  The
@@ -160,6 +165,8 @@ def make_batched_iteration_step(
         raise ValueError(f"unknown storage_layout {storage_layout!r}")
     if j_mode not in ("dense", "tiled"):
         raise ValueError(f"unknown j_mode {j_mode!r}")
+    if field_mode not in ("dense", "popcount"):
+        raise ValueError(f"unknown field_mode {field_mode!r}")
     plateaus = schedule_plateaus(hp.schedule("hassa"), "i0max")
 
     def constrain(x, spec):
@@ -169,7 +176,22 @@ def make_batched_iteration_step(
 
     def step(rng, m, itanh, best_H, best_m, *problem):
         n = itanh.shape[-1]
-        if j_mode == "tiled":
+        if field_mode == "popcount":
+            from repro.kernels.bitplane import PackedJ  # lazy, like engine
+
+            sign, mags, base, h = problem
+
+            def field_fn(m8):
+                # Like the tiled step: spins replicated over `model`, each
+                # device contracting its problems' bitplanes locally — the
+                # scale-out axis is the problem batch on `data`.
+                mw = pack_spins(constrain(m8, P("data", None, None)))
+                return jax.vmap(
+                    lambda w, hh, s, g, b: local_fields_popcount(
+                        w, hh, PackedJ(s, g, b)
+                    )
+                )(mw, h, sign, mags, base)
+        elif j_mode == "tiled":
             nbr_idx, nbr_w, h = problem
 
             def field_fn(m8):
@@ -223,11 +245,14 @@ def batched_anneal_step_lowering(
     j_mode: str = "dense",
     max_degree: int = 4,
     tile_n: int = 512,
+    field_mode: str = "dense",
+    j_bits: int = 1,
 ):
     """Lower+compile the batched iteration step (dry-run, no allocation)."""
     hp = hp or SSAHyperParams(n_trials=n_trials)
     step = make_batched_iteration_step(
-        hp, mesh, storage_layout=storage_layout, j_mode=j_mode, tile_n=tile_n
+        hp, mesh, storage_layout=storage_layout, j_mode=j_mode, tile_n=tile_n,
+        field_mode=field_mode,
     )
     B, T, N = n_problems, n_trials, n_spins
     dm = NamedSharding(mesh, P("data", None, "model"))
@@ -249,7 +274,19 @@ def batched_anneal_step_lowering(
         jax.ShapeDtypeStruct((B, T), jnp.int32),         # best_H
         bm_shape,                                        # best_m
     ]
-    if j_mode == "tiled":
+    if field_mode == "popcount":
+        jw = (N + 31) // 32
+        prob_shapes = [
+            jax.ShapeDtypeStruct((B, N, jw), jnp.uint32),          # sign
+            jax.ShapeDtypeStruct((B, j_bits, N, jw), jnp.uint32),  # mags
+            jax.ShapeDtypeStruct((B, N), jnp.int32),               # base
+        ]
+        prob_sh = [
+            NamedSharding(mesh, P("data", None, None)),
+            NamedSharding(mesh, P("data", None, None, None)),
+            NamedSharding(mesh, P("data", None)),
+        ]
+    elif j_mode == "tiled":
         prob_shapes = [
             jax.ShapeDtypeStruct((B, N, max_degree), jnp.int32),  # nbr_idx
             jax.ShapeDtypeStruct((B, N, max_degree), jnp.int32),  # nbr_w

@@ -64,6 +64,7 @@ from .ising import (
     IsingModel,
     MaxCutProblem,
     local_fields_dense,
+    local_fields_popcount,
     local_fields_sparse,
     local_fields_tiled,
 )
@@ -73,6 +74,8 @@ from .schedule import Schedule
 __all__ = [
     "BIG_ENERGY",
     "TILED_J_THRESHOLD",
+    "MIN_RESIDENT_N",
+    "POPCOUNT_AUTO_MAX_BITS",
     "BaseResult",
     "EngineState",
     "PackedEngineState",
@@ -85,8 +88,12 @@ __all__ = [
     "PallasBackend",
     "BACKENDS",
     "make_backend",
+    "resolve_backend",
+    "resolve_field_mode",
     "resolve_j_mode",
     "resolve_noise_mode",
+    "model_weight_bits",
+    "plateau_cycle_schedules",
     "normalize_problem",
     "validate_model",
     "MAX_MODEL_SPINS",
@@ -119,6 +126,17 @@ BIG_ENERGY = 2**30
 # resolves to the tiled path that streams (tile_n, N) slabs instead.
 TILED_J_THRESHOLD = 4096
 
+# Below this spin count the resident Pallas kernel's launch overhead beats
+# its residency win (measured: ~2.4 s pallas vs ~1.5 s dense on the 32-spin
+# frontend smokes) — backend='auto' dispatches the scan backends instead.
+# Asserted structurally in benchmarks/other_problems.py --smoke.
+MIN_RESIDENT_N = 256
+
+# field_mode='auto' uses the XNOR-popcount contraction up to this many
+# magnitude bitplanes (the paper's hardware is 4-bit); wider integer weights
+# fall back to the f32 matmul, whose cost is bit-depth independent.
+POPCOUNT_AUTO_MAX_BITS = 4
+
 
 # ---------------------------------------------------------------------------
 # Bit packing (the 800-bit BRAM word, as uint32 lanes) — the codec lives in
@@ -126,10 +144,18 @@ TILED_J_THRESHOLD = 4096
 # layout; re-exported here for the core-level callers.
 # ---------------------------------------------------------------------------
 from repro.kernels.bitplane import (  # noqa: E402
+    PackedJ,
+    adjacency_weight_bits,
+    pack_couplings_from_adjacency,
     pack_spins,
     packed_words,
     unpack_spins,
 )
+
+
+def model_weight_bits(model: IsingModel) -> int:
+    """Magnitude bitplanes a model's couplings need (coalesced max |J_ij|)."""
+    return adjacency_weight_bits(model.n, model.nbr_idx, model.nbr_w)
 
 
 # ---------------------------------------------------------------------------
@@ -317,6 +343,30 @@ def tile_plateaus(plateaus: Sequence[Plateau], total_cycles: int) -> Tuple[Plate
             out.append(Plateau(p.i0, take, p.eligible))
             remaining -= take
     return tuple(out)
+
+
+def plateau_cycle_schedules(plateaus: Sequence[Plateau]):
+    """Per-cycle schedule operands for the multi-plateau resident kernel.
+
+    Flattens a plateau chain into ``(i0_sched (C,), fold_sched (C+1,))``
+    int32 host arrays: ``i0_sched[c]`` is the I0 of cycle c, and
+    ``fold_sched[c]`` the storage write-enable of the plateau that
+    *produced* the state current at cycle c — 0 at c = 0 (the chain's
+    incoming state belongs to the previous chunk), eligibility of cycle
+    c−1's plateau for c ≥ 1, and ``fold_sched[C]`` covers the final state.
+    Feeding these to `ssa_plateau_popcount[_batched]` reproduces chained
+    per-plateau execution bit-identically in one launch.
+    """
+    i0s, elig = [], []
+    for p in plateaus:
+        i0s.extend([int(p.i0)] * int(p.length))
+        elig.extend([int(bool(p.eligible))] * int(p.length))
+    if not i0s:
+        raise ValueError("empty plateau chain")
+    return (
+        np.asarray(i0s, np.int32),
+        np.asarray([0] + elig, np.int32),
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -536,6 +586,20 @@ class PlateauBackend:
             track_energy=track_energy, emit=emit,
         )
 
+    def run_plateaus(self, state, plateaus: Sequence[Plateau]):
+        """Advance a whole plateau chain (record='best', no traces).
+
+        The default chains :meth:`run_plateau`; resident backends override
+        it to execute the chain in one launch (multi-plateau residency).
+        Bit-identical either way — the chain semantics are defined by the
+        per-plateau fold rules.
+        """
+        for p in plateaus:
+            state, _, _ = self.run_plateau(
+                state, p.i0, length=p.length, eligible=p.eligible,
+            )
+        return state
+
     def _run_plateau_dense(self, state, i0, *, length, eligible,
                            track_energy=False, emit=False):
         raise NotImplementedError
@@ -594,6 +658,32 @@ def resolve_j_mode(j_mode: str, n: int) -> str:
     return j_mode
 
 
+def resolve_field_mode(field_mode: str, j_bits: int) -> str:
+    """Field-contraction arithmetic: 'popcount' (XNOR-popcount on uint32
+    bitplanes, exact-integer) vs 'dense' (f32 matmul / tiled slabs).
+    'auto' uses popcount while the couplings fit POPCOUNT_AUTO_MAX_BITS
+    magnitude planes — the contraction costs one XNOR-popcount pass per
+    plane, so deep integer weights favor the bit-depth-independent matmul.
+    """
+    if field_mode == "auto":
+        return (
+            "popcount" if int(j_bits) <= POPCOUNT_AUTO_MAX_BITS else "dense"
+        )
+    if field_mode not in ("dense", "popcount"):
+        raise ValueError(f"unknown field_mode {field_mode!r}")
+    return field_mode
+
+
+def resolve_backend(backend: str, n: int) -> str:
+    """'auto' dispatches the resident Pallas kernel only at or above
+    MIN_RESIDENT_N spins; below it the launch overhead loses to the scan
+    backends (the measured 32-spin smoke regression), so 'auto' never does.
+    Non-'auto' names pass through untouched."""
+    if backend == "auto":
+        return "pallas" if int(n) >= MIN_RESIDENT_N else "dense"
+    return backend
+
+
 def resolve_noise_mode(noise_mode: str, noise: str) -> str:
     """Resident-kernel noise datapath: 'streamed' (in-kernel xorshift, no
     noise buffer) vs 'pregen' (the legacy per-plateau (C, R, N) buffer).
@@ -616,21 +706,47 @@ class DenseBackend(PlateauBackend):
     from the padded adjacency (:func:`repro.core.ising.local_fields_tiled`) —
     bit-identical, and the only way G77/G81-class N fits in memory.  'auto'
     (the default) switches at TILED_J_THRESHOLD spins.
+
+    ``field_mode`` selects the contraction *arithmetic*: 'popcount' packs J
+    as sign/magnitude bitplanes (`kernels.bitplane.PackedJ`, ~32× smaller
+    than f32 J) and computes fields by XNOR-popcount on the uint32 words
+    (:func:`repro.core.ising.local_fields_popcount`) — exact-integer equal
+    to the matmul, so results stay bit-identical.  'auto' uses popcount for
+    couplings within POPCOUNT_AUTO_MAX_BITS magnitude planes.  Under
+    popcount no J matrix (dense or tiled) is materialized at all.
     """
 
     name = "dense"
 
     def __init__(self, model: IsingModel, *, j_dtype=jnp.float32,
-                 j_mode: str = "auto", tile_n: int = 512, **kw):
+                 j_mode: str = "auto", tile_n: int = 512,
+                 field_mode: str = "dense", **kw):
         super().__init__(model, **kw)
         self.j_mode = resolve_j_mode(j_mode, model.n)
         self.tile_n = int(tile_n)
-        if self.j_mode == "dense":
+        self.field_mode = resolve_field_mode(
+            field_mode,
+            model_weight_bits(model) if field_mode == "auto" else 1,
+        )
+        if self.field_mode == "popcount":
+            self.packed_j = pack_couplings_from_adjacency(
+                model.n, model.nbr_idx, model.nbr_w
+            )
+            # Row-tile the contraction in the same regime the matmul would
+            # tile J: the broadcast XNOR buffer stays O(T·tile_n·N/32).
+            self._pc_tile = (
+                None if model.n <= TILED_J_THRESHOLD else self.tile_n
+            )
+        elif self.j_mode == "dense":
             self.J = jnp.asarray(model.dense_J(), j_dtype)
         else:
             _, self.nbr_idx, self.nbr_w = model.device_arrays()
 
     def _field(self, m):
+        if self.field_mode == "popcount":
+            return local_fields_popcount(
+                pack_spins(m), self.h, self.packed_j, tile_n=self._pc_tile
+            )
         if self.j_mode == "tiled":
             return local_fields_tiled(
                 m, self.h, self.nbr_idx, self.nbr_w, tile_n=self.tile_n
@@ -664,6 +780,15 @@ class PallasBackend(PlateauBackend):
     bit-identical scan path over the Pallas `local_field` kernel.  The
     production solve path — record='best', track_energy=False — is entirely
     resident.
+
+    ``field_mode='popcount'`` switches the resident kernel to the
+    bit-parallel chain kernel (:func:`~repro.kernels.ssa_update.
+    ssa_plateau_popcount`): J lives in VMEM as `PackedJ` bitplanes, the
+    contraction is XNOR-popcount on uint32 words, and — via
+    :meth:`run_plateaus` — a whole plateau chain runs in ONE `pallas_call`
+    (multi-plateau residency), amortizing launch overhead the way the dual-
+    BRAM FPGA overlaps streaming with compute.  Requires the streamed
+    (xorshift) noise path; no f32 J is ever materialized.
     """
 
     name = "pallas"
@@ -676,6 +801,7 @@ class PallasBackend(PlateauBackend):
         block_r: int = 8,
         interpret: Optional[bool] = None,
         noise_mode: str = "auto",
+        field_mode: str = "dense",
         **kw,
     ):
         super().__init__(model, **kw)
@@ -685,13 +811,68 @@ class PallasBackend(PlateauBackend):
 
         self._kops = kops
         self._kssa = kssa
-        self.J = jnp.asarray(model.dense_J(), j_dtype)
         self.block_r = int(block_r)
         self.interpret = interpret
         self.noise_mode = resolve_noise_mode(noise_mode, self.noise)
+        self.field_mode = resolve_field_mode(
+            field_mode,
+            model_weight_bits(model) if field_mode == "auto" else 1,
+        )
+        if self.field_mode == "popcount":
+            if self.noise_mode != "streamed":
+                raise ValueError(
+                    "field_mode='popcount' on the pallas backend requires "
+                    "noise_mode='streamed' (noise='xorshift'): the bit-"
+                    "parallel chain kernel generates its noise in-kernel"
+                )
+            self.packed_j = pack_couplings_from_adjacency(
+                model.n, model.nbr_idx, model.nbr_w
+            )
+        else:
+            self.J = jnp.asarray(model.dense_J(), j_dtype)
 
     def _field(self, m):
+        if self.field_mode == "popcount":
+            # Scan fallback (traces/trajectories) stays on the packed
+            # arithmetic — no f32 J exists in this mode at all.
+            return local_fields_popcount(pack_spins(m), self.h, self.packed_j)
         return self._kops.local_field(m.astype(jnp.float32), self.h, self.J)
+
+    def _popcount_call(self, mp, itanh, rng, i0_sched, fold_sched, bh, bmp):
+        pj = self.packed_j
+        return self._kssa.ssa_plateau_popcount(
+            mp, itanh, pj.sign, pj.mags, pj.base, self.h, rng,
+            jnp.asarray(i0_sched, jnp.int32),
+            jnp.asarray(fold_sched, jnp.int32),
+            bh, bmp,
+            n_rnd=self.n_rnd,
+            block_r=self.block_r,
+            interpret=self.interpret,
+        )
+
+    def run_plateaus(self, state, plateaus: Sequence[Plateau]):
+        """Whole-chain execution: one `pallas_call` for the full schedule.
+
+        Only the popcount kernel carries per-cycle I0/fold operands, so only
+        ``field_mode='popcount'`` gets true multi-plateau residency; other
+        configurations chain per-plateau launches via the default.
+        """
+        if self.field_mode != "popcount" or not plateaus:
+            return super().run_plateaus(state, plateaus)
+        packed = self.storage_layout == "packed"
+        mp = state.m_packed if packed else pack_spins(state.m)
+        bmp = state.best_m_packed if packed else pack_spins(state.best_m)
+        i0_sched, fold_sched = plateau_cycle_schedules(plateaus)
+        mp_o, it_o, rng_o, bh_o, bmp_o = self._popcount_call(
+            mp, state.itanh, state.noise_state, i0_sched, fold_sched,
+            state.best_H, bmp,
+        )
+        if packed:
+            return PackedEngineState(rng_o, mp_o, it_o, bh_o, bmp_o)
+        n = self.model.n
+        return EngineState(
+            rng_o, unpack_spins(mp_o, n), it_o, bh_o, unpack_spins(bmp_o, n)
+        )
 
     def _pregen_noise(self, ns, length: int):
         def draw(ns, _):
@@ -709,6 +890,31 @@ class PallasBackend(PlateauBackend):
                 track_energy=track_energy, emit=emit,
             )
             return (pack_state(st) if packed else st), trace, planes
+        if self.field_mode == "popcount":
+            # One plateau is a length-C chain with constant I0; i0 may be
+            # traced (broadcast), eligibility is static host data.
+            mp = state.m_packed if packed else pack_spins(state.m)
+            bmp = state.best_m_packed if packed else pack_spins(state.best_m)
+            i0_sched = jnp.broadcast_to(
+                jnp.asarray(i0, jnp.int32), (int(length),)
+            )
+            fold_sched = np.asarray(
+                [0] + [int(bool(eligible))] * int(length), np.int32
+            )
+            mp_o, it_o, rng_o, bh_o, bmp_o = self._popcount_call(
+                mp, state.itanh, state.noise_state, i0_sched, fold_sched,
+                state.best_H, bmp,
+            )
+            if packed:
+                return PackedEngineState(rng_o, mp_o, it_o, bh_o, bmp_o), None, None
+            n = self.model.n
+            return (
+                EngineState(
+                    rng_o, unpack_spins(mp_o, n), it_o, bh_o, unpack_spins(bmp_o, n)
+                ),
+                None,
+                None,
+            )
         if self.noise_mode == "streamed":
             # Streamed path: packed HBM refs, noise generated in-kernel.
             mp = state.m_packed if packed else pack_spins(state.m)
@@ -790,6 +996,8 @@ def make_backend(
     if isinstance(backend, type) and issubclass(backend, PlateauBackend):
         cls = backend
     else:
+        if isinstance(backend, str):
+            backend = resolve_backend(backend, model.n)
         try:
             cls = BACKENDS[backend]
         except (KeyError, TypeError):
@@ -824,6 +1032,11 @@ def run_schedule(
     over all cycles when track_energy, planes concatenated over eligible
     plateaus when record='traj'.
     """
+    if record == "best" and not track_energy:
+        # Production path: no per-plateau outputs, so the whole chain can be
+        # handed to the backend at once — resident backends execute it in a
+        # single launch (multi-plateau residency), bit-identically.
+        return backend.run_plateaus(state, tuple(plateaus)), None, None
     tr_mean, tr_min, planes = [], [], []
     for p in plateaus:
         if record == "traj":
@@ -1126,6 +1339,32 @@ def _stack_dense_models(models, n_bucket: int, j_dtype) -> dict:
     return {"h": jnp.stack(hs), "J": jnp.stack(Js)}
 
 
+def _stack_packed_models(models, n_bucket: int, j_bits: int) -> dict:
+    """Stacked, bucket-padded PackedJ views {h, sign, mags, base}.
+
+    ``j_bits`` forces the magnitude-plane count for *every* model so the
+    stacked ``mags`` tensor has one uniform shape (a program-structural
+    parameter — the executable cache keys on it); callers pass the group
+    maximum from :func:`repro.kernels.bitplane.adjacency_weight_bits`.
+    """
+    hs, signs, magss, bases = [], [], [], []
+    for m in models:
+        p = pad_model(m, n_bucket)
+        pj = pack_couplings_from_adjacency(
+            p.n, p.nbr_idx, p.nbr_w, n_bits=j_bits
+        )
+        hs.append(jnp.asarray(p.h, jnp.int32))
+        signs.append(pj.sign)
+        magss.append(pj.mags)
+        bases.append(pj.base)
+    return {
+        "h": jnp.stack(hs),
+        "sign": jnp.stack(signs),
+        "mags": jnp.stack(magss),
+        "base": jnp.stack(bases),
+    }
+
+
 class BatchedDenseBackend(_VmapBatchedBackend):
     """(T,N)·(N,N) matmul field per problem, vmapped over the problem axis.
 
@@ -1133,23 +1372,40 @@ class BatchedDenseBackend(_VmapBatchedBackend):
     adjacency instead of dense J and streams (tile_n, N) slabs per problem —
     no (B, N, N) buffer ever exists, which is what admits G77/G81-class
     buckets through the service.
+
+    ``field_mode='popcount'`` stacks `PackedJ` bitplanes instead (``j_bits``
+    magnitude planes each, the group maximum) and contracts by XNOR-popcount
+    — exact-integer equal to the matmul, ~32× less J traffic per problem.
     """
 
     name = "dense"
 
     def __init__(self, *, j_dtype=jnp.float32, j_mode: str = "auto",
-                 tile_n: int = 512, **kw):
+                 tile_n: int = 512, field_mode: str = "dense",
+                 j_bits: int = 1, **kw):
         super().__init__(**kw)
         self.j_dtype = j_dtype
         self.j_mode = resolve_j_mode(j_mode, self.n_bucket)
         self.tile_n = int(tile_n)
+        self.j_bits = int(j_bits)
+        self.field_mode = resolve_field_mode(field_mode, self.j_bits)
+        self._pc_tile = (
+            None if self.n_bucket <= TILED_J_THRESHOLD else self.tile_n
+        )
 
     def stack(self, models):
+        if self.field_mode == "popcount":
+            return _stack_packed_models(models, self.n_bucket, self.j_bits)
         if self.j_mode == "tiled":
             return _stack_sparse_models(models, self.n_bucket)
         return _stack_dense_models(models, self.n_bucket, self.j_dtype)
 
     def _field_one(self, prob, m):
+        if self.field_mode == "popcount":
+            pj = PackedJ(prob["sign"], prob["mags"], prob["base"])
+            return local_fields_popcount(
+                pack_spins(m), prob["h"], pj, tile_n=self._pc_tile
+            )
         if self.j_mode == "tiled":
             return local_fields_tiled(
                 m, prob["h"], prob["nbr_idx"], prob["nbr_w"], tile_n=self.tile_n
@@ -1170,13 +1426,19 @@ class BatchedPallasBackend(BatchedBackend):
     generated in-kernel from the carried lanes and the HBM-facing spin refs
     are uint32 bitplanes — no (B, C, T, N) noise buffer exists anywhere.
     ``threefry`` keeps per-plateau pregen (reference path only).
+
+    ``field_mode='popcount'`` upgrades to the bit-parallel chain kernel
+    (:func:`repro.kernels.ssa_update.ssa_plateau_popcount_batched`): J is
+    VMEM-resident as stacked `PackedJ` bitplanes (``j_bits`` planes, the
+    group maximum) and :meth:`run_shots` launches each full iteration's
+    plateau chain as ONE `pallas_call` — multi-plateau residency.
     """
 
     name = "pallas"
 
     def __init__(self, *, j_dtype=jnp.float32, block_r: int = 8,
                  interpret: Optional[bool] = None, noise_mode: str = "auto",
-                 **kw):
+                 field_mode: str = "dense", j_bits: int = 1, **kw):
         super().__init__(**kw)
         from repro.kernels import ssa_update as kssa  # lazy
 
@@ -1185,8 +1447,17 @@ class BatchedPallasBackend(BatchedBackend):
         self.block_r = int(block_r)
         self.interpret = interpret
         self.noise_mode = resolve_noise_mode(noise_mode, self.noise)
+        self.j_bits = int(j_bits)
+        self.field_mode = resolve_field_mode(field_mode, self.j_bits)
+        if self.field_mode == "popcount" and self.noise_mode != "streamed":
+            raise ValueError(
+                "field_mode='popcount' on the batched pallas backend "
+                "requires noise_mode='streamed' (noise='xorshift')"
+            )
 
     def stack(self, models):
+        if self.field_mode == "popcount":
+            return _stack_packed_models(models, self.n_bucket, self.j_bits)
         return _stack_dense_models(models, self.n_bucket, self.j_dtype)
 
     def _pregen(self, ns, length: int):
@@ -1215,6 +1486,26 @@ class BatchedPallasBackend(BatchedBackend):
         )
         return PackedEngineState(rng_o, mp_o, it_o, bh_o, bmp_o)
 
+    def _chain_popcount(self, problem, st: PackedEngineState, i0_sched,
+                        fold_sched) -> PackedEngineState:
+        mp_o, it_o, rng_o, bh_o, bmp_o = self._kssa.ssa_plateau_popcount_batched(
+            st.m_packed,
+            st.itanh,
+            problem["sign"],
+            problem["mags"],
+            problem["base"],
+            problem["h"],
+            st.noise_state,
+            jnp.asarray(i0_sched, jnp.int32),
+            jnp.asarray(fold_sched, jnp.int32),
+            st.best_H,
+            st.best_m_packed,
+            n_rnd=self.n_rnd,
+            block_r=self.block_r,
+            interpret=self.interpret,
+        )
+        return PackedEngineState(rng_o, mp_o, it_o, bh_o, bmp_o)
+
     def run_plateau(self, problem, state, i0, *, length, eligible):
         if self.noise_mode != "streamed":
             return super().run_plateau(
@@ -1222,7 +1513,16 @@ class BatchedPallasBackend(BatchedBackend):
             )
         packed_in = self.storage_layout == "packed"
         st = state if packed_in else pack_state(state)
-        st = self._plateau_packed(problem, st, i0, length, eligible)
+        if self.field_mode == "popcount":
+            i0_sched = jnp.broadcast_to(
+                jnp.asarray(i0, jnp.int32), (int(length),)
+            )
+            fold_sched = np.asarray(
+                [0] + [int(bool(eligible))] * int(length), np.int32
+            )
+            st = self._chain_popcount(problem, st, i0_sched, fold_sched)
+        else:
+            st = self._plateau_packed(problem, st, i0, length, eligible)
         return st if packed_in else unpack_state(st, self.n_bucket)
 
     def run_shots(self, problem, state, plateaus, n_shots):
@@ -1232,10 +1532,19 @@ class BatchedPallasBackend(BatchedBackend):
         packed_in = self.storage_layout == "packed"
         st = state if packed_in else pack_state(state)
 
-        def iteration(st, _):
-            for p in plateaus:
-                st = self._plateau_packed(problem, st, p.i0, p.length, p.eligible)
-            return st, None
+        if self.field_mode == "popcount":
+            # Multi-plateau residency: one launch per iteration, the whole
+            # plateau chain carried inside the kernel.
+            i0_sched, fold_sched = plateau_cycle_schedules(plateaus)
+
+            def iteration(st, _):
+                return self._chain_popcount(problem, st, i0_sched, fold_sched), None
+        else:
+
+            def iteration(st, _):
+                for p in plateaus:
+                    st = self._plateau_packed(problem, st, p.i0, p.length, p.eligible)
+                return st, None
 
         st, _ = jax.lax.scan(iteration, st, None, length=n_shots)
         return st if packed_in else unpack_state(st, self.n_bucket)
@@ -1287,6 +1596,8 @@ def make_batched_backend(
     noise: str = "xorshift",
     **opts,
 ) -> BatchedBackend:
+    if isinstance(backend, str):
+        backend = resolve_backend(backend, n_bucket)
     try:
         cls = BATCHED_BACKENDS[backend]
     except (KeyError, TypeError):

@@ -23,9 +23,24 @@ identically inside kernel bodies (interpret mode and Mosaic share the ops).
 Tail handling: for N not a multiple of 32 the last word's high bits are
 zero-padded on pack and sliced off on unpack — roundtrip-exact for any N
 (property-tested in tests/test_bitplane.py).
+
+Since PR 7 the bitplane is also the *arithmetic* format, not just storage:
+:class:`PackedJ` packs the coupling matrix itself as a sign plane plus
+magnitude bitplanes (integer weights = a sum of shifted ±1 planes), and
+:func:`popcount_u32` is the primitive the XNOR-popcount field contraction
+(`repro.core.ising.local_fields_popcount`) is built from.  The FPGA
+identity per coupling plane is
+
+    sum_j sign_ij * m_j  =  2 * popcount(XNOR(m_words, sign_words) & mask)
+                            - popcount(mask)
+
+— 32 spins per word op, no unpack to f32 anywhere on the path.
 """
 from __future__ import annotations
 
+from typing import NamedTuple
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -34,6 +49,12 @@ __all__ = [
     "pack_spins",
     "unpack_spins",
     "packed_nbytes",
+    "popcount_u32",
+    "PackedJ",
+    "pack_couplings",
+    "pack_couplings_from_adjacency",
+    "adjacency_weight_bits",
+    "packed_j_nbytes",
 ]
 
 # Host constant (never a traced value, safe under jit) — jnp ops accept it.
@@ -77,3 +98,175 @@ def unpack_spins(packed: jnp.ndarray, n: int) -> jnp.ndarray:
     bits = (packed[..., None] >> _shifts()) & jnp.uint32(1)
     flat = bits.reshape(bits.shape[:-2] + (-1,))[..., :n]
     return jnp.where(flat == 1, 1, -1).astype(jnp.int8)
+
+
+def popcount_u32(x: jnp.ndarray) -> jnp.ndarray:
+    """Per-word population count of uint32 words, as int32.
+
+    The single arithmetic primitive of the XNOR-popcount field path — one
+    VPU op covering 32 spins.  Rejects non-uint32 inputs instead of
+    casting: a silent widen would mean the caller left the packed domain.
+    """
+    if x.dtype != jnp.uint32:
+        raise TypeError(f"popcount_u32 expects uint32 words, got {x.dtype}")
+    return jax.lax.population_count(x).astype(jnp.int32)
+
+
+class PackedJ(NamedTuple):
+    """Coupling matrix as bitplanes: the XNOR-popcount operand layout.
+
+    For a symmetric integer J (the same row convention as the sparse
+    adjacency — ``field_i = h_i + sum_j J_ij m_j``):
+
+    sign:  (N, Nw) uint32 — bit j of row i is 1 ⇔ J_ij > 0.
+    mags:  (n_bits, N, Nw) uint32 — bit j of plane b row i is bit b of
+           |J_ij|; plane b is the mask of couplings whose magnitude has
+           that binary digit, so J = Σ_b 2^b · (±1 plane b).
+    base:  (N,) int32 — −Σ_b 2^b · popcount(mags[b, i]) , the constant
+           −degree terms of every plane folded into one vector, so
+
+               field = h + base + Σ_b 2^{b+1} · popcount(XNOR & mags[b])
+
+    All tail/padding bits (column ≥ N) are zero in every plane, which makes
+    the contraction immune to garbage in the spin words' tail bits: the
+    AND with the magnitude mask kills them.  ±1-weight instances (all of
+    G-set) have n_bits == 1 — a single XNOR-popcount per row.
+    """
+
+    sign: jnp.ndarray
+    mags: jnp.ndarray
+    base: jnp.ndarray
+
+    @property
+    def n_bits(self) -> int:
+        return self.mags.shape[0]
+
+    @property
+    def n_words(self) -> int:
+        return self.sign.shape[-1]
+
+
+def _pack_bits_np(bits: np.ndarray) -> np.ndarray:
+    """Host-side pack of a 0/1 array [..., N] into uint32 words."""
+    n = bits.shape[-1]
+    nw = packed_words(n)
+    pad = nw * 32 - n
+    b = bits.astype(np.uint32)
+    if pad:
+        b = np.concatenate(
+            [b, np.zeros(b.shape[:-1] + (pad,), np.uint32)], axis=-1
+        )
+    b = b.reshape(b.shape[:-1] + (nw, 32))
+    return (b << _SHIFTS).sum(axis=-1, dtype=np.uint32)
+
+
+def _popcount_np(words: np.ndarray) -> np.ndarray:
+    """Host-side popcount summed over the word axis: [..., Nw] -> [...]."""
+    u8 = np.ascontiguousarray(words).view(np.uint8)
+    return np.unpackbits(u8, axis=-1).sum(axis=-1, dtype=np.int64)
+
+
+def _resolve_n_bits(max_mag: int, n_bits) -> int:
+    need = max(1, int(max_mag).bit_length())
+    if n_bits is None:
+        return need
+    n_bits = int(n_bits)
+    if n_bits < need:
+        raise ValueError(
+            f"couplings need {need} magnitude bitplanes, caller forced "
+            f"{n_bits} — weights up to {max_mag} cannot be represented"
+        )
+    return n_bits
+
+
+def pack_couplings(J: np.ndarray, n_bits=None) -> PackedJ:
+    """Pack a dense symmetric integer coupling matrix into bitplanes.
+
+    Raises on non-integral weights — the popcount path is exact-integer by
+    construction and refuses inputs it cannot represent exactly.  ``n_bits``
+    forces the magnitude-plane count (zero planes pad the top) so stacked
+    problems share one layout; it must cover max|J|.
+    """
+    J = np.asarray(J)
+    Ji = np.asarray(np.rint(J), dtype=np.int64)
+    if not np.array_equal(Ji, np.asarray(J, dtype=np.float64)):
+        raise ValueError("pack_couplings requires integer weights")
+    mag = np.abs(Ji)
+    n_bits = _resolve_n_bits(mag.max(initial=0), n_bits)
+    sign = _pack_bits_np(Ji > 0)
+    mags = np.stack(
+        [_pack_bits_np((mag >> b) & 1) for b in range(n_bits)]
+    )
+    degs = _popcount_np(mags)  # (n_bits, N)
+    shifts = (np.int64(1) << np.arange(n_bits, dtype=np.int64))[:, None]
+    base = -(degs * shifts).sum(axis=0).astype(np.int32)
+    return PackedJ(jnp.asarray(sign), jnp.asarray(mags), jnp.asarray(base))
+
+
+def _coalesced_adjacency(n: int, nbr_idx, nbr_w):
+    """(rows, cols, weights) with duplicate (i, j) slots weight-summed."""
+    idx = np.asarray(nbr_idx, dtype=np.int64)
+    w = np.asarray(nbr_w, dtype=np.int64)
+    rows = np.broadcast_to(np.arange(n, dtype=np.int64)[:, None], idx.shape)
+    live = w != 0
+    keys = rows[live] * n + idx[live]
+    uniq, inv = np.unique(keys, return_inverse=True)
+    wsum = np.zeros(uniq.shape[0], dtype=np.int64)
+    np.add.at(wsum, inv, w[live])
+    nz = wsum != 0
+    uniq, wsum = uniq[nz], wsum[nz]
+    return uniq // n, uniq % n, wsum
+
+
+def adjacency_weight_bits(n: int, nbr_idx, nbr_w) -> int:
+    """Magnitude bitplanes needed for a model's couplings (≥ 1).
+
+    Operates on the *coalesced* weights (duplicate adjacency slots summed,
+    matching ``IsingModel.dense_J``), so the answer is exactly the plane
+    count :func:`pack_couplings_from_adjacency` would produce.  This is the
+    number `field_mode='auto'` compares against POPCOUNT_AUTO_MAX_BITS.
+    """
+    _, _, wsum = _coalesced_adjacency(int(n), nbr_idx, nbr_w)
+    return max(1, int(np.abs(wsum).max(initial=0)).bit_length())
+
+
+def pack_couplings_from_adjacency(
+    n: int, nbr_idx: np.ndarray, nbr_w: np.ndarray, n_bits=None
+) -> PackedJ:
+    """Pack couplings from the padded adjacency without materializing J.
+
+    ``nbr_idx``/``nbr_w`` are the `IsingModel` padded neighbor lists
+    (weight 0 = padding slot).  Duplicate (i, j) entries are weight-summed
+    first, matching ``IsingModel.dense_J``.  O(N·max_deg) host work — this
+    is the constructor the 20k-spin instances use.
+    """
+    n = int(n)
+    nw = packed_words(n)
+    r, c, wsum = _coalesced_adjacency(n, nbr_idx, nbr_w)
+    word, bit = c // 32, (c % 32).astype(np.uint32)
+
+    mag = np.abs(wsum)
+    n_bits = _resolve_n_bits(mag.max(initial=0), n_bits)
+    sign = np.zeros((n, nw), np.uint32)
+    pos = wsum > 0
+    np.bitwise_or.at(
+        sign, (r[pos], word[pos]), np.uint32(1) << bit[pos]
+    )
+    mags = np.zeros((n_bits, n, nw), np.uint32)
+    base = np.zeros(n, np.int64)
+    for b in range(n_bits):
+        sel = ((mag >> b) & 1) == 1
+        np.bitwise_or.at(
+            mags[b], (r[sel], word[sel]), np.uint32(1) << bit[sel]
+        )
+        np.add.at(base, r[sel], -(np.int64(1) << b))
+    return PackedJ(
+        jnp.asarray(sign), jnp.asarray(mags),
+        jnp.asarray(base.astype(np.int32)),
+    )
+
+
+def packed_j_nbytes(n: int, n_bits: int = 1) -> int:
+    """Bytes of a PackedJ layout: sign + n_bits magnitude planes + base."""
+    nw = packed_words(n)
+    return 4 * n * nw * (1 + int(n_bits)) + 4 * int(n)

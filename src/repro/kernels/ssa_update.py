@@ -33,6 +33,16 @@ kernels:
   buffer is gone entirely and per-plateau HBM traffic is O(R·N) lanes +
   O(R·N/32) packed spins.  The production path for xorshift noise.
 
+* :func:`ssa_plateau_popcount` / :func:`ssa_plateau_popcount_batched` — the
+  **bit-parallel multi-plateau** kernel (DESIGN.md §8): the field
+  contraction itself runs on the bitplanes via XNOR-popcount against a
+  packed-J sign/magnitude layout (`repro.kernels.bitplane.PackedJ`), 32
+  spins per word op, no f32 anywhere in the body (the MXU is idle — this is
+  the software twin of the FPGA's XNOR/popcount adder tree).  One launch
+  additionally carries I0 and eligibility across an *entire plateau chain*
+  (per-cycle schedule operands), so a full iteration costs one kernel
+  dispatch instead of one per plateau — the small-N launch-overhead fix.
+
 All are validated against :mod:`.ref` oracles / the scan engine in
 interpret mode (CPU) over a shape/dtype sweep; TPU is the compile target.
 """
@@ -52,6 +62,8 @@ __all__ = [
     "ssa_plateau_batched",
     "ssa_plateau_packed",
     "ssa_plateau_packed_batched",
+    "ssa_plateau_popcount",
+    "ssa_plateau_popcount_batched",
     "pad_to",
     "DEFAULT_INTERPRET",
 ]
@@ -584,3 +596,305 @@ def ssa_plateau(
         interpret=interpret,
     )
     return m_o[0], it_o[0], bh_o[0], bm_o[0]
+
+
+# ---------------------------------------------------------------------------
+# Kernel D: bit-parallel multi-plateau kernel — XNOR-popcount field, all-int
+# ---------------------------------------------------------------------------
+def _unpack_pm1_i32(words: jnp.ndarray) -> jnp.ndarray:
+    """Kernel-side codec: (bR, Nw) u32 words → (bR, 32·Nw) int32 spins ±1."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    flat = bits.reshape(words.shape[0], -1)
+    return jnp.where(flat == 1, 1, -1).astype(jnp.int32)
+
+
+def _pack_bits(bits: jnp.ndarray) -> jnp.ndarray:
+    """Kernel-side codec: (bR, N) bool sign bits → (bR, N/32) u32 words."""
+    b = bits.astype(jnp.uint32).reshape(bits.shape[0], -1, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(b << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def _plateau_popcount_kernel(
+    i0_ref,      # (1, C)   int32   per-cycle I0 schedule (whole chain)
+    fold_ref,    # (1, C+1) int32   per-state storage write-enable
+    mp_ref,      # (1, bR, Nwp) uint32  spins, packed sign bits
+    it_ref,      # (1, bR, Np)  int32   Itanh state
+    sign_ref,    # (1, Np, Nwp) uint32  packed-J sign plane of THIS problem
+    mags_ref,    # (1, nb, Np, Nwp) uint32  packed-J magnitude bitplanes
+    base_ref,    # (1, 1, Np)  int32   −Σ_b 2^b·deg_b (PackedJ.base)
+    h_ref,       # (1, 1, Np)  int32   biases
+    rng_ref,     # (1, 4, bR, Np) uint32 xorshift128 lanes (carried)
+    bh_ref,      # (1, bR, 1)  int32   running best energy (input)
+    bmp_ref,     # (1, bR, Nwp) uint32 running best spins, packed (input)
+    mp_out,      # (1, bR, Nwp) uint32
+    it_out,      # (1, bR, Np)  int32
+    rng_out,     # (1, 4, bR, Np) uint32
+    bh_out,      # (1, bR, 1)  int32
+    bmp_out,     # (1, bR, Nwp) uint32
+    mw_s,        # scratch (bR, Nwp) uint32  packed current spins
+    m_s,         # scratch (bR, Np) int32    ±1 current spins (energy dots)
+    it_s,        # scratch (bR, Np) int32
+    rng_s,       # scratch (4, bR, Np) uint32
+    bh_s,        # scratch (bR, 1) int32
+    bmw_s,       # scratch (bR, Nwp) uint32  packed best spins
+    *,
+    n_cycles: int,
+    n_rnd: int,
+    field_tile: int,
+):
+    """A whole plateau *chain* with the field computed on bitplanes.
+
+    Two departures from the streamed kernel above:
+
+    * The contraction is XNOR-popcount against the resident packed-J planes
+      — `field = h + base + Σ_b 2^{b+1}·popcount(XNOR(m, sign) & mag_b)` —
+      entirely uint32/int32; there is no f32 value (and no MXU op) in this
+      body.  Best spins are tracked *packed* (one uint32 select per word).
+    * The launch covers C cycles spanning several plateaus: ``i0_ref`` holds
+      the per-cycle I0 and ``fold_ref[c]`` the storage write-enable of the
+      plateau that *produced* the state current at cycle c (fold[0] = 0 —
+      the chain's incoming state belongs to the previous chunk; fold[C]
+      covers the final state, folded in the epilogue).  Bit-identical to
+      chaining one launch per plateau, minus the per-boundary re-dispatch
+      and duplicate field evaluation.
+    """
+    mw_s[...] = mp_ref[0]
+    m_s[...] = _unpack_pm1_i32(mp_ref[0])
+    it_s[...] = it_ref[0]
+    rng_s[...] = rng_ref[0]
+    bh_s[...] = bh_ref[0]
+    bmw_s[...] = bmp_ref[0]
+    sg = sign_ref[0]          # (Np, Nwp)
+    mg = mags_ref[0]          # (nb, Np, Nwp)
+    hf = h_ref[0]             # (1, Np) int32
+    hb = hf + base_ref[0]     # field constant: h + base
+    nsg = ~sg                 # XNOR(a, b) = a ^ ~b
+    nb = mg.shape[0]
+    n_pad = sg.shape[0]
+    br = mw_s.shape[0]
+    nt = n_pad // field_tile
+    one = jnp.uint32(1)
+
+    def field_of(mw):
+        """(bR, Nwp) packed spins → (bR, Np) int32 fields, row-tiled."""
+
+        def tile_body(t, acc):
+            off = t * field_tile
+            st = jax.lax.dynamic_slice_in_dim(nsg, off, field_tile, axis=0)
+            xs = mw[:, None, :] ^ st[None]       # (bR, tile, Nwp) XNOR words
+            f = jnp.zeros((br, field_tile), jnp.int32)
+            for b in range(nb):
+                mt = jax.lax.dynamic_slice_in_dim(
+                    mg[b], off, field_tile, axis=0
+                )
+                pc = jnp.sum(
+                    jax.lax.population_count(xs & mt[None]).astype(jnp.int32),
+                    axis=-1,
+                )
+                f = f + (pc << (b + 1))
+            return jax.lax.dynamic_update_slice_in_dim(acc, f, off, axis=1)
+
+        acc = jax.lax.fori_loop(
+            0, nt, tile_body, jnp.zeros((br, n_pad), jnp.int32)
+        )
+        return acc + hb
+
+    def track_best(fold, field):
+        # H = -(h·m + m·field)/2, exact int32 (the sum is always even).
+        hm = jnp.sum(hf * m_s[...], axis=-1, keepdims=True)
+        mf_ = jnp.sum(m_s[...] * field, axis=-1, keepdims=True)
+        H = -(hm + mf_) // 2
+        better = (fold > 0) & (H < bh_s[...])
+        bh_s[...] = jnp.where(better, H, bh_s[...])
+        bmw_s[...] = jnp.where(better, mw_s[...], bmw_s[...])
+
+    def body(c, _):
+        field = field_of(mw_s[...])
+        # m_s holds the state current at cycle c; fold_ref[c] is the
+        # write-enable of the plateau that produced it (0 at c == 0).
+        track_best(fold_ref[0, c], field)
+
+        x, y, z, w = rng_s[0], rng_s[1], rng_s[2], rng_s[3]
+        t = x ^ (x << jnp.uint32(11))
+        w_new = (w ^ (w >> jnp.uint32(19))) ^ (t ^ (t >> jnp.uint32(8)))
+        rng_s[0] = y
+        rng_s[1] = z
+        rng_s[2] = w
+        rng_s[3] = w_new
+        r = jnp.where((w_new >> jnp.uint32(31)) & one, 1, -1).astype(jnp.int32)
+
+        i0 = i0_ref[0, c]
+        I = field + n_rnd * r + it_s[...]  # noqa: E741 — Eq. (2a)
+        it_new = jnp.clip(I, -i0, i0 - 1)
+        it_s[...] = it_new
+        bits = it_new >= 0
+        m_s[...] = jnp.where(bits, 1, -1).astype(jnp.int32)
+        mw_s[...] = _pack_bits(bits)
+        return 0
+
+    jax.lax.fori_loop(0, n_cycles, body, 0)
+    # Final state of the chain: one epilogue field for its energy.
+    field = field_of(mw_s[...])
+    track_best(fold_ref[0, n_cycles], field)
+
+    mp_out[...] = mw_s[...][None]
+    it_out[...] = it_s[...][None]
+    rng_out[...] = rng_s[...][None]
+    bh_out[...] = bh_s[...][None]
+    bmp_out[...] = bmw_s[...][None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_rnd", "block_r", "field_tile", "interpret"),
+)
+def ssa_plateau_popcount_batched(
+    m_packed: jnp.ndarray,   # (B, R, Nw) uint32 packed ±1 spins
+    itanh: jnp.ndarray,      # (B, R, N) int32
+    sign: jnp.ndarray,       # (B, N, Nw) uint32 packed-J sign plane
+    mags: jnp.ndarray,       # (B, nb, N, Nw) uint32 packed-J magnitude planes
+    base: jnp.ndarray,       # (B, N) int32 PackedJ.base (−Σ 2^b·deg_b)
+    h: jnp.ndarray,          # (B, N) int32
+    rng: jnp.ndarray,        # (B, 4, R, N) uint32 xorshift lanes (carried)
+    i0_sched: jnp.ndarray,   # (C,) int32 per-cycle I0 over the whole chain
+    fold_sched: jnp.ndarray,  # (C+1,) int32 per-state fold mask
+    best_H: jnp.ndarray,     # (B, R) int32
+    best_m_packed: jnp.ndarray,  # (B, R, Nw) uint32
+    *,
+    n_rnd: int = 2,
+    block_r: int = 8,
+    field_tile: int = 128,
+    interpret: Optional[bool] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Bit-parallel resident chain for B stacked problems (multi-plateau).
+
+    Runs ``C = len(i0_sched)`` cycles — typically a full iteration's plateau
+    chain — in ONE `pallas_call`, with the coupling matrix resident as
+    packed bitplanes (`PackedJ` layout: ~n_bits·N²/32 words instead of N²
+    floats) and the field contraction done by XNOR-popcount.  Schedule
+    operands come from :func:`repro.core.engine.plateau_cycle_schedules`.
+    Bit-identical to running the same chain plateau-by-plateau through any
+    other backend (property-tested in tests/test_popcount.py).
+
+    Returns (m_packed, itanh, rng, best_H, best_m_packed) after the chain.
+    """
+    interpret = DEFAULT_INTERPRET if interpret is None else interpret
+    B, R, N = itanh.shape
+    C = i0_sched.shape[0]
+    nb = mags.shape[1]
+    LANE = 128
+    Np = N + (-N) % LANE
+    Nwp = Np // 32
+    if Np % field_tile:
+        raise ValueError(
+            f"field_tile {field_tile} must divide padded width {Np}"
+        )
+    mp = pad_to(pad_to(m_packed, 2, Nwp), 1, block_r)
+    bmp = pad_to(pad_to(best_m_packed, 2, Nwp), 1, block_r)
+    itp = pad_to(pad_to(itanh, 2, LANE), 1, block_r)
+    # Padded J rows/words are zero in every plane: pad columns contribute 0
+    # to every field regardless of the spin words' tail-bit garbage.
+    signp = pad_to(pad_to(sign, 1, LANE), 2, Nwp)
+    magsp = pad_to(pad_to(mags, 2, LANE), 3, Nwp)
+    basep = pad_to(base.astype(jnp.int32).reshape(B, 1, -1), 2, LANE)
+    hp = pad_to(h.astype(jnp.int32).reshape(B, 1, -1), 2, LANE)
+    rngp = pad_to(pad_to(rng, 3, LANE), 2, block_r)
+    bhp = pad_to(best_H.reshape(B, -1, 1), 1, block_r)
+    Rp = itp.shape[1]
+    grid = (B, Rp // block_r)
+    i0a = jnp.asarray(i0_sched, jnp.int32).reshape(1, C)
+    folda = jnp.asarray(fold_sched, jnp.int32).reshape(1, C + 1)
+
+    kernel = functools.partial(
+        _plateau_popcount_kernel, n_cycles=C, n_rnd=n_rnd,
+        field_tile=field_tile,
+    )
+    mp_o, it_o, rng_o, bh_o, bmp_o = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, C), lambda b, i: (0, 0)),
+            pl.BlockSpec((1, C + 1), lambda b, i: (0, 0)),
+            pl.BlockSpec((1, block_r, Nwp), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_r, Np), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, Np, Nwp), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, nb, Np, Nwp), lambda b, i: (b, 0, 0, 0)),
+            pl.BlockSpec((1, 1, Np), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, 1, Np), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, 4, block_r, Np), lambda b, i: (b, 0, i, 0)),
+            pl.BlockSpec((1, block_r, 1), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_r, Nwp), lambda b, i: (b, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_r, Nwp), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_r, Np), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, 4, block_r, Np), lambda b, i: (b, 0, i, 0)),
+            pl.BlockSpec((1, block_r, 1), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_r, Nwp), lambda b, i: (b, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Rp, Nwp), jnp.uint32),
+            jax.ShapeDtypeStruct((B, Rp, Np), jnp.int32),
+            jax.ShapeDtypeStruct((B, 4, Rp, Np), jnp.uint32),
+            jax.ShapeDtypeStruct((B, Rp, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, Rp, Nwp), jnp.uint32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_r, Nwp), jnp.uint32),
+            pltpu.VMEM((block_r, Np), jnp.int32),
+            pltpu.VMEM((block_r, Np), jnp.int32),
+            pltpu.VMEM((4, block_r, Np), jnp.uint32),
+            pltpu.VMEM((block_r, 1), jnp.int32),
+            pltpu.VMEM((block_r, Nwp), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(i0a, folda, mp, itp, signp, magsp, basep, hp, rngp, bhp, bmp)
+    nw = (N + 31) // 32
+    return (
+        mp_o[:, :R, :nw],
+        it_o[:, :R, :N],
+        rng_o[:, :, :R, :N],
+        bh_o[:, :R, 0],
+        bmp_o[:, :R, :nw],
+    )
+
+
+def ssa_plateau_popcount(
+    m_packed: jnp.ndarray,   # (R, Nw) uint32
+    itanh: jnp.ndarray,      # (R, N) int32
+    sign: jnp.ndarray,       # (N, Nw) uint32
+    mags: jnp.ndarray,       # (nb, N, Nw) uint32
+    base: jnp.ndarray,       # (N,) int32
+    h: jnp.ndarray,          # (N,) int32
+    rng: jnp.ndarray,        # (4, R, N) uint32
+    i0_sched: jnp.ndarray,   # (C,) int32
+    fold_sched: jnp.ndarray,  # (C+1,) int32
+    best_H: jnp.ndarray,     # (R,) int32
+    best_m_packed: jnp.ndarray,  # (R, Nw) uint32
+    *,
+    n_rnd: int = 2,
+    block_r: int = 8,
+    field_tile: int = 128,
+    interpret: Optional[bool] = None,
+):
+    """B=1 slice of :func:`ssa_plateau_popcount_batched` (one kernel body)."""
+    mp, it, rs, bh, bmp = ssa_plateau_popcount_batched(
+        m_packed[None],
+        itanh[None],
+        sign[None],
+        mags[None],
+        base[None],
+        h[None],
+        rng[None],
+        i0_sched,
+        fold_sched,
+        best_H[None],
+        best_m_packed[None],
+        n_rnd=n_rnd,
+        block_r=block_r,
+        field_tile=field_tile,
+        interpret=interpret,
+    )
+    return mp[0], it[0], rs[0], bh[0], bmp[0]

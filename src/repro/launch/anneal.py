@@ -41,6 +41,13 @@ def _resilience_policy(args):
                             fallback=not args.no_fallback)
 
 
+def _backend_opts(args):
+    """--field-mode reaches the field-capable backends; sparse ignores it."""
+    if args.field_mode != "dense" and args.backend != "sparse":
+        return {"field_mode": args.field_mode}
+    return {}
+
+
 def _run_service(problem_names, hp, args):
     from repro.serve import AnnealRequest, AnnealService
 
@@ -55,6 +62,7 @@ def _run_service(problem_names, hp, args):
     svc = AnnealService(backend=args.backend, noise=args.noise,
                         storage_layout=args.storage_layout,
                         chunk_shots=args.chunk_shots,
+                        backend_opts=_backend_opts(args),
                         resilience=_resilience_policy(args))
 
     def progress(ev):
@@ -112,6 +120,7 @@ def _run_problem_kind(hp, args):
     svc = AnnealService(backend=args.backend, noise=args.noise,
                         storage_layout=args.storage_layout,
                         chunk_shots=args.chunk_shots,
+                        backend_opts=_backend_opts(args),
                         resilience=_resilience_policy(args))
     t0 = time.time()
     responses = svc.solve(requests)
@@ -178,8 +187,16 @@ def main():
                     default="dense",
                     help="HBM-resident engine state: int8 spins or uint32 "
                          "bitplanes (DESIGN.md §4; bit-identical results)")
-    ap.add_argument("--backend", choices=("sparse", "dense", "pallas"),
-                    default="sparse")
+    ap.add_argument("--backend", choices=("sparse", "dense", "pallas", "auto"),
+                    default="sparse",
+                    help="'auto' picks pallas at/above MIN_RESIDENT_N spins, "
+                         "dense below (the small-N launch-overhead rule)")
+    ap.add_argument("--field-mode", choices=("dense", "popcount", "auto"),
+                    default="dense",
+                    help="field contraction arithmetic (dense/pallas "
+                         "backends): 'popcount' = XNOR-popcount on uint32 "
+                         "bitplanes (DESIGN.md §8; bit-identical results), "
+                         "'auto' by coupling bit depth")
     ap.add_argument("--record", choices=("best", "traj"), default="best")
     ap.add_argument("--track-energy", action="store_true",
                     help="record per-cycle energy traces (scan path)")
@@ -210,6 +227,7 @@ def main():
     r = anneal(p, hp, seed=args.seed, storage=args.storage, record=args.record,
                backend=args.backend, noise=args.noise,
                storage_layout=args.storage_layout,
+               backend_opts=_backend_opts(args),
                track_energy=args.track_energy)
     dt = time.time() - t0
     spin_cycles = hp.total_cycles * hp.n_trials

@@ -99,8 +99,11 @@ from repro.core.engine import (
     bucket_n,
     finalize_cut,
     make_batched_backend,
+    model_weight_bits,
     next_pow2,
     normalize_problem,
+    resolve_backend,
+    resolve_field_mode,
     schedule_plateaus,
     validate_model,
 )
@@ -125,6 +128,7 @@ from .resilience import (
     ServiceEvent,
     classify_fault,
     fallback_step,
+    filter_backend_opts,
     group_fingerprint,
 )
 
@@ -319,10 +323,18 @@ class AnnealService:
     ):
         """``storage_layout='packed'`` keeps the HBM-resident engine state
         between chunk launches as uint32 spin bitplanes (DESIGN.md §4).
-        ``resilience`` configures checkpointing/fallback/retry (defaults:
-        fallback + admission validation on, checkpointing off); ``faults``
-        attaches a fault injector whose hook points the service fires
-        (testing/chaos only — never set in production).
+        ``backend='auto'`` resolves per shape bucket (resident pallas at or
+        above ``engine.MIN_RESIDENT_N`` spins, dense below — the small-N
+        launch-overhead rule), filtering ``backend_opts`` to whatever the
+        chosen backend accepts.  ``backend_opts={'field_mode': 'auto'}``
+        additionally resolves the XNOR-popcount contraction per group
+        (DESIGN.md §8): groups whose couplings fit
+        ``engine.POPCOUNT_AUTO_MAX_BITS`` magnitude bitplanes run bit-
+        parallel, with the group's plane count folded into the executable-
+        cache key.  ``resilience`` configures checkpointing/fallback/retry
+        (defaults: fallback + admission validation on, checkpointing off);
+        ``faults`` attaches a fault injector whose hook points the service
+        fires (testing/chaos only — never set in production).
         """
         if storage_layout not in ("dense", "packed"):
             raise ValueError(f"unknown storage_layout {storage_layout!r}")
@@ -437,6 +449,27 @@ class AnnealService:
             return ("ptssa", nb, hp)
         raise TypeError(f"unsupported hyperparameter type {type(hp).__name__}")
 
+    def _resolve_field_opts(self, backend: str, opts: dict, items) -> dict:
+        """Resolve field_mode='auto' + group ``j_bits`` for one request group.
+
+        The popcount contraction's magnitude-plane count is program-
+        structural (the stacked ``mags`` tensor's shape), so it must be
+        uniform across the group: every model packs to the group maximum.
+        The resolved values land in the opts dict — and therefore in the
+        executable-cache key via ``_opts_key`` — so a ±1 group and a 3-bit
+        group never collide on one compiled program.
+        """
+        if backend not in ("dense", "pallas") or "field_mode" not in opts:
+            return dict(opts)
+        opts = dict(opts)
+        jb = max(model_weight_bits(model) for _, _, _, model in items)
+        opts["field_mode"] = resolve_field_mode(opts["field_mode"], jb)
+        if opts["field_mode"] == "popcount":
+            opts["j_bits"] = max(jb, int(opts.get("j_bits", 1)))
+        else:
+            opts.pop("j_bits", None)
+        return opts
+
     def _pad_group(self, items):
         """Pad a request group to a power-of-two batch (executable reuse).
 
@@ -465,6 +498,11 @@ class AnnealService:
                   "sa": self._solve_sa_group,
                   "ptssa": self._solve_ptssa_group}[kind]
         backend, opts = self.backend, dict(self.backend_opts)
+        if backend == "auto":
+            # Resolve per bucket (MIN_RESIDENT_N rule) and drop any opts the
+            # chosen backend doesn't accept — 'auto' users pass a union.
+            backend = resolve_backend(backend, nb)
+            opts = filter_backend_opts(backend, opts)
         carried_events: List[ServiceEvent] = []
         while True:
             ctx = _GroupCtx(self, kind, nb, items, backend, opts, solve_t0,
@@ -602,6 +640,7 @@ class AnnealService:
         padded, b_live, b_bucket = self._pad_group(items)
         sig = self._group_key(req0, nb)[-1]
         backend, opts = ctx.backend, ctx.backend_opts
+        opts = self._resolve_field_opts(backend, opts, items)
         cache_key = ("ssa", backend, _opts_key(opts), self.storage_layout, nb,
                      b_bucket, hp.n_trials, hp.n_rnd, self.noise, req0.storage,
                      sig, chunk)
@@ -772,6 +811,7 @@ class AnnealService:
         n_chunks = hp.n_rounds // chunk
 
         padded, b_live, b_bucket = self._pad_group(items)
+        opts = self._resolve_field_opts(backend, opts, items)
         cache_key = ("ptssa", backend, _opts_key(opts), nb, b_bucket, hp,
                      self.noise, chunk)
         ent = self._programs.get(cache_key)

@@ -112,11 +112,16 @@ class ResiliencePolicy:
 
 
 # Constructor keywords each batched backend accepts beyond the common set —
-# fallback must drop e.g. pallas block_r when downgrading to dense.
+# fallback must drop e.g. pallas block_r when downgrading to dense.  Both
+# field-capable backends carry field_mode/j_bits, so a pallas→dense
+# downgrade keeps the XNOR-popcount arithmetic (and its bit-exactness).
 _BACKEND_OPT_KEYS = {
     "sparse": frozenset(),
-    "dense": frozenset({"j_dtype", "j_mode", "tile_n"}),
-    "pallas": frozenset({"j_dtype", "block_r", "interpret", "noise_mode"}),
+    "dense": frozenset({"j_dtype", "j_mode", "tile_n", "field_mode", "j_bits"}),
+    "pallas": frozenset(
+        {"j_dtype", "block_r", "interpret", "noise_mode", "field_mode",
+         "j_bits"}
+    ),
 }
 
 
