@@ -128,6 +128,34 @@ def run(csv_prefix: str = "table4_memory"):
     emit(f"{csv_prefix}/measured_j_bytes_packed", 0.0, f"{packed_j}")
     emit(f"{csv_prefix}/j_bytes_ratio", 0.0, f"{dense_j / packed_j:.2f}x")
 
+    # Per-device residency under spin sharding (DESIGN.md §11): the same
+    # engine state + problem arrays laid out over a spin mesh.  On 1 device
+    # this reports the unsharded footprint; under a forced multi-device run
+    # (XLA_FLAGS=--xla_force_host_platform_device_count=N) the busiest
+    # device's share of the sharded leaves drops ~linearly in the mesh size
+    # — the property the weak-scaling benchmark and test_spinshard gate.
+    import jax as _jax
+
+    from repro.core.engine import make_batched_backend
+    from repro.sharding import spin_mesh
+
+    n_dev = len(_jax.devices())
+    mesh = spin_mesh(n_dev)
+    bk_sh = make_batched_backend(
+        "dense", n_bucket=1024, n_trials=hp_small.n_trials,
+        noise="xorshift", partition="spin", mesh=mesh,
+    )
+    prob_sh = bk_sh.stack([model])
+    st_sh = bk_sh.init_state(prob_sh, bk_sh.init_noise([0], [model.n]))
+    per = memory.per_device_bytes((prob_sh, st_sh))
+    total_sh = sum(per.values())
+    busiest = memory.max_device_bytes((prob_sh, st_sh))
+    emit(f"{csv_prefix}/spinshard_devices", 0.0, f"{n_dev}")
+    emit(f"{csv_prefix}/spinshard_total_bytes", 0.0, f"{total_sh}")
+    emit(f"{csv_prefix}/spinshard_max_device_bytes", 0.0, f"{busiest}")
+    emit(f"{csv_prefix}/spinshard_balance", 0.0,
+         f"{total_sh / (busiest * n_dev):.2f}" if busiest else "n/a")
+
     ok = measured_ratio >= (1.0 - RATIO_TOLERANCE) * ratio
     emit(f"{csv_prefix}/measured_vs_analytic_ok", 0.0, str(ok))
     return {

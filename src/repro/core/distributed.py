@@ -30,20 +30,35 @@ pjit'd steps for the dry-run; the same steps run for real on any mesh.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.kernels.bitplane import PackedJ
+from repro.sharding import mesh_axis_size, spin_mesh
+
 from .engine import (
+    BatchedBackend,
     EngineState,
+    PackedEngineState,
+    Plateau,
+    PlateauBackend,
+    TILED_J_THRESHOLD,
+    _stack_packed_models,
+    _stack_sparse_models,
     pack_spins,
+    resolve_backend,
+    resolve_field_mode,
     run_plateau_scan,
+    padded_noise_init_slice,
     schedule_plateaus,
     unpack_spins,
 )
-from .ising import local_fields_popcount, local_fields_tiled
+from .ising import local_fields_popcount, local_fields_sparse, local_fields_tiled
 from .rng import xorshift_next_bits
 from .ssa import SSAHyperParams
 
@@ -52,7 +67,13 @@ __all__ = [
     "anneal_step_lowering",
     "make_batched_iteration_step",
     "batched_anneal_step_lowering",
+    "SPIN_AXIS",
+    "SpinShardedBackend",
+    "BatchedSpinShardedBackend",
 ]
+
+# Default mesh-axis name the spin axis shards over (DESIGN.md §11).
+SPIN_AXIS = "model"
 
 
 def make_iteration_step(hp: SSAHyperParams, mesh: Optional[Mesh] = None):
@@ -301,3 +322,386 @@ def batched_anneal_step_lowering(
     jitted = jax.jit(step, in_shardings=shardings, donate_argnums=(0, 1, 2, 3, 4))
     with mesh:
         return jitted.lower(*tuple(shapes))
+
+
+# ---------------------------------------------------------------------------
+# Spin-sharded execution (DESIGN.md §11): partition='spin'
+#
+# The problem-partitioned paths above replicate the spin axis and scale out
+# over the *problem* batch; a single giant instance (100k+ spins) needs the
+# spin axis itself split.  These backends run the exact plateau engine
+# (`run_plateau_scan`, unchanged) inside a `shard_map` over one mesh axis:
+#
+#   * state shards: each device owns spins [i·Ns, (i+1)·Ns) of every trial —
+#     its itanh, its xorshift lanes (seeded shard-locally via
+#     `padded_noise_init_slice`, bit-identical to the global stream), its
+#     best-m columns.  best_H stays replicated (it is psum'd every fold).
+#   * J shards by rows: the f32-tiled slabs and the PackedJ popcount
+#     bitplanes are both row-rectangular contractions, so each device holds
+#     only its Ns rows — per-device J residency drops ~linearly in devices.
+#   * one collective per cycle: the update m(t) → m(t+1) needs the *full*
+#     spin state on every device.  Spins are ±1, so the all-gather moves
+#     packed uint32 bitplanes — N/32 words per (trial, plane), 8×/32× below
+#     int8/f32 — the bitplane format is what makes the collective cheap.
+#   * energy: H folds/traces psum the per-shard partial sums *before* the
+#     floor division (local h·m + m·field may be odd; int32 addition is
+#     exact and order-free, so sharded H is bit-identical to unsharded).
+#
+# `check_rep=False`: jax 0.4.x cannot statically infer that an all-gathered
+# value is replicated; replication of best_H is instead guaranteed by the
+# psum and asserted (bit-identity vs the unsharded backends) in tests.
+# ---------------------------------------------------------------------------
+
+
+class BatchedSpinShardedBackend(BatchedBackend):
+    """B stacked problems with the *spin axis* sharded over a mesh axis.
+
+    The serving path for instances too big for one device: the same
+    bucket/stack/chunk protocol as every :class:`BatchedBackend` (so
+    `AnnealService` drives it unchanged), but problem arrays are laid out
+    row-sharded over ``mesh`` at :meth:`stack` time and every plateau runs
+    as a `shard_map` collective program.  Bit-identical per problem to the
+    problem-partitioned backends on live lanes (property-tested).
+
+    ``base_backend`` picks the field contraction the shards run locally:
+    'sparse' gathers from the all-gathered spins through the padded
+    adjacency; 'dense'/'pallas' use the rectangular f32 tiled-slab stream
+    (``field_mode='dense'``, with ``double_buffer`` prefetch pipelining) or
+    the XNOR-popcount bitplane contraction (``field_mode='popcount'``).
+    The resident Pallas kernels are single-device programs, so under spin
+    sharding 'pallas' runs its arithmetic through these scan paths.
+    """
+
+    name = "spinshard"
+
+    def __init__(self, *, mesh: Optional[Mesh] = None, axis: str = SPIN_AXIS,
+                 base_backend: str = "dense", j_mode: str = "auto",
+                 tile_n: int = 512, field_mode: str = "auto", j_bits: int = 1,
+                 double_buffer: bool = True, j_dtype=None, block_r=None,
+                 interpret=None, noise_mode=None, **kw):
+        super().__init__(**kw)
+        if self.noise != "xorshift":
+            raise ValueError(
+                "partition='spin' requires noise='xorshift': shard-local "
+                "lane seeding is what makes sharded runs bit-identical"
+            )
+        del j_mode, j_dtype, block_r, interpret, noise_mode  # single-device knobs
+        self.mesh = spin_mesh(1, axis=axis) if mesh is None else mesh
+        self.axis = axis
+        self.n_dev = mesh_axis_size(self.mesh, axis)
+        if self.n_bucket % self.n_dev:
+            raise ValueError(
+                f"partition='spin': bucket {self.n_bucket} not divisible by "
+                f"the {self.n_dev}-way {axis!r} mesh axis"
+            )
+        self.n_shard = self.n_bucket // self.n_dev
+        self.tile_n = int(tile_n)
+        self.j_bits = int(j_bits)
+        self.double_buffer = bool(double_buffer)
+        base = resolve_backend(base_backend, self.n_bucket)
+        if base == "sparse":
+            self.field_mode = "dense"
+            self.field_style = "sparse"
+        else:
+            self.field_mode = resolve_field_mode(field_mode, self.j_bits)
+            self.field_style = (
+                "popcount" if self.field_mode == "popcount" else "tiled"
+            )
+        self.base_backend = base
+        # Row-tile the popcount contraction in the regime the matmul would
+        # tile J — but against the *shard's* row count, not the bucket's.
+        self._pc_tile = (
+            None if self.n_shard <= TILED_J_THRESHOLD else self.tile_n
+        )
+        # Packed-layout spin words shard over devices only when each shard
+        # is word-aligned; otherwise the (tiny) planes stay replicated and
+        # each device slices its columns after the local unpack.
+        self._words_shardable = self.n_shard % 32 == 0
+
+    # -- sharding layout --------------------------------------------------
+    def _problem_specs(self) -> dict:
+        ax = self.axis
+        if self.field_style == "popcount":
+            return {
+                "h": P(None, ax),
+                "sign": P(None, ax, None),
+                "mags": P(None, None, ax, None),
+                "base": P(None, ax),
+            }
+        return {
+            "h": P(None, ax),
+            "nbr_idx": P(None, ax, None),
+            "nbr_w": P(None, ax, None),
+        }
+
+    def _state_specs(self):
+        ax = self.axis
+        lanes = P(None, None, None, ax)
+        spins = P(None, None, ax)
+        rep = P(None, None)
+        if self.storage_layout == "packed":
+            words = spins if self._words_shardable else rep
+            return PackedEngineState(lanes, words, spins, rep, words)
+        return EngineState(lanes, spins, spins, rep, spins)
+
+    def _put_state(self, st):
+        def put(x, spec):
+            sh = NamedSharding(self.mesh, spec)
+            if isinstance(x, jax.core.Tracer):
+                return jax.lax.with_sharding_constraint(x, sh)
+            return jax.device_put(x, sh)
+
+        return type(st)(*(put(x, s) for x, s in zip(st, self._state_specs())))
+
+    # -- host side --------------------------------------------------------
+    def stack(self, models) -> dict:
+        if self.field_style == "popcount":
+            problem = _stack_packed_models(models, self.n_bucket, self.j_bits)
+        else:
+            problem = _stack_sparse_models(models, self.n_bucket)
+        specs = self._problem_specs()
+        return {
+            k: jax.device_put(v, NamedSharding(self.mesh, specs[k]))
+            for k, v in problem.items()
+        }
+
+    def init_noise(self, seeds, n_lives):
+        """Shard-local lane seeding: each device seeds only its columns.
+
+        `make_array_from_callback` hands every device its slice of the
+        global (B, 4, T, N_bucket) lane array; `padded_noise_init_slice`
+        seeds exactly those columns bit-identically to the full
+        `padded_noise_init` — no device ever materializes the global lanes.
+        """
+        seeds = [int(s) for s in seeds]
+        n_lives = [int(x) for x in n_lives]
+        T, nb = self.n_trials, self.n_bucket
+        shape = (len(seeds), 4, T, nb)
+        sh = NamedSharding(self.mesh, P(None, None, None, self.axis))
+
+        def cb(index):
+            lo, hi, _ = index[3].indices(nb)
+            return np.stack([
+                padded_noise_init_slice(s, T, nl, nb, lo, hi)
+                for s, nl in zip(seeds, n_lives)
+            ])
+
+        return jax.make_array_from_callback(shape, sh, cb)
+
+    # -- traced -----------------------------------------------------------
+    def init_state(self, problem, noise0):
+        return self._put_state(super().init_state(problem, noise0))
+
+    def _energy_local(self, m, field, h):
+        # energy_from_field with the trial sums psum'd over shards BEFORE
+        # the floor division: local (h·m + m·field) may be odd, the global
+        # sum is what's even; int32 addition is order-free, so this is
+        # bit-identical to the unsharded fold.
+        m32 = m.astype(jnp.int32)
+        s = jnp.sum(h * m32, axis=-1) + jnp.sum(m32 * field, axis=-1)
+        return -jax.lax.psum(s, self.axis) // 2
+
+    def _gather_words(self, m_local):
+        """Local spin shard → full packed bitplanes (the cheap collective)."""
+        if self.n_shard % 32 == 0:
+            w = pack_spins(m_local)
+            return jax.lax.all_gather(w, self.axis, axis=-1, tiled=True)
+        m_full = jax.lax.all_gather(m_local, self.axis, axis=-1, tiled=True)
+        return pack_spins(m_full)
+
+    def _gather_spins(self, m_local):
+        """Local spin shard → full int8 spins, moved packed when aligned."""
+        if self.n_shard % 32 == 0:
+            return unpack_spins(self._gather_words(m_local), self.n_bucket)
+        return jax.lax.all_gather(m_local, self.axis, axis=-1, tiled=True)
+
+    def _field_local(self, prob, m_local):
+        """This shard's fields from its J rows + the all-gathered spins."""
+        if self.field_style == "popcount":
+            mw = self._gather_words(m_local)
+            return jax.vmap(
+                lambda w, hh, s, g, b: local_fields_popcount(
+                    w, hh, PackedJ(s, g, b), tile_n=self._pc_tile
+                )
+            )(mw, prob["h"], prob["sign"], prob["mags"], prob["base"])
+        m_full = self._gather_spins(m_local)
+        if self.field_style == "sparse":
+            return jax.vmap(
+                lambda mm, hh, ii, ww: local_fields_sparse(
+                    mm.astype(jnp.int32), hh, ii, ww
+                )
+            )(m_full, prob["h"], prob["nbr_idx"], prob["nbr_w"])
+        return jax.vmap(
+            lambda mm, hh, ii, ww: local_fields_tiled(
+                mm, hh, ii, ww, tile_n=self.tile_n,
+                double_buffer=self.double_buffer,
+            )
+        )(m_full, prob["h"], prob["nbr_idx"], prob["nbr_w"])
+
+    def _unpack_local(self, st: PackedEngineState) -> EngineState:
+        if self._words_shardable:
+            return EngineState(
+                st.noise_state, unpack_spins(st.m_packed, self.n_shard),
+                st.itanh, st.best_H,
+                unpack_spins(st.best_m_packed, self.n_shard),
+            )
+        i = jax.lax.axis_index(self.axis)
+
+        def cols(words):
+            full = unpack_spins(words, self.n_bucket)
+            return jax.lax.dynamic_slice_in_dim(
+                full, i * self.n_shard, self.n_shard, axis=full.ndim - 1
+            )
+
+        return EngineState(
+            st.noise_state, cols(st.m_packed), st.itanh, st.best_H,
+            cols(st.best_m_packed),
+        )
+
+    def _pack_local(self, st: EngineState) -> PackedEngineState:
+        if self._words_shardable:
+            return PackedEngineState(
+                st.noise_state, pack_spins(st.m), st.itanh, st.best_H,
+                pack_spins(st.best_m),
+            )
+        mf = jax.lax.all_gather(st.m, self.axis, axis=-1, tiled=True)
+        bf = jax.lax.all_gather(st.best_m, self.axis, axis=-1, tiled=True)
+        return PackedEngineState(
+            st.noise_state, pack_spins(mf), st.itanh, st.best_H,
+            pack_spins(bf),
+        )
+
+    def _local_chain(self, prob, st, plateaus, n_shots):
+        h3 = prob["h"][:, None, :]
+        field_fn = lambda m: self._field_local(prob, m)  # noqa: E731
+
+        def iteration(st, _):
+            for p in plateaus:
+                st, _, _ = run_plateau_scan(
+                    field_fn, self._noise_step, h3, self.n_rnd, st, p.i0,
+                    length=p.length, eligible=p.eligible,
+                    energy_fn=self._energy_local,
+                )
+            return st, None
+
+        st, _ = jax.lax.scan(iteration, st, None, length=n_shots)
+        return st
+
+    def _sharded_chain(self, plateaus, n_shots: int):
+        plateaus = tuple(plateaus)
+        packed = self.storage_layout == "packed"
+        sspec = self._state_specs()
+
+        def local_fn(prob, st):
+            if packed:
+                st = self._unpack_local(st)
+            st = self._local_chain(prob, st, plateaus, n_shots)
+            if packed:
+                st = self._pack_local(st)
+            return st
+
+        return shard_map(
+            local_fn, mesh=self.mesh,
+            in_specs=(self._problem_specs(), sspec), out_specs=sspec,
+            check_rep=False,
+        )
+
+    def run_plateau(self, problem, state, i0, *, length, eligible):
+        p = Plateau(int(i0), int(length), bool(eligible))
+        return self._sharded_chain((p,), 1)(problem, state)
+
+    def run_plateau_traced(self, problem, state, plateau: Plateau,
+                           track_energy: bool):
+        """One plateau with energy traces (the track_energy driver path)."""
+        packed = self.storage_layout == "packed"
+        sspec = self._state_specs()
+
+        def local_fn(prob, st):
+            if packed:
+                st = self._unpack_local(st)
+            h3 = prob["h"][:, None, :]
+            st, trace, _ = run_plateau_scan(
+                lambda m: self._field_local(prob, m), self._noise_step, h3,
+                self.n_rnd, st, plateau.i0, length=plateau.length,
+                eligible=plateau.eligible, track_energy=track_energy,
+                energy_fn=self._energy_local,
+            )
+            if packed:
+                st = self._pack_local(st)
+            if track_energy:
+                return st, trace
+            return st, (jnp.zeros((0,)), jnp.zeros((0,)))
+
+        return shard_map(
+            local_fn, mesh=self.mesh,
+            in_specs=(self._problem_specs(), sspec),
+            out_specs=(sspec, (P(None), P(None))),
+            check_rep=False,
+        )(problem, state)
+
+    def run_shots(self, problem, state, plateaus, n_shots):
+        return self._sharded_chain(tuple(plateaus), int(n_shots))(
+            problem, state
+        )
+
+
+class SpinShardedBackend(PlateauBackend):
+    """Single-problem spin-sharded backend (the `anneal` driver path).
+
+    Wraps a B=1 :class:`BatchedSpinShardedBackend`: the model is padded up
+    to a multiple of the mesh axis (padding-invariant — live lanes evolve
+    bit-identically, the pad columns are inert), its row shards are laid
+    out at construction, and every plateau runs as the shard_map collective
+    program.  `record='traj'` (trajectory planes) is not supported on this
+    path — emit semantics are per-device partial planes; use
+    partition='problem' for trajectory studies.
+    """
+
+    name = "spinshard"
+
+    def __init__(self, model, *, n_trials: int, n_rnd: int = 2,
+                 noise: str = "xorshift", storage_layout: str = "dense",
+                 mesh: Optional[Mesh] = None, axis: str = SPIN_AXIS, **opts):
+        if noise != "xorshift":
+            raise ValueError(
+                "partition='spin' requires noise='xorshift': shard-local "
+                "lane seeding is what makes sharded runs bit-identical"
+            )
+        super().__init__(model, n_trials=n_trials, n_rnd=n_rnd, noise=noise,
+                         storage_layout=storage_layout)
+        mesh = spin_mesh(axis=axis) if mesh is None else mesh
+        n_dev = mesh_axis_size(mesh, axis)
+        n_pad = -(-model.n // n_dev) * n_dev
+        self._bk = BatchedSpinShardedBackend(
+            mesh=mesh, axis=axis, n_bucket=n_pad, n_trials=n_trials,
+            n_rnd=n_rnd, noise=noise, storage_layout=storage_layout, **opts,
+        )
+        self.mesh = mesh
+        self._problem = self._bk.stack([model])
+
+    def init_state(self, seed: int):
+        noise0 = self._bk.init_noise([seed], [self.model.n])
+        return self._bk.init_state(self._problem, noise0)
+
+    def run_plateau(self, state, i0, *, length, eligible, track_energy=False,
+                    emit=False):
+        if emit:
+            raise NotImplementedError(
+                "record='traj' is not supported under partition='spin'; "
+                "use partition='problem' for trajectory capture"
+            )
+        p = Plateau(int(i0), int(length), bool(eligible))
+        if track_energy:
+            st, trace = self._bk.run_plateau_traced(self._problem, state, p, True)
+            return st, trace, None
+        st = self._bk.run_plateau(
+            self._problem, state, p.i0, length=p.length, eligible=p.eligible
+        )
+        return st, None, None
+
+    def run_plateaus(self, state, plateaus):
+        return self._bk.run_shots(self._problem, state, tuple(plateaus), 1)
+
+    def finalize(self, state):
+        best_H, best_m = self._bk.finalize(state)
+        return best_H[0], best_m[0, :, : self.model.n]

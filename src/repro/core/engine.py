@@ -68,7 +68,12 @@ from .ising import (
     local_fields_sparse,
     local_fields_tiled,
 )
-from .rng import threefry_noise, xorshift_init, xorshift_next_bits
+from .rng import (
+    threefry_noise,
+    xorshift_init,
+    xorshift_init_slice,
+    xorshift_next_bits,
+)
 from .schedule import Schedule
 
 __all__ = [
@@ -92,6 +97,10 @@ __all__ = [
     "resolve_field_mode",
     "resolve_j_mode",
     "resolve_noise_mode",
+    "resolve_partition",
+    "spin_axis_size",
+    "SPIN_SHARD_MIN_N",
+    "MAX_UNSHARDED_SPINS",
     "model_weight_bits",
     "plateau_cycle_schedules",
     "normalize_problem",
@@ -111,6 +120,7 @@ __all__ = [
     "bucket_n",
     "pad_model",
     "padded_noise_init",
+    "padded_noise_init_slice",
     "BatchedBackend",
     "BatchedSparseBackend",
     "BatchedDenseBackend",
@@ -433,6 +443,7 @@ def run_plateau_scan(
     eligible: bool,
     track_energy: bool = False,
     emit: bool = False,
+    energy_fn: Callable = None,
 ):
     """One constant-I0 plateau as a `lax.scan` — ONE contraction per cycle.
 
@@ -442,10 +453,17 @@ def run_plateau_scan(
     folds the final state m(t0+C) — exactly the resident kernel's semantics
     (kernels/ssa_update.py, kernels/ref.py).
 
+    ``energy_fn(m, field, h)`` overrides :func:`energy_from_field` for the
+    best-fold/trace evaluations — the spin-sharded step passes a variant
+    that psums per-shard partial sums over the model axis (int32 addition is
+    exact and order-free, so the fold stays bit-identical; DESIGN.md §11).
+
     Returns (state', trace, planes) where trace is (mean_H (C,), min_H (C,))
     aligned to the produced states m(t0+1..t0+C) when ``track_energy``, and
     planes is the (C, T, ceil(N/32)) bit-packed trajectory when ``emit``.
     """
+    if energy_fn is None:
+        energy_fn = energy_from_field
     i0 = jnp.asarray(i0, jnp.int32)
     eligible = bool(eligible)
     track_energy = bool(track_energy)
@@ -457,7 +475,7 @@ def run_plateau_scan(
         field = field_fn(m)
         ys = {}
         if need_H:
-            H = energy_from_field(m, field, h)
+            H = energy_fn(m, field, h)
             if eligible:
                 better = not_first & (H < best_H)
                 best_H = jnp.where(better, H, best_H)
@@ -479,7 +497,7 @@ def run_plateau_scan(
     if need_H:
         # Epilogue: the plateau's final state needs one extra field.
         field = field_fn(m)
-        H = energy_from_field(m, field, h)
+        H = energy_fn(m, field, h)
         if eligible:
             better = H < best_H
             best_H = jnp.where(better, H, best_H)
@@ -684,6 +702,49 @@ def resolve_backend(backend: str, n: int) -> str:
     return backend
 
 
+# Spin-sharded execution (DESIGN.md §11). partition='auto' splits the spin
+# axis over the mesh's model axis only at/above this N: below it the
+# per-cycle all-gather dominates the O(N·Ns) shard contraction it buys.
+SPIN_SHARD_MIN_N = 2048
+
+# A single-device (partition='problem') plateau program above this many spins
+# is rejected at service admission: the per-cycle state alone (itanh i32 +
+# lanes 4×u32 per (trial, spin)) makes the unsharded path the wrong tool —
+# giant requests must route to partition='spin' on a multi-device mesh.
+MAX_UNSHARDED_SPINS = 1 << 15
+
+
+def spin_axis_size(mesh, axis: str = "model") -> int:
+    """Devices on a mesh's spin-sharding axis (1 for no mesh / absent axis)."""
+    if mesh is None:
+        return 1
+    try:
+        return int(mesh.shape[axis]) if axis in mesh.shape else 1
+    except TypeError:
+        return 1
+
+
+def resolve_partition(partition: str, n: int, mesh=None, *,
+                      axis: str = "model") -> str:
+    """Resolve the work-partitioning axis for an N-spin plateau program.
+
+    'problem' stacks whole problems per device (the PR 3 serving batch);
+    'spin' shards the spin axis of each problem over the mesh's ``axis``
+    devices via `shard_map` collectives (DESIGN.md §11).  'auto' picks
+    'spin' only when a real multi-device axis exists, N is at/above
+    SPIN_SHARD_MIN_N, and the shard width divides evenly — otherwise the
+    problem-partitioned path is both simpler and faster.
+    """
+    if partition not in ("problem", "spin", "auto"):
+        raise ValueError(f"unknown partition {partition!r}")
+    if partition != "auto":
+        return partition
+    p = spin_axis_size(mesh, axis)
+    if p > 1 and int(n) >= SPIN_SHARD_MIN_N and int(n) % p == 0:
+        return "spin"
+    return "problem"
+
+
 def resolve_noise_mode(noise_mode: str, noise: str) -> str:
     """Resident-kernel noise datapath: 'streamed' (in-kernel xorshift, no
     noise buffer) vs 'pregen' (the legacy per-plateau (C, R, N) buffer).
@@ -720,10 +781,12 @@ class DenseBackend(PlateauBackend):
 
     def __init__(self, model: IsingModel, *, j_dtype=jnp.float32,
                  j_mode: str = "auto", tile_n: int = 512,
-                 field_mode: str = "dense", **kw):
+                 field_mode: str = "dense", double_buffer: bool = False,
+                 **kw):
         super().__init__(model, **kw)
         self.j_mode = resolve_j_mode(j_mode, model.n)
         self.tile_n = int(tile_n)
+        self.double_buffer = bool(double_buffer)
         self.field_mode = resolve_field_mode(
             field_mode,
             model_weight_bits(model) if field_mode == "auto" else 1,
@@ -749,7 +812,8 @@ class DenseBackend(PlateauBackend):
             )
         if self.j_mode == "tiled":
             return local_fields_tiled(
-                m, self.h, self.nbr_idx, self.nbr_w, tile_n=self.tile_n
+                m, self.h, self.nbr_idx, self.nbr_w, tile_n=self.tile_n,
+                double_buffer=self.double_buffer,
             )
         return local_fields_dense(m, self.h, self.J)
 
@@ -982,9 +1046,27 @@ def make_backend(
     n_trials: int,
     n_rnd: int = 2,
     noise: str = "threefry",
+    partition: str = "problem",
+    mesh=None,
+    partition_axis: str = "model",
     **opts,
 ) -> PlateauBackend:
-    """Resolve a backend spec: name, PlateauBackend subclass, or instance."""
+    """Resolve a backend spec: name, PlateauBackend subclass, or instance.
+
+    ``partition='spin'`` (or 'auto' on a multi-device mesh) reroutes to the
+    spin-sharded shard_map backend (DESIGN.md §11); ``backend`` then names
+    the *field contraction* the shards run (sparse gather / tiled f32 /
+    popcount via field_mode), not a single-device execution engine.
+    """
+    part = resolve_partition(partition, model.n, mesh, axis=partition_axis)
+    if part == "spin":
+        from .distributed import SpinShardedBackend  # lazy: circular import
+
+        base = backend if isinstance(backend, str) else "dense"
+        return SpinShardedBackend(
+            model, n_trials=n_trials, n_rnd=n_rnd, noise=noise, mesh=mesh,
+            axis=partition_axis, base_backend=base, **opts,
+        )
     if isinstance(backend, PlateauBackend):
         if backend.n_trials != int(n_trials) or backend.n_rnd != int(n_rnd):
             raise ValueError(
@@ -1136,6 +1218,38 @@ def padded_noise_init(noise: str, seed: int, n_trials: int, n_live: int, n_bucke
     if noise == "threefry":
         return jax.random.PRNGKey(seed)
     raise ValueError(f"unknown noise {noise!r}")
+
+
+def padded_noise_init_slice(seed: int, n_trials: int, n_live: int,
+                            n_bucket: int, lo: int, hi: int) -> np.ndarray:
+    """Columns [lo, hi) of :func:`padded_noise_init` ('xorshift'), shard-local.
+
+    Bit-identical to ``padded_noise_init('xorshift', ...)[..., lo:hi]``
+    without materializing the full (4, T, n_bucket) lane array: live columns
+    are seeded from the *unpadded* (T, n_live) lane grid, pad columns from
+    the independent pad stream, each via :func:`repro.core.rng
+    .xorshift_init_slice`.  This is the PR 4 padding-invariance extended to
+    shard-local lane offsets — each device of a spin-sharded run seeds only
+    its own shard, and the result equals the single-device stream
+    (DESIGN.md §11; property-tested).
+    """
+    lo, hi = int(lo), int(hi)
+    n_live, n_bucket = int(n_live), int(n_bucket)
+    if not 0 <= lo <= hi <= n_bucket:
+        raise ValueError(f"slice [{lo}, {hi}) outside [0, {n_bucket})")
+    parts = []
+    if lo < n_live:
+        parts.append(xorshift_init_slice(
+            seed, (n_trials, n_live), lo, min(hi, n_live)
+        ))
+    if hi > n_live:
+        parts.append(xorshift_init_slice(
+            seed ^ 0x9E3779B9, (n_trials, n_bucket - n_live),
+            max(lo, n_live) - n_live, hi - n_live,
+        ))
+    if not parts:
+        return np.zeros((4, int(n_trials), 0), np.uint32)
+    return parts[0] if len(parts) == 1 else np.concatenate(parts, axis=-1)
 
 
 # ---------------------------------------------------------------------------
@@ -1382,11 +1496,12 @@ class BatchedDenseBackend(_VmapBatchedBackend):
 
     def __init__(self, *, j_dtype=jnp.float32, j_mode: str = "auto",
                  tile_n: int = 512, field_mode: str = "dense",
-                 j_bits: int = 1, **kw):
+                 j_bits: int = 1, double_buffer: bool = False, **kw):
         super().__init__(**kw)
         self.j_dtype = j_dtype
         self.j_mode = resolve_j_mode(j_mode, self.n_bucket)
         self.tile_n = int(tile_n)
+        self.double_buffer = bool(double_buffer)
         self.j_bits = int(j_bits)
         self.field_mode = resolve_field_mode(field_mode, self.j_bits)
         self._pc_tile = (
@@ -1408,7 +1523,8 @@ class BatchedDenseBackend(_VmapBatchedBackend):
             )
         if self.j_mode == "tiled":
             return local_fields_tiled(
-                m, prob["h"], prob["nbr_idx"], prob["nbr_w"], tile_n=self.tile_n
+                m, prob["h"], prob["nbr_idx"], prob["nbr_w"],
+                tile_n=self.tile_n, double_buffer=self.double_buffer,
             )
         return local_fields_dense(m, prob["h"], prob["J"])
 
@@ -1594,8 +1710,21 @@ def make_batched_backend(
     n_trials: int,
     n_rnd: int = 2,
     noise: str = "xorshift",
+    partition: str = "problem",
+    mesh=None,
+    partition_axis: str = "model",
     **opts,
 ) -> BatchedBackend:
+    part = resolve_partition(partition, n_bucket, mesh, axis=partition_axis)
+    if part == "spin":
+        from .distributed import BatchedSpinShardedBackend  # lazy: circular
+
+        base = backend if isinstance(backend, str) else "dense"
+        return BatchedSpinShardedBackend(
+            base_backend=base, mesh=mesh, axis=partition_axis,
+            n_bucket=n_bucket, n_trials=n_trials, n_rnd=n_rnd, noise=noise,
+            **opts,
+        )
     if isinstance(backend, str):
         backend = resolve_backend(backend, n_bucket)
     try:

@@ -191,7 +191,8 @@ def local_fields_dense(m, h, J_f32):
     return h + jnp.matmul(mf, J_f32).astype(jnp.int32)
 
 
-def local_fields_tiled(m, h, nbr_idx, nbr_w, *, tile_n: int = 512):
+def local_fields_tiled(m, h, nbr_idx, nbr_w, *, tile_n: int = 512,
+                       double_buffer: bool = False):
     """Dense-matmul field without ever materializing the (N, N) coupling matrix.
 
     Streams J one ``(tile_n, N)`` row slab at a time: each scan step scatters
@@ -201,30 +202,56 @@ def local_fields_tiled(m, h, nbr_idx, nbr_w, *, tile_n: int = 512):
     This is what admits G77/G81-class instances (N = 10k–20k) on the dense
     datapath: at N=16384, one 512-row slab is 32 MB vs 1 GB for dense J.
 
+    The contraction is rectangular: the row count comes from the adjacency
+    (``nbr_idx (R, D)``, with ``h (R,)``) and the column count from the spin
+    state ``m [..., N]`` — a spin-sharded device passes its own J row shard
+    against the all-gathered full spins and gets back its shard's fields
+    (DESIGN.md §11).  Unsharded callers have R == N and nothing changes.
+
+    ``double_buffer=True`` software-pipelines the stream the way the
+    dual-BRAM p-bit annealer pipelines its coupling reads (arXiv:2602.16143):
+    the scan carry holds slab k while the body *first* scatters slab k+1 and
+    only then contracts slab k — the slab build (gather/DMA-shaped work) for
+    the next step carries no data dependence on the matmul, so the scheduler
+    can overlap them.  Same slabs, same per-slab contraction: bit-identical.
+
     Bit-identical to :func:`local_fields_dense` on the same model (both are
     integer-valued f32 contractions below the 2^24 exactness bound, summation
     order immaterial) — property-tested.  ``m``: [..., N] spins in {-1,+1}.
     """
-    n = nbr_idx.shape[0]
-    nt = -(-n // int(tile_n))
-    pad = nt * tile_n - n
+    n_rows = nbr_idx.shape[0]
+    n_cols = m.shape[-1]
+    tile_n = int(tile_n)
+    nt = -(-n_rows // tile_n)
+    pad = nt * tile_n - n_rows
     idx = jnp.pad(jnp.asarray(nbr_idx, jnp.int32), ((0, pad), (0, 0)))
     w = jnp.pad(jnp.asarray(nbr_w, jnp.int32), ((0, pad), (0, 0)))
     mf = m.astype(jnp.float32)
     rows = jnp.arange(tile_n)
 
-    def one_slab(_, t):
+    def make_slab(t):
         it = jax.lax.dynamic_slice_in_dim(idx, t * tile_n, tile_n)
         wt = jax.lax.dynamic_slice_in_dim(w, t * tile_n, tile_n)
         # slab = J[t·tile_n : (t+1)·tile_n, :], scattered on the fly.
-        slab = jnp.zeros((tile_n, n), jnp.float32).at[rows[:, None], it].add(
-            wt.astype(jnp.float32)
-        )
-        return 0, jnp.matmul(mf, slab.T)
+        return jnp.zeros((tile_n, n_cols), jnp.float32).at[
+            rows[:, None], it
+        ].add(wt.astype(jnp.float32))
 
-    _, cols = jax.lax.scan(one_slab, 0, jnp.arange(nt))  # (nt, ..., tile_n)
+    if double_buffer:
+        def one_slab(slab, t):
+            # Prefetch t+1 *before* consuming slab t (dynamic_slice clamps,
+            # so the dangling prefetch past the last slab is safe/unused).
+            nxt = make_slab(t + 1)
+            return nxt, jnp.matmul(mf, slab.T)
+
+        _, cols = jax.lax.scan(one_slab, make_slab(0), jnp.arange(nt))
+    else:
+        def one_slab(_, t):
+            return 0, jnp.matmul(mf, make_slab(t).T)
+
+        _, cols = jax.lax.scan(one_slab, 0, jnp.arange(nt))  # (nt, ..., tile_n)
     field = jnp.moveaxis(cols, 0, -2).reshape(m.shape[:-1] + (nt * tile_n,))
-    return h + field[..., :n].astype(jnp.int32)
+    return h + field[..., :n_rows].astype(jnp.int32)
 
 
 def _popcount_fields_block(m_words, sign, mags):

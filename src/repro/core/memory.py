@@ -48,6 +48,8 @@ __all__ = [
     "padding_overhead_fraction",
     "live_device_bytes",
     "tree_device_bytes",
+    "per_device_bytes",
+    "max_device_bytes",
     "measure_live_bytes",
 ]
 
@@ -123,6 +125,44 @@ def tree_device_bytes(tree: Any) -> int:
         for leaf in jax.tree_util.tree_leaves(tree)
         if hasattr(leaf, "dtype")
     )
+
+
+def per_device_bytes(tree: Any = None) -> dict:
+    """Resident bytes keyed by device — for ``tree``, or every live array.
+
+    The single number :func:`live_device_bytes`/:func:`tree_device_bytes`
+    report is the *global* footprint; under spin sharding (DESIGN.md §11)
+    the quantity that decides whether an instance fits is what each device
+    actually holds.  Sums ``addressable_shards`` per jax array — a
+    row-sharded J slab or spin shard counts only on its owner, a replicated
+    ``best_H`` counts on every device — and attributes host (numpy) leaves
+    to ``'host'``.
+    """
+    arrays = (
+        [leaf for leaf in jax.tree_util.tree_leaves(tree)
+         if hasattr(leaf, "dtype")]
+        if tree is not None else list(jax.live_arrays())
+    )
+    out: dict = {}
+    for a in arrays:
+        shards = getattr(a, "addressable_shards", None)
+        if shards:
+            for s in shards:
+                key = str(s.device)
+                out[key] = out.get(key, 0) + int(s.data.nbytes)
+        else:
+            out["host"] = out.get("host", 0) + _array_nbytes(a)
+    return out
+
+
+def max_device_bytes(tree: Any = None) -> int:
+    """The busiest device's resident bytes (0 when nothing is live).
+
+    The per-device residency headline: for a spin-sharded state this is
+    what must drop ~linearly with the model-axis size (tested).
+    """
+    per = per_device_bytes(tree)
+    return max(per.values()) if per else 0
 
 
 def measure_live_bytes(build: Callable[[], Any]) -> Tuple[Any, int]:

@@ -23,6 +23,7 @@ import numpy as np
 __all__ = [
     "Xorshift128",
     "xorshift_init",
+    "xorshift_init_slice",
     "xorshift_next_bits",
     "xorshift_lanes_ok",
     "threefry_noise",
@@ -31,24 +32,59 @@ __all__ = [
 _U32 = jnp.uint32
 
 
+def _seed_lane_states(seed: int, idx: np.ndarray, n_total: int) -> np.ndarray:
+    """SplitMix avalanche: flat lane indices → (4,) + idx.shape uint32 states.
+
+    ``idx`` holds *global* flat lane indices and ``n_total`` the global lane
+    count, so any sub-block of lanes can be seeded independently yet
+    bit-identically to a full :func:`xorshift_init` — the property the
+    spin-sharded path needs to seed only its shard's lanes.
+    """
+    idx = idx.astype(np.uint64)
+    states = []
+    for word in range(4):
+        z = (np.uint64(seed) + np.uint64(0x9E3779B97F4A7C15)
+             * (idx + np.uint64(1 + word * n_total)))
+        z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+        z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+        z = z ^ (z >> np.uint64(31))
+        states.append((z & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+    st = np.stack(states, axis=0)
+    # xorshift forbids the all-zero state; nudge any such lane.
+    st[0] = np.where((st == 0).all(axis=0), np.uint32(0x1234567), st[0])
+    return st
+
+
 def xorshift_init(seed: int, lanes: Tuple[int, ...]) -> jnp.ndarray:
     """Seed per-lane xorshift128 states, shape (4,) + lanes, dtype uint32.
 
     SplitMix-style avalanche over (seed, lane index) so lanes decorrelate.
     """
     n = int(np.prod(lanes)) if lanes else 1
-    idx = np.arange(n, dtype=np.uint64)
-    states = []
-    for word in range(4):
-        z = (np.uint64(seed) + np.uint64(0x9E3779B97F4A7C15) * (idx + np.uint64(1 + word * n)))
-        z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
-        z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
-        z = z ^ (z >> np.uint64(31))
-        states.append((z & np.uint64(0xFFFFFFFF)).astype(np.uint32))
-    st = np.stack(states, axis=0).reshape((4,) + tuple(lanes))
-    # xorshift forbids the all-zero state; nudge any such lane.
-    st[0] = np.where((st == 0).all(axis=0), np.uint32(0x1234567), st[0])
-    return jnp.asarray(st)
+    st = _seed_lane_states(seed, np.arange(n, dtype=np.uint64), n)
+    return jnp.asarray(st.reshape((4,) + tuple(lanes)))
+
+
+def xorshift_init_slice(seed: int, lanes: Tuple[int, ...], lo: int, hi: int) -> np.ndarray:
+    """Seed only columns [lo, hi) of the last lane axis — shard-local init.
+
+    Returns a numpy ``(4,) + lanes[:-1] + (hi - lo,)`` block bit-identical to
+    ``xorshift_init(seed, lanes)[..., lo:hi]`` without materializing the full
+    lane array: the flat lane index of lane ``(..., s)`` and the *global*
+    lane count both enter the seeding formula unchanged, so each device of a
+    spin-sharded run can seed exactly its own columns (DESIGN.md §11).
+    """
+    lanes = tuple(int(x) for x in lanes)
+    lo, hi = int(lo), int(hi)
+    n_col = lanes[-1]
+    if not 0 <= lo <= hi <= n_col:
+        raise ValueError(f"slice [{lo}, {hi}) outside [0, {n_col})")
+    n_total = int(np.prod(lanes)) if lanes else 1
+    lead = lanes[:-1]
+    n_lead = int(np.prod(lead)) if lead else 1
+    base = np.arange(n_lead, dtype=np.uint64).reshape(lead + (1,)) * np.uint64(n_col)
+    idx = base + np.arange(lo, hi, dtype=np.uint64)
+    return _seed_lane_states(seed, idx, n_total)
 
 
 def xorshift_next_bits(state: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:

@@ -48,6 +48,19 @@ def _backend_opts(args):
     return {}
 
 
+def _partition_mesh(args):
+    """(partition, mesh) from --partition/--mesh-shape (DESIGN.md §11).
+
+    The mesh is built lazily and only when spin sharding can apply, so
+    partition='problem' launches never construct one.
+    """
+    if args.partition == "problem":
+        return "problem", None
+    from repro.launch.mesh import make_spin_mesh
+
+    return args.partition, make_spin_mesh(args.mesh_shape)
+
+
 def _run_service(problem_names, hp, args):
     from repro.serve import AnnealRequest, AnnealService
 
@@ -59,11 +72,13 @@ def _run_service(problem_names, hp, args):
                       deadline_s=args.deadline_s)
         for i, p in enumerate(problems)
     ]
+    partition, mesh = _partition_mesh(args)
     svc = AnnealService(backend=args.backend, noise=args.noise,
                         storage_layout=args.storage_layout,
                         chunk_shots=args.chunk_shots,
                         backend_opts=_backend_opts(args),
-                        resilience=_resilience_policy(args))
+                        resilience=_resilience_policy(args),
+                        partition=partition, mesh=mesh)
 
     def progress(ev):
         bests = ", ".join(
@@ -117,11 +132,13 @@ def _run_problem_kind(hp, args):
                       seed=args.seed + i, storage=args.storage, auto_base=hp)
         for i, enc in enumerate(encs)
     ]
+    partition, mesh = _partition_mesh(args)
     svc = AnnealService(backend=args.backend, noise=args.noise,
                         storage_layout=args.storage_layout,
                         chunk_shots=args.chunk_shots,
                         backend_opts=_backend_opts(args),
-                        resilience=_resilience_policy(args))
+                        resilience=_resilience_policy(args),
+                        partition=partition, mesh=mesh)
     t0 = time.time()
     responses = svc.solve(requests)
     dt = time.time() - t0
@@ -197,6 +214,17 @@ def main():
                          "backends): 'popcount' = XNOR-popcount on uint32 "
                          "bitplanes (DESIGN.md §8; bit-identical results), "
                          "'auto' by coupling bit depth")
+    ap.add_argument("--partition", choices=("problem", "spin", "auto"),
+                    default="problem",
+                    help="work partitioning: 'spin' shards the spin axis of "
+                         "each problem over the mesh via shard_map "
+                         "collectives (DESIGN.md §11; bit-identical), 'auto' "
+                         "picks per instance/bucket")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="1-D device count for --partition spin|auto, e.g. "
+                         "'4' (default: every available device); combine "
+                         "with XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N for CPU fleets")
     ap.add_argument("--record", choices=("best", "traj"), default="best")
     ap.add_argument("--track-energy", action="store_true",
                     help="record per-cycle energy traces (scan path)")
@@ -223,11 +251,15 @@ def main():
     print(f"{p.name}: N={p.n} |E|={len(p.edges)}; {hp.total_cycles} cycles "
           f"× {hp.n_trials} trials; backend={args.backend}; "
           f"storage={args.storage} ({'HA-SSA' if args.storage == 'i0max' else 'SSA'})")
+    partition, mesh = _partition_mesh(args)
+    bopts = _backend_opts(args)
+    if partition != "problem":
+        bopts.update(partition=partition, mesh=mesh)
     t0 = time.time()
     r = anneal(p, hp, seed=args.seed, storage=args.storage, record=args.record,
                backend=args.backend, noise=args.noise,
                storage_layout=args.storage_layout,
-               backend_opts=_backend_opts(args),
+               backend_opts=bopts,
                track_energy=args.track_energy)
     dt = time.time() - t0
     spin_cycles = hp.total_cycles * hp.n_trials

@@ -96,6 +96,7 @@ from repro.core.autotune import (
     resolve_hyperparams,
 )
 from repro.core.engine import (
+    MAX_UNSHARDED_SPINS,
     bucket_n,
     finalize_cut,
     make_batched_backend,
@@ -104,6 +105,7 @@ from repro.core.engine import (
     normalize_problem,
     resolve_backend,
     resolve_field_mode,
+    resolve_partition,
     schedule_plateaus,
     validate_model,
 )
@@ -115,6 +117,7 @@ from repro.core.schedule import sa_temperature_ladder
 from repro.core.ssa import AnnealResult, SSAHyperParams
 from repro.ft.faults import FaultInjector
 from repro.problems import ProblemEncoding
+from repro.sharding import mesh_fingerprint
 
 from .resilience import (
     STATUS_DEADLINE,
@@ -238,8 +241,12 @@ class _GroupCtx:
         self.ckpt: Optional[CheckpointManager] = None
         self._dir: Optional[str] = None
         if self.policy.checkpoint_dir:
+            part = service.partition_for(kind, nb)
             tag = group_fingerprint(kind, nb, backend, service.storage_layout,
-                                    service.noise, chunk, items)
+                                    service.noise, chunk, items,
+                                    partition=part,
+                                    mesh_fp=(mesh_fingerprint(service.mesh)
+                                             if part == "spin" else ()))
             self._dir = os.path.join(self.policy.checkpoint_dir, tag)
             self.ckpt = CheckpointManager(
                 self._dir,
@@ -320,6 +327,8 @@ class AnnealService:
         autotune_seed: int = 0,
         resilience: Optional[ResiliencePolicy] = None,
         faults: Optional[FaultInjector] = None,
+        partition: str = "problem",
+        mesh=None,
     ):
         """``storage_layout='packed'`` keeps the HBM-resident engine state
         between chunk launches as uint32 spin bitplanes (DESIGN.md §4).
@@ -335,9 +344,21 @@ class AnnealService:
         (defaults: fallback + admission validation on, checkpointing off);
         ``faults`` attaches a fault injector whose hook points the service
         fires (testing/chaos only — never set in production).
+
+        ``partition`` selects the work-partitioning axis for SSA groups
+        (DESIGN.md §11): ``'problem'`` (default) stacks whole problems per
+        device; ``'spin'`` shards the spin axis of every problem over
+        ``mesh``'s model axis via shard_map collectives — the only way
+        instances above ``engine.MAX_UNSHARDED_SPINS`` are admitted;
+        ``'auto'`` resolves per shape bucket.  Spin-sharded groups require
+        ``noise='xorshift'`` (shard-local lane seeding is what makes sharded
+        runs bit-identical to single-device runs).  SA and PT-SSA groups
+        always run problem-partitioned.
         """
         if storage_layout not in ("dense", "packed"):
             raise ValueError(f"unknown storage_layout {storage_layout!r}")
+        if partition not in ("problem", "spin", "auto"):
+            raise ValueError(f"unknown partition {partition!r}")
         self.backend = backend
         self.noise = noise
         self.storage_layout = storage_layout
@@ -348,8 +369,21 @@ class AnnealService:
         self.backend_opts = dict(backend_opts or {})
         self.policy = resilience or ResiliencePolicy()
         self.faults = faults
+        self.partition = partition
+        self.mesh = mesh
         self._programs: dict = {}
         self.stats = collections.Counter()
+
+    def partition_for(self, kind: str, nb: int) -> str:
+        """Effective partition for one group: 'problem' or 'spin'.
+
+        Spin sharding applies only to the SSA plateau path — SA and PT-SSA
+        run through per-problem field closures the shard_map backend doesn't
+        expose, so they stay problem-partitioned regardless of the knob.
+        """
+        if kind != "ssa":
+            return "problem"
+        return resolve_partition(self.partition, nb, self.mesh)
 
     # ------------------------------------------------------------------
     # Public API
@@ -434,6 +468,22 @@ class AnnealService:
             raise AdmissionError(
                 f"request {idx}: deadline_s must be > 0, got {req.deadline_s}"
             )
+        if model.n > MAX_UNSHARDED_SPINS:
+            # Giant instances are admissible only when they will actually
+            # route to the spin-sharded SSA path (DESIGN.md §11) — on the
+            # problem-partitioned path a single (N, N)-coupled instance of
+            # this size is an OOM/compile hazard, not a request.
+            ssa_family = isinstance(req.hp, (SSAHyperParams, str))
+            nb = bucket_n(model.n, self.min_bucket)
+            if not (ssa_family and self.partition_for("ssa", nb) == "spin"):
+                self.stats["admission_rejects"] += 1
+                raise AdmissionError(
+                    f"request {idx}: n={model.n} exceeds the single-device "
+                    f"ceiling MAX_UNSHARDED_SPINS={MAX_UNSHARDED_SPINS}; "
+                    "construct the service with partition='spin' (or 'auto') "
+                    "and a multi-device mesh (repro.sharding.spin_mesh) to "
+                    "shard the spin axis"
+                )
 
     # ------------------------------------------------------------------
     # Grouping
@@ -502,7 +552,8 @@ class AnnealService:
             # Resolve per bucket (MIN_RESIDENT_N rule) and drop any opts the
             # chosen backend doesn't accept — 'auto' users pass a union.
             backend = resolve_backend(backend, nb)
-            opts = filter_backend_opts(backend, opts)
+            opts = filter_backend_opts(backend, opts,
+                                       partition=self.partition_for(kind, nb))
         carried_events: List[ServiceEvent] = []
         while True:
             ctx = _GroupCtx(self, kind, nb, items, backend, opts, solve_t0,
@@ -641,9 +692,11 @@ class AnnealService:
         sig = self._group_key(req0, nb)[-1]
         backend, opts = ctx.backend, ctx.backend_opts
         opts = self._resolve_field_opts(backend, opts, items)
+        part = self.partition_for("ssa", nb)
         cache_key = ("ssa", backend, _opts_key(opts), self.storage_layout, nb,
                      b_bucket, hp.n_trials, hp.n_rnd, self.noise, req0.storage,
-                     sig, chunk)
+                     sig, chunk, part,
+                     mesh_fingerprint(self.mesh) if part == "spin" else ())
         ent = self._programs.get(cache_key)
         if ent is None:
             ctx.fire("compile", backend=backend, kind="ssa", bucket=nb)
@@ -651,7 +704,8 @@ class AnnealService:
             bk = make_batched_backend(
                 backend, n_bucket=nb, n_trials=hp.n_trials,
                 n_rnd=hp.n_rnd, noise=self.noise,
-                storage_layout=self.storage_layout, **opts,
+                storage_layout=self.storage_layout,
+                partition=part, mesh=self.mesh, **opts,
             )
 
             def init_fn(problem, ns0):

@@ -117,16 +117,34 @@ class ResiliencePolicy:
 # downgrade keeps the XNOR-popcount arithmetic (and its bit-exactness).
 _BACKEND_OPT_KEYS = {
     "sparse": frozenset(),
-    "dense": frozenset({"j_dtype", "j_mode", "tile_n", "field_mode", "j_bits"}),
+    "dense": frozenset(
+        {"j_dtype", "j_mode", "tile_n", "field_mode", "j_bits",
+         "double_buffer"}
+    ),
     "pallas": frozenset(
         {"j_dtype", "block_r", "interpret", "noise_mode", "field_mode",
          "j_bits"}
     ),
+    # partition='spin': the shard_map backend wraps any base field style and
+    # tolerates (ignores) the single-device resident-kernel knobs, so the
+    # fallback chain can walk pallas→dense→sparse under spin sharding too.
+    "spinshard": frozenset(
+        {"j_dtype", "j_mode", "tile_n", "field_mode", "j_bits",
+         "double_buffer", "block_r", "interpret", "noise_mode"}
+    ),
 }
 
 
-def filter_backend_opts(backend: str, opts: dict) -> dict:
-    """Project backend_opts onto what ``backend`` actually accepts."""
+def filter_backend_opts(backend: str, opts: dict, *,
+                        partition: str = "problem") -> dict:
+    """Project backend_opts onto what ``backend`` actually accepts.
+
+    Under ``partition='spin'`` the group runs on the spin-sharded shard_map
+    backend regardless of the base backend name, so the wider 'spinshard'
+    keyset applies.
+    """
+    if partition == "spin":
+        backend = "spinshard"
     keys = _BACKEND_OPT_KEYS.get(backend, frozenset())
     return {k: v for k, v in opts.items() if k in keys}
 
@@ -187,17 +205,23 @@ def fallback_step(
 
 def group_fingerprint(kind: str, n_bucket: int, backend: str,
                       storage_layout: str, noise: str, chunk: int,
-                      items) -> str:
+                      items, *, partition: str = "problem",
+                      mesh_fp: tuple = ()) -> str:
     """Stable identity of a request group, for checkpoint keying.
 
     Hashes the execution configuration plus, per request, the seed, the
     request knobs and the *problem arrays themselves* — so a resumed
     ``solve()`` in a fresh process maps onto the interrupted run's
     checkpoints iff it would replay the identical computation.
+
+    ``partition``/``mesh_fp`` fold the spin-sharding layout in: a checkpoint
+    written by a spin-sharded group on one mesh shape must not be resumed
+    under another (the *state values* are layout-invariant, but mixing
+    layouts silently would hide device-count configuration mistakes).
     """
     hsh = hashlib.sha256()
     hsh.update(repr((kind, n_bucket, backend, storage_layout, noise,
-                     chunk)).encode())
+                     chunk, partition, mesh_fp)).encode())
     for _idx, req, _maxcut, model in items:
         hsh.update(repr((req.seed, req.storage, req.schedule_kind,
                          req.target_cut, req.hp)).encode())

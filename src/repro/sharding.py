@@ -37,6 +37,8 @@ __all__ = [
     "constrain",
     "mesh_axis_size",
     "abstract_mesh",
+    "spin_mesh",
+    "mesh_fingerprint",
 ]
 
 Axes = Tuple[Optional[str], ...]  # logical names per dim (None = replicated)
@@ -111,6 +113,42 @@ def abstract_mesh(axis_sizes: Sequence[int], axis_names: Sequence[str]):
         return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
     except TypeError:
         return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+
+
+def spin_mesh(n_devices: Optional[int] = None, *, axis: str = "model") -> Mesh:
+    """1-D mesh over the first ``n_devices`` host devices, for spin sharding.
+
+    The annealer's model-parallel path (DESIGN.md §11) partitions the spin
+    axis of a single instance over one mesh axis; this builds that mesh from
+    however many devices exist — 1 real device and an 8-way
+    ``--xla_force_host_platform_device_count`` CPU both work, no hard-coded
+    counts.  ``n_devices=None`` takes every available device.
+    """
+    import numpy as np
+
+    devs = jax.devices()
+    k = len(devs) if n_devices is None else int(n_devices)
+    if not 1 <= k <= len(devs):
+        raise ValueError(
+            f"spin_mesh: need 1 <= n_devices <= {len(devs)}, got {k}"
+        )
+    return Mesh(np.asarray(devs[:k]), (axis,))
+
+
+def mesh_fingerprint(mesh: Optional[Mesh]) -> tuple:
+    """Hashable mesh identity (axis names/sizes + device ids).
+
+    Executable caches and checkpoint fingerprints key on this: the same
+    program lowered for a different device set or axis layout is a different
+    executable, and a checkpoint written under one mesh shape must not be
+    silently resumed under another.
+    """
+    if mesh is None:
+        return ()
+    return (
+        tuple(zip(mesh.axis_names, mesh.devices.shape)),
+        tuple(int(d.id) for d in mesh.devices.flat),
+    )
 
 
 def mesh_axis_size(mesh: Mesh, axis) -> int:

@@ -1,0 +1,350 @@
+"""Spin-sharded execution (DESIGN.md §11): partition='spin'.
+
+The contract under test: sharding the spin axis over a mesh changes the
+*layout*, never the *numbers*.  A spin-sharded run — engine driver or
+service, f32-tiled or XNOR-popcount fields, dense or packed state layout,
+interrupted and resumed or not — is bit-identical to the single-device run
+on live lanes.
+
+CI tier-1 pins one host device (XLA_FLAGS in ci.yml), so the in-process
+tests here exercise the full sharded code path on a 1-device mesh (the
+shard_map program, the make_array_from_callback seeding, the psum'd energy
+— all live, just P=1).  True multi-device behaviour (P=8 forced host
+devices: cross-shard collectives, per-device residency drop, sharded
+checkpoint/resume) runs once in a consolidated subprocess whose XLA_FLAGS
+are set before its jax initializes.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import SSAHyperParams, anneal, gset
+from repro.core.engine import (
+    MAX_UNSHARDED_SPINS,
+    bucket_n,
+    make_batched_backend,
+    padded_noise_init,
+    padded_noise_init_slice,
+    resolve_partition,
+    schedule_plateaus,
+)
+from repro.serve import AdmissionError, AnnealRequest, AnnealService
+from repro.serve.resilience import filter_backend_opts, group_fingerprint
+from repro.sharding import mesh_fingerprint, spin_mesh
+
+HP = SSAHyperParams(n_trials=3, m_shot=2, tau=3, i0_min=1, i0_max=4)
+
+
+def _twin():
+    return gset.toroidal_grid(64, seed=17)
+
+
+# ---------------------------------------------------------------------------
+# Partition resolution + mesh plumbing
+# ---------------------------------------------------------------------------
+def test_resolve_partition_rules():
+    mesh1 = spin_mesh(1)
+    assert resolve_partition("problem", 1 << 20, mesh1) == "problem"
+    assert resolve_partition("spin", 64, mesh1) == "spin"  # explicit wins
+    # 'auto' needs a real multi-device axis — a 1-way mesh stays 'problem'
+    assert resolve_partition("auto", 1 << 20, mesh1) == "problem"
+    assert resolve_partition("auto", 1 << 20, None) == "problem"
+    with pytest.raises(ValueError):
+        resolve_partition("bogus", 64, mesh1)
+
+
+def test_spin_mesh_and_fingerprint():
+    mesh = spin_mesh(1)
+    assert mesh.axis_names == ("model",)
+    fp = mesh_fingerprint(mesh)
+    assert fp and mesh_fingerprint(None) == ()
+    assert fp == mesh_fingerprint(spin_mesh(1))
+    with pytest.raises(ValueError):
+        spin_mesh(len(jax.devices()) + 1)
+
+
+def test_spinshard_requires_xorshift():
+    with pytest.raises(ValueError, match="xorshift"):
+        make_batched_backend("dense", n_bucket=64, n_trials=2,
+                             noise="threefry", partition="spin",
+                             mesh=spin_mesh(1))
+
+
+# ---------------------------------------------------------------------------
+# Shard-local lane seeding: any column block == the same block of the
+# global init (the property that makes sharded noise bit-identical)
+# ---------------------------------------------------------------------------
+def test_padded_noise_init_slice_matches_full():
+    full = padded_noise_init("xorshift", seed=9, n_trials=3, n_live=50,
+                             n_bucket=64)
+    for lo, hi in ((0, 16), (16, 48), (48, 64), (0, 64)):
+        sl = padded_noise_init_slice(9, 3, 50, 64, lo, hi)
+        np.testing.assert_array_equal(np.asarray(full)[..., lo:hi], sl)
+
+
+# ---------------------------------------------------------------------------
+# Double-buffered J-slab streaming: same numbers, prefetch pipelining only
+# ---------------------------------------------------------------------------
+def test_double_buffer_tiled_fields_bit_identical():
+    from repro.core.ising import local_fields_tiled
+
+    model = _twin().to_ising()
+    rng = np.random.default_rng(0)
+    m = rng.choice(np.array([-1, 1], np.int8), size=(3, model.n))
+    ref = local_fields_tiled(m, model.h, model.nbr_idx, model.nbr_w,
+                             tile_n=16)
+    db = local_fields_tiled(m, model.h, model.nbr_idx, model.nbr_w,
+                            tile_n=16, double_buffer=True)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(db))
+
+
+def test_double_buffer_dense_backend_bit_identical():
+    p = _twin()
+    ref = anneal(p, HP, seed=2, backend="dense", noise="xorshift",
+                 backend_opts={"j_mode": "tiled", "tile_n": 16})
+    db = anneal(p, HP, seed=2, backend="dense", noise="xorshift",
+                backend_opts={"j_mode": "tiled", "tile_n": 16,
+                              "double_buffer": True})
+    np.testing.assert_array_equal(ref.best_energy, db.best_energy)
+    np.testing.assert_array_equal(ref.best_m, db.best_m)
+
+
+# ---------------------------------------------------------------------------
+# Sharded == single-device on a 1-device mesh (full sharded code path):
+# every field arithmetic x both storage layouts, driver and service
+# ---------------------------------------------------------------------------
+CASES = [("sparse", {}), ("dense", {}), ("dense", {"field_mode": "popcount"})]
+
+
+@pytest.mark.parametrize("base,opts", CASES)
+@pytest.mark.parametrize("layout", ["dense", "packed"])
+def test_sharded_matches_plain_1dev(base, opts, layout):
+    model = _twin().to_ising()
+    nb = bucket_n(model.n, 64)
+    plats = schedule_plateaus(HP.schedule("hassa"), "i0max")
+    ref_opts = dict(opts)
+    if base == "dense":
+        ref_opts.setdefault("j_mode", "tiled")
+
+    def run(bk):
+        problem = bk.stack([model])
+        st = bk.init_state(problem, bk.init_noise([11], [model.n]))
+        st = jax.jit(lambda s: bk.run_shots(problem, s, plats, HP.m_shot))(st)
+        bh, bm = bk.finalize(st)
+        return np.asarray(bh), np.asarray(bm)[..., : model.n]
+
+    ref = make_batched_backend(base, n_bucket=nb, n_trials=HP.n_trials,
+                               noise="xorshift", storage_layout=layout,
+                               **ref_opts)
+    sh = make_batched_backend(base, n_bucket=nb, n_trials=HP.n_trials,
+                              noise="xorshift", storage_layout=layout,
+                              partition="spin", mesh=spin_mesh(1), **opts)
+    assert sh.name == "spinshard"
+    bh0, bm0 = run(ref)
+    bh1, bm1 = run(sh)
+    np.testing.assert_array_equal(bh0, bh1)
+    np.testing.assert_array_equal(bm0, bm1)
+
+
+def test_sharded_anneal_driver_matches_plain():
+    p = _twin()
+    ref = anneal(p, HP, seed=5, backend="sparse", noise="xorshift",
+                 track_energy=True)
+    sh = anneal(p, HP, seed=5, backend="sparse", noise="xorshift",
+                track_energy=True,
+                backend_opts={"partition": "spin", "mesh": spin_mesh(1)})
+    np.testing.assert_array_equal(ref.best_energy, sh.best_energy)
+    np.testing.assert_array_equal(ref.best_m, sh.best_m)
+    np.testing.assert_array_equal(ref.energy_mean, sh.energy_mean)
+    np.testing.assert_array_equal(ref.energy_min, sh.energy_min)
+
+
+def test_sharded_service_matches_plain():
+    reqs = lambda: [AnnealRequest(problem=_twin(), hp=HP, seed=4)]  # noqa: E731
+    base = AnnealService(backend="dense", min_bucket=64).solve(reqs())[0]
+    sh = AnnealService(backend="dense", min_bucket=64, partition="spin",
+                       mesh=spin_mesh(1)).solve(reqs())[0]
+    np.testing.assert_array_equal(base.result.best_energy,
+                                  sh.result.best_energy)
+    np.testing.assert_array_equal(base.result.best_m, sh.result.best_m)
+    np.testing.assert_array_equal(base.chunk_best_cut, sh.chunk_best_cut)
+
+
+# ---------------------------------------------------------------------------
+# Admission: giant instances only pass when they route to the spin path
+# ---------------------------------------------------------------------------
+def _big_request():
+    big = gset.toroidal_grid(MAX_UNSHARDED_SPINS + 1232, seed=5, name="big")
+    return AnnealRequest(problem=big, hp=HP, seed=1)
+
+
+def test_giant_instance_rejected_unsharded():
+    with pytest.raises(AdmissionError, match="partition='spin'"):
+        AnnealService(backend="sparse").solve([_big_request()])
+
+
+def test_giant_instance_admitted_with_spin_partition():
+    # Admission only — the full solve is the scale benchmark's job.
+    from repro.core.engine import normalize_problem
+
+    svc = AnnealService(backend="sparse", partition="spin", mesh=spin_mesh(1))
+    req = _big_request()
+    _maxcut, model = normalize_problem(req.problem)
+    svc._admit(0, req, model)  # must not raise
+
+
+def test_sa_requests_never_route_to_spin():
+    svc = AnnealService(partition="spin", mesh=spin_mesh(1))
+    assert svc.partition_for("sa", 1 << 16) == "problem"
+    assert svc.partition_for("ptssa", 1 << 16) == "problem"
+    assert svc.partition_for("ssa", 1 << 16) == "spin"
+
+
+# ---------------------------------------------------------------------------
+# Resilience plumbing: opt filtering + checkpoint fingerprints
+# ---------------------------------------------------------------------------
+def test_filter_backend_opts_spin_keyset():
+    opts = {"block_r": 8, "field_mode": "auto", "bogus": 1}
+    assert filter_backend_opts("sparse", opts) == {}
+    spin = filter_backend_opts("sparse", opts, partition="spin")
+    assert spin == {"block_r": 8, "field_mode": "auto"}
+
+
+def test_group_fingerprint_keys_on_partition_and_mesh():
+    model = _twin().to_ising()
+    items = [(0, AnnealRequest(problem=_twin(), hp=HP, seed=1), None, model)]
+    base = group_fingerprint("ssa", 64, "dense", "dense", "xorshift", 1, items)
+    spin = group_fingerprint("ssa", 64, "dense", "dense", "xorshift", 1,
+                             items, partition="spin",
+                             mesh_fp=mesh_fingerprint(spin_mesh(1)))
+    assert base != spin
+
+
+# ---------------------------------------------------------------------------
+# Per-device accounting primitives (host + 1-device cases)
+# ---------------------------------------------------------------------------
+def test_per_device_bytes_accounting():
+    from repro.core import memory
+
+    tree = {"host": np.zeros(16, np.int32), "dev": jax.numpy.zeros(8, np.int8)}
+    per = memory.per_device_bytes(tree)
+    assert per["host"] == 64
+    assert sum(v for k, v in per.items() if k != "host") == 8
+    assert memory.max_device_bytes(tree) == 64
+
+
+# ---------------------------------------------------------------------------
+# True multi-device behaviour: one consolidated subprocess with 8 forced
+# host devices (XLA_FLAGS must precede jax init, hence the subprocess).
+# Covers: cross-shard bit-identity (both field modes x both layouts, P in
+# {2, 8}), sharded checkpoint kill/resume through the service, and the
+# ~linear per-device residency drop.
+# ---------------------------------------------------------------------------
+MULTIDEV_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, tempfile
+    import numpy as np, jax
+    assert len(jax.devices()) == 8
+    from repro.core import SSAHyperParams, gset
+    from repro.core.engine import (bucket_n, make_batched_backend,
+                                   schedule_plateaus)
+    from repro.core import memory
+    from repro.ft.faults import FaultInjector, InjectedKill
+    from repro.serve import AnnealRequest, AnnealService, ResiliencePolicy
+    from repro.sharding import spin_mesh
+
+    hp = SSAHyperParams(n_trials=3, m_shot=2, tau=3, i0_min=1, i0_max=4)
+    model = gset.toroidal_grid(64, seed=17).to_ising()
+    nb = bucket_n(model.n, 64)
+    plats = schedule_plateaus(hp.schedule("hassa"), "i0max")
+
+    def run(bk):
+        problem = bk.stack([model])
+        st = bk.init_state(problem, bk.init_noise([11], [model.n]))
+        st = jax.jit(lambda s: bk.run_shots(problem, s, plats, hp.m_shot))(st)
+        bh, bm = bk.finalize(st)
+        return np.asarray(bh), np.asarray(bm)[..., :model.n]
+
+    # 1. cross-shard bit-identity
+    for base, opts in (("sparse", {}), ("dense", {}),
+                       ("dense", {"field_mode": "popcount"})):
+        for layout in ("dense", "packed"):
+            ref_opts = dict(opts)
+            if base == "dense":
+                ref_opts.setdefault("j_mode", "tiled")
+            ref = make_batched_backend(base, n_bucket=nb, n_trials=3,
+                                       noise="xorshift",
+                                       storage_layout=layout, **ref_opts)
+            bh0, bm0 = run(ref)
+            for p in (2, 8):
+                sh = make_batched_backend(base, n_bucket=nb, n_trials=3,
+                                          noise="xorshift",
+                                          storage_layout=layout,
+                                          partition="spin",
+                                          mesh=spin_mesh(p), **opts)
+                bh1, bm1 = run(sh)
+                assert (bh0 == bh1).all() and (bm0 == bm1).all(), (
+                    base, opts, layout, p)
+    print("bit-identity ok")
+
+    # 2. sharded checkpoint kill/resume through the service
+    mesh = spin_mesh(4)
+    hp_r = SSAHyperParams(n_trials=3, m_shot=6, tau=4, i0_min=1, i0_max=8)
+    reqs = lambda: [AnnealRequest(problem=gset.toroidal_grid(64, seed=17),
+                                  hp=hp_r, seed=4)]
+    base = AnnealService(backend="dense", min_bucket=64, partition="spin",
+                         mesh=mesh).solve(reqs())[0]
+    tmp = tempfile.mkdtemp()
+    pol = ResiliencePolicy(checkpoint_dir=tmp)
+    inj = FaultInjector(); inj.arm("kill", chunk=2)
+    try:
+        AnnealService(backend="dense", min_bucket=64, partition="spin",
+                      mesh=mesh, resilience=pol, faults=inj).solve(reqs())
+        raise SystemExit("kill did not fire")
+    except InjectedKill:
+        pass
+    resumed = AnnealService(backend="dense", min_bucket=64, partition="spin",
+                            mesh=mesh, resilience=pol).solve(reqs())[0]
+    assert any(e.kind == "resume" for e in resumed.events)
+    np.testing.assert_array_equal(base.result.best_energy,
+                                  resumed.result.best_energy)
+    np.testing.assert_array_equal(base.result.best_m, resumed.result.best_m)
+    print("kill/resume ok")
+
+    # 3. per-device residency drops ~linearly with the model-axis size
+    busiest = {}
+    for p in (1, 8):
+        bk = make_batched_backend("dense", n_bucket=4096, n_trials=2,
+                                  noise="xorshift", partition="spin",
+                                  mesh=spin_mesh(p))
+        prob = bk.stack([model])
+        st = bk.init_state(prob, bk.init_noise([0], [model.n]))
+        busiest[p] = memory.max_device_bytes((prob, st))
+    ratio = busiest[1] / busiest[8]
+    assert ratio >= 4.0, busiest  # ~8x minus replicated best_H/h residue
+    print(json.dumps({"residency": busiest, "ratio": ratio}))
+    print("MULTIDEV_OK")
+    """
+)
+
+
+def test_multidevice_subprocess():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(root, "src"), env.get("PYTHONPATH")) if p
+    )
+    proc = subprocess.run([sys.executable, "-c", MULTIDEV_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0 and "MULTIDEV_OK" in proc.stdout, (
+        proc.stdout[-3000:] + "\n" + proc.stderr[-3000:]
+    )
