@@ -37,6 +37,56 @@ def solve_batch(requests: List[AnnealRequest], *, backend: str = "sparse",
     return service.solve(requests, progress=progress)
 
 
+def stream_demo(backend: str = "sparse", full: bool = False):
+    """Continuous-batching demo (DESIGN.md §12): replay a mixed trace of
+    G-set Max-Cut and QUBO requests through the streaming front door.
+
+    The batch QUBOs are submitted first and an interactive G-set request
+    last — the scheduler still seats the interactive one ahead of the
+    remaining batch queue, and every lane retires independently at its own
+    chunk boundary (watch the backfills in the closing stats line).
+    """
+    from repro.problems import make_demo
+    from repro.serve import StreamingAnnealService, StreamPolicy
+
+    trials = 16 if full else 4
+    hp = SSAHyperParams(n_trials=trials, m_shot=30 if full else 6,
+                        tau=8, i0_min=1, i0_max=16)
+    ss = StreamingAnnealService(backend=backend, min_bucket=64,
+                                policy=StreamPolicy(slots_per_table=2))
+    ss.start()
+    t0 = time.time()
+    tickets = []
+    try:
+        for i in range(3):  # the standing batch workload: demo QUBOs
+            req = AnnealRequest(problem=make_demo("qubo", n=96, seed=i),
+                                hp=hp, seed=i)
+            tickets.append(("batch", ss.submit(req, priority="batch")))
+        for name in ("G11", "King1"):  # a latency-sensitive user shows up
+            req = AnnealRequest(problem=gset.load(name), hp=hp, seed=7)
+            tickets.append(
+                ("interactive", ss.submit(req, priority="interactive")))
+        print(f"submitted {len(tickets)} requests "
+              "(3 batch QUBOs first, 2 interactive G-set last)")
+        for prio, t in tickets:
+            r = t.result(timeout=None)
+            name = getattr(t.request.problem, "name", None) or \
+                t.request.problem.model.name
+            best = (r.objective if r.objective is not None
+                    else r.result.overall_best_cut)
+            print(f"  [{prio:11s}] {name}: best {best} "
+                  f"(queued {r.queued_s:.2f}s, lane {r.lane_wall_s:.2f}s, "
+                  f"status={r.status})")
+    finally:
+        ss.stop()
+    st = ss.stream_stats()
+    print(f"stream drained in {time.time() - t0:.1f}s: "
+          f"occupancy={st['occupancy']:.2f} "
+          f"backfills={st['stream_backfills']} "
+          f"tables={st['stream_tables_created']} "
+          f"quanta={st['stream_quanta']}")
+
+
 def main(argv: Optional[List[str]] = None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -45,7 +95,14 @@ def main(argv: Optional[List[str]] = None):
                     default="sparse")
     ap.add_argument("--skip-sa", action="store_true",
                     help="skip the SA baseline comparison")
+    ap.add_argument("--stream-demo", action="store_true",
+                    help="replay a mixed G-set + QUBO trace through the "
+                         "continuous-batching StreamingAnnealService "
+                         "(DESIGN.md §12) instead of one solve() batch")
     args = ap.parse_args(argv)
+
+    if args.stream_demo:
+        return stream_demo(backend=args.backend, full=args.full)
 
     trials = 100 if args.full else 8
     m_shot = 150 if args.full else 15

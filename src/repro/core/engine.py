@@ -119,6 +119,9 @@ __all__ = [
     "next_pow2",
     "bucket_n",
     "pad_model",
+    "pad_degree",
+    "extract_slot",
+    "splice_slot",
     "padded_noise_init",
     "padded_noise_init_slice",
     "BatchedBackend",
@@ -1402,28 +1405,78 @@ class _VmapBatchedBackend(BatchedBackend):
         return jax.vmap(one)(problem, state)
 
 
+def pad_degree(model: IsingModel, d: int) -> IsingModel:
+    """Pad a model's adjacency to ``d`` neighbor columns.
+
+    The extra columns are self-index/zero-weight entries, so the gathered
+    local field is unchanged — degree padding is results-invariant the same
+    way bucket padding is (:func:`pad_model`).  The sparse/tiled stacked
+    representation's neighbor width is program-structural, so anything that
+    splices problems into an existing stacked batch (the streaming slot
+    tables) must pre-pad every model to the batch's degree.
+    """
+    d = int(d)
+    if model.max_degree == d:
+        return model
+    if model.max_degree > d:
+        raise ValueError(
+            f"model degree {model.max_degree} exceeds target degree {d}"
+        )
+    extra = d - model.max_degree
+    idx, w = np.asarray(model.nbr_idx), np.asarray(model.nbr_w)
+    self_idx = np.tile(np.arange(model.n, dtype=np.int32)[:, None], (1, extra))
+    return IsingModel(
+        n=model.n,
+        h=np.asarray(model.h, np.int32),
+        nbr_idx=np.concatenate([idx, self_idx], axis=1),
+        nbr_w=np.concatenate([w, np.zeros((model.n, extra), np.int32)], axis=1),
+        name=model.name,
+    )
+
+
 def _stack_sparse_models(models, n_bucket: int) -> dict:
     """Stacked, bucket-padded adjacency views {h, nbr_idx, nbr_w}."""
     padded = [pad_model(m, n_bucket) for m in models]
     d = max(m.max_degree for m in padded)
-    idxs, ws, hs = [], [], []
-    for m in padded:
-        extra = d - m.max_degree
-        idx, w = np.asarray(m.nbr_idx), np.asarray(m.nbr_w)
-        if extra:
-            self_idx = np.tile(
-                np.arange(m.n, dtype=np.int32)[:, None], (1, extra)
-            )
-            idx = np.concatenate([idx, self_idx], axis=1)
-            w = np.concatenate([w, np.zeros((m.n, extra), np.int32)], axis=1)
-        idxs.append(idx)
-        ws.append(w)
-        hs.append(np.asarray(m.h, np.int32))
+    padded = [pad_degree(m, d) for m in padded]
     return {
-        "h": jnp.asarray(np.stack(hs), jnp.int32),
-        "nbr_idx": jnp.asarray(np.stack(idxs), jnp.int32),
-        "nbr_w": jnp.asarray(np.stack(ws), jnp.int32),
+        "h": jnp.asarray(
+            np.stack([np.asarray(m.h, np.int32) for m in padded]), jnp.int32
+        ),
+        "nbr_idx": jnp.asarray(
+            np.stack([np.asarray(m.nbr_idx) for m in padded]), jnp.int32
+        ),
+        "nbr_w": jnp.asarray(
+            np.stack([np.asarray(m.nbr_w) for m in padded]), jnp.int32
+        ),
     }
+
+
+def extract_slot(tree, slot: int):
+    """Slice one problem lane out of a batched pytree, keeping a size-1 axis.
+
+    Works on anything whose leaves carry the problem axis leading —
+    :class:`EngineState` / :class:`PackedEngineState`, stacked problem dicts,
+    noise-state stacks.  The size-1 leading axis makes the result directly
+    comparable (and splicable) to a B=1 batched run of the same request,
+    which is what makes per-slot checkpoints interchangeable with solo-group
+    checkpoints.
+    """
+    return jax.tree_util.tree_map(lambda a: jnp.asarray(a)[slot : slot + 1], tree)
+
+
+def splice_slot(tree, slot: int, sub):
+    """Write a size-1-problem-axis pytree into lane ``slot`` of a batched one.
+
+    The slot-backfill primitive of the streaming service: because per-problem
+    lanes never interact (the padding-invariance property), replacing one
+    lane's problem arrays + engine state leaves every other lane's
+    trajectory bit-identical.  ``sub`` must be structure- and shape-
+    compatible with ``extract_slot(tree, slot)``.
+    """
+    return jax.tree_util.tree_map(
+        lambda a, s: jnp.asarray(a).at[slot].set(jnp.asarray(s)[0]), tree, sub
+    )
 
 
 class BatchedSparseBackend(_VmapBatchedBackend):

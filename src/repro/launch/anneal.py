@@ -18,6 +18,12 @@ Service mode (DESIGN.md §7): pass a comma list to ``--problem`` (or
 plateau program per shape bucket, with per-chunk streaming progress and
 optional ``--target-cut`` early stop.
 
+Streaming mode (DESIGN.md §12): add ``--stream`` to submit the problem
+list to the always-on continuous-batching front door
+(:class:`repro.serve.StreamingAnnealService`) instead of a single
+``solve()`` batch — ``--arrival-rate`` paces the submissions as an
+open-loop client, ``--priority`` picks the admission class.
+
 Problem frontend (DESIGN.md §9): ``--problem-kind qubo|mis|coloring|
 partition`` generates demo instances of the selected family (sized by
 ``--problem-n``, seeded by ``--seed``, ``--count`` of them) and solves them
@@ -118,6 +124,62 @@ def _run_service(problem_names, hp, args):
           f"{info.get('traces_chunk', 0)} plateau-program trace(s))")
 
 
+def _run_stream(problem_names, hp, args):
+    """Streaming client mode (DESIGN.md §12): submit the problem list to an
+    always-on StreamingAnnealService — optionally paced as an open-loop
+    arrival process — and await the tickets."""
+    from repro.serve import (
+        AnnealRequest,
+        AnnealService,
+        StreamingAnnealService,
+        StreamPolicy,
+    )
+
+    problems = [gset.load(name) for name in problem_names]
+    partition, mesh = _partition_mesh(args)
+    svc = AnnealService(backend=args.backend, noise=args.noise,
+                        storage_layout=args.storage_layout,
+                        chunk_shots=args.chunk_shots,
+                        backend_opts=_backend_opts(args),
+                        resilience=_resilience_policy(args),
+                        partition=partition, mesh=mesh)
+    ss = StreamingAnnealService(
+        service=svc,
+        policy=StreamPolicy(slots_per_table=args.stream_slots))
+    ss.start()
+    t0 = time.time()
+    tickets = []
+    try:
+        for i, p in enumerate(problems):
+            if args.arrival_rate > 0 and i:
+                time.sleep(1.0 / args.arrival_rate)
+            req = AnnealRequest(
+                problem=p, hp="auto" if args.auto_tune else hp,
+                seed=args.seed + i, storage=args.storage,
+                target_cut=args.target_cut, auto_base=hp,
+                deadline_s=args.deadline_s)
+            tickets.append(ss.submit(req, priority=args.priority))
+        for p, t in zip(problems, tickets):
+            r = t.result(timeout=None)
+            if r.result is None:
+                print(f"{p.name}: {r.status.upper()} "
+                      f"({'; '.join(e.kind for e in r.events)})")
+                continue
+            print(f"{p.name}: best cut {r.result.overall_best_cut} "
+                  f"[chunks={r.chunks_run}/{r.chunks_total} "
+                  f"queued {r.queued_s:.2f}s lane {r.lane_wall_s:.2f}s] "
+                  f"status={r.status}")
+    finally:
+        ss.stop()
+    dt = time.time() - t0
+    st = ss.stream_stats()
+    print(f"stream of {len(problems)} in {dt:.1f}s: "
+          f"occupancy={st['occupancy']:.2f} "
+          f"backfills={st['stream_backfills']} "
+          f"tables={st['stream_tables_created']} "
+          f"quanta={st['stream_quanta']}")
+
+
 def _run_problem_kind(hp, args):
     """Demo instances of a problem family through the service (DESIGN.md §9)."""
     from repro.problems import make_demo
@@ -179,6 +241,18 @@ def main():
                          "(repro.core.autotune) instead of the Table-II flags")
     ap.add_argument("--service", action="store_true",
                     help="route through the AnnealService even for one problem")
+    ap.add_argument("--stream", action="store_true",
+                    help="streaming client mode: submit the problem list to "
+                         "the continuous-batching StreamingAnnealService "
+                         "(DESIGN.md §12) instead of one solve() batch")
+    ap.add_argument("--stream-slots", type=int, default=4,
+                    help="--stream: compiled slot-table width (power of two)")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="--stream: pace submissions at this rate in req/s "
+                         "(0 = submit everything immediately)")
+    ap.add_argument("--priority", choices=("interactive", "batch"),
+                    default="batch",
+                    help="--stream: admission priority class")
     ap.add_argument("--target-cut", type=int, default=None,
                     help="service mode: early-stop once every request hits it")
     ap.add_argument("--chunk-shots", type=int, default=1,
@@ -240,6 +314,8 @@ def main():
     if args.problem_kind != "gset":
         return _run_problem_kind(hp, args)
     names = args.problem.split(",")
+    if args.stream:
+        return _run_stream(names, hp, args)
     if args.service or len(names) > 1:
         return _run_service(names, hp, args)
 

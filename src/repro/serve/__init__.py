@@ -2,8 +2,9 @@
 
 The production entry is the annealing service (the paper's own workload,
 DESIGN.md §7): shape-bucketed, batched, compiled-executable-cached Max-Cut
-solving over the plateau engine.  The LM prefill/decode serving stack lives
-in :mod:`repro.serve.lm` (DESIGN.md §6).
+solving over the plateau engine.  :mod:`repro.serve.stream` adds the
+always-on continuous-batching front door (DESIGN.md §12).  The LM
+prefill/decode serving stack lives in :mod:`repro.serve.lm` (DESIGN.md §6).
 """
 from .anneal_service import (  # noqa: F401
     AnnealProgress,
@@ -17,8 +18,15 @@ from .resilience import (  # noqa: F401
     STATUS_FALLBACK,
     STATUS_OK,
     STATUS_QUARANTINED,
+    STATUS_SHED,
     AdmissionError,
+    QueueFullError,
     QuarantineFault,
     ResiliencePolicy,
     ServiceEvent,
+)
+from .stream import (  # noqa: F401
+    StreamingAnnealService,
+    StreamPolicy,
+    StreamTicket,
 )

@@ -82,6 +82,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import os
+import threading
 import time
 from typing import Callable, List, Optional, Sequence, Union
 
@@ -189,8 +190,12 @@ class AnnealResponse:
     objective: Optional[int] = None  # domain objective of `solution` if feasible
     feasible: Optional[bool] = None  # verifier verdict (None: raw Ising/maxcut)
     autotune: Optional[AutotuneReport] = None  # set when hp='auto' resolved
-    status: str = STATUS_OK        # 'ok'|'fallback'|'deadline'|'quarantined'|'failed'
+    status: str = STATUS_OK        # 'ok'|'fallback'|'deadline'|'quarantined'|'failed'|'shed'
     events: List[ServiceEvent] = dataclasses.field(default_factory=list)
+    # Per-lane latency honesty (streaming): a lane that early-stops reports
+    # the wall time to ITS chunk-boundary stop, not the whole group's.
+    lane_wall_s: Optional[float] = None  # group start → this lane's stop boundary
+    queued_s: Optional[float] = None     # streaming only: submit → first seated
 
 
 @dataclasses.dataclass(frozen=True)
@@ -215,6 +220,60 @@ def _largest_divisor_leq(n: int, k: int) -> int:
 def _opts_key(opts: dict) -> tuple:
     """Hashable projection of backend_opts for the executable-cache key."""
     return tuple(sorted((k, repr(v)) for k, v in opts.items()))
+
+
+class _LRUCache:
+    """Bounded LRU map for compiled executables.
+
+    Under diverse streaming traffic the per-group-key program population is
+    unbounded (every new (bucket, batch, schedule, opts) shape compiles a
+    fresh program and its XLA executable stays live), so the cache evicts
+    least-recently-used entries past ``capacity``, counting evictions into
+    the service's ``stats``.  Thread-safe: concurrent ``solve()`` calls and
+    the streaming scheduler hit it from different threads.  Two threads
+    missing on the same key may both build the program; the second ``put``
+    wins and the loser's executable is garbage — wasteful but correct
+    (build-outside-lock keeps compiles from serializing the service).
+    """
+
+    def __init__(self, capacity: int, stats: collections.Counter):
+        if capacity < 1:
+            raise ValueError(f"max_cached_executables must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self._od: collections.OrderedDict = collections.OrderedDict()
+        self._lock = threading.Lock()
+        self._stats = stats
+
+    def get(self, key):
+        with self._lock:
+            ent = self._od.get(key)
+            if ent is not None:
+                self._od.move_to_end(key)
+            return ent
+
+    def __setitem__(self, key, ent):
+        with self._lock:
+            self._od[key] = ent
+            self._od.move_to_end(key)
+            while len(self._od) > self.capacity:
+                self._od.popitem(last=False)
+                self._stats["program_cache_evictions"] += 1
+
+    def __len__(self):
+        with self._lock:
+            return len(self._od)
+
+    def __contains__(self, key):
+        with self._lock:
+            return key in self._od
+
+    def __iter__(self):
+        with self._lock:
+            return iter(list(self._od))
+
+    def values(self):
+        with self._lock:
+            return list(self._od.values())
 
 
 class _GroupCtx:
@@ -329,6 +388,7 @@ class AnnealService:
         faults: Optional[FaultInjector] = None,
         partition: str = "problem",
         mesh=None,
+        max_cached_executables: int = 64,
     ):
         """``storage_layout='packed'`` keeps the HBM-resident engine state
         between chunk launches as uint32 spin bitplanes (DESIGN.md §4).
@@ -371,8 +431,10 @@ class AnnealService:
         self.faults = faults
         self.partition = partition
         self.mesh = mesh
-        self._programs: dict = {}
         self.stats = collections.Counter()
+        # LRU-bounded: diverse streaming traffic would otherwise grow one
+        # live XLA executable per unique group key forever.
+        self._programs = _LRUCache(max_cached_executables, self.stats)
 
     def partition_for(self, kind: str, nb: int) -> str:
         """Effective partition for one group: 'problem' or 'spin'.
@@ -450,6 +512,8 @@ class AnnealService:
         """Executable-cache observability (programs + trace counters)."""
         return {
             "programs": len(self._programs),
+            "capacity": self._programs.capacity,
+            "evictions": self.stats["program_cache_evictions"],
             "keys": sorted(repr(k) for k in self._programs),
             **{k: v for k, v in self.stats.items()},
         }
@@ -679,27 +743,28 @@ class AnnealService:
     # ------------------------------------------------------------------
     # SSA / HA-SSA groups (the tentpole hot path)
     # ------------------------------------------------------------------
-    def _solve_ssa_group(self, nb, items, responses, progress, ctx):
-        t0 = time.perf_counter()
-        _, req0, _, _ = items[0]
-        hp: SSAHyperParams = req0.hp
-        plateaus = schedule_plateaus(hp.schedule(req0.schedule_kind), req0.storage)
-        stored_per_iter = sum(p.length for p in plateaus if p.eligible)
-        chunk = _largest_divisor_leq(hp.m_shot, self.chunk_shots)
-        n_chunks = hp.m_shot // chunk
+    def _ssa_programs(self, *, nb, b_bucket, hp, storage, schedule_kind,
+                      backend, opts, chunk, fire=None):
+        """Compiled SSA plateau programs for one (bucket, batch) shape.
 
-        padded, b_live, b_bucket = self._pad_group(items)
-        sig = self._group_key(req0, nb)[-1]
-        backend, opts = ctx.backend, ctx.backend_opts
-        opts = self._resolve_field_opts(backend, opts, items)
+        Returns ``(bk, init_fn, chunk_fn, plateaus)`` from the bounded
+        executable cache, compiling on miss.  Shared by the one-shot group
+        solver and the streaming slot tables (:mod:`repro.serve.stream`) —
+        the cache key deliberately excludes ``m_shot``: the plateau chain per
+        iteration is budget-independent, so a slot table can serve mixed
+        chunk budgets through one program.
+        """
+        plateaus = schedule_plateaus(hp.schedule(schedule_kind), storage)
+        sig = hp.schedule(schedule_kind).signature()
         part = self.partition_for("ssa", nb)
         cache_key = ("ssa", backend, _opts_key(opts), self.storage_layout, nb,
-                     b_bucket, hp.n_trials, hp.n_rnd, self.noise, req0.storage,
+                     b_bucket, hp.n_trials, hp.n_rnd, self.noise, storage,
                      sig, chunk, part,
                      mesh_fingerprint(self.mesh) if part == "spin" else ())
         ent = self._programs.get(cache_key)
         if ent is None:
-            ctx.fire("compile", backend=backend, kind="ssa", bucket=nb)
+            if fire is not None:
+                fire("compile", backend=backend, kind="ssa", bucket=nb)
             self.stats["program_cache_misses"] += 1
             bk = make_batched_backend(
                 backend, n_bucket=nb, n_trials=hp.n_trials,
@@ -720,7 +785,24 @@ class AnnealService:
             self._programs[cache_key] = ent
         else:
             self.stats["program_cache_hits"] += 1
-        bk, init_fn, chunk_fn = ent
+        return (*ent, plateaus)
+
+    def _solve_ssa_group(self, nb, items, responses, progress, ctx):
+        t0 = time.perf_counter()
+        _, req0, _, _ = items[0]
+        hp: SSAHyperParams = req0.hp
+        chunk = _largest_divisor_leq(hp.m_shot, self.chunk_shots)
+        n_chunks = hp.m_shot // chunk
+
+        padded, b_live, b_bucket = self._pad_group(items)
+        backend, opts = ctx.backend, ctx.backend_opts
+        opts = self._resolve_field_opts(backend, opts, items)
+        bk, init_fn, chunk_fn, plateaus = self._ssa_programs(
+            nb=nb, b_bucket=b_bucket, hp=hp, storage=req0.storage,
+            schedule_kind=req0.schedule_kind, backend=backend, opts=opts,
+            chunk=chunk, fire=ctx.fire,
+        )
+        stored_per_iter = sum(p.length for p in plateaus if p.eligible)
 
         stacked = bk.stack([model for _, _, _, model in padded])
         ctx.fire("oom", backend=backend, kind="ssa", bucket=nb, batch=b_bucket,
@@ -731,10 +813,11 @@ class AnnealService:
         )
         state = init_fn(stacked, ns0)
 
-        state, chunk_traces = self._chunk_loop(
+        state, chunk_traces, stops = self._chunk_loop(
             "ssa", nb, items, n_chunks, progress,
             lambda st, c: chunk_fn(stacked, st), state,
-            lambda st: st.best_H, ctx,
+            lambda st: st.best_H, ctx, width=b_bucket,
+            snap=lambda st: bk.finalize(st),
         )
         bh_dev, bm_dev = bk.finalize(state)  # layout-agnostic (unpacks bitplanes)
         best_H = np.asarray(bh_dev)
@@ -742,11 +825,15 @@ class AnnealService:
         wall = time.perf_counter() - t0
 
         for slot, (idx, req, maxcut, model) in enumerate(items):
-            bh = best_H[slot]
+            stop = stops[slot]
+            if stop is not None and stop.get("best_H") is not None:
+                bh, bm_full = stop["best_H"], stop["best_m"]
+            else:
+                bh, bm_full = best_H[slot], best_m[slot]
             result = AnnealResult(
                 best_cut=np.asarray(finalize_cut(bh, maxcut)),
                 best_energy=bh,
-                best_m=best_m[slot][:, : model.n],
+                best_m=bm_full[:, : model.n],
                 energy_mean=None,
                 energy_min=None,
                 traj=None,
@@ -758,6 +845,7 @@ class AnnealService:
                 batch=b_live, chunks_run=len(chunk_traces[slot]),
                 chunks_total=n_chunks,
                 chunk_best_cut=np.asarray(chunk_traces[slot]),
+                lane_wall_s=(stop["t_abs"] - t0 if stop is not None else wall),
             )
 
     # ------------------------------------------------------------------
@@ -821,10 +909,11 @@ class AnnealService:
             for c in range(n_chunks)
         ]
 
-        carry, chunk_traces = self._chunk_loop(
+        carry, chunk_traces, stops = self._chunk_loop(
             "sa", nb, items, n_chunks, progress,
             lambda ca, c: chunk_fn(stacked, ca, chunk_arrays[c], n_lives),
-            carry, lambda ca: ca[3], ctx,
+            carry, lambda ca: ca[3], ctx, width=b_bucket,
+            snap=lambda ca: (ca[3], ca[4]),
         )
         _, _, _, best_H, best_m = carry
         best_H = np.asarray(best_H)
@@ -832,11 +921,15 @@ class AnnealService:
         wall = time.perf_counter() - t0
 
         for slot, (idx, req, maxcut, model) in enumerate(items):
-            bh = best_H[slot]
+            stop = stops[slot]
+            if stop is not None and stop.get("best_H") is not None:
+                bh, bm_full = stop["best_H"], stop["best_m"]
+            else:
+                bh, bm_full = best_H[slot], best_m[slot]
             result = SAResult(
                 best_cut=np.asarray(finalize_cut(bh, maxcut)),
                 best_energy=bh,
-                best_m=best_m[slot][:, : model.n],
+                best_m=bm_full[:, : model.n],
                 energy_mean=None,
                 energy_min=None,
                 hp=req.hp,
@@ -846,6 +939,7 @@ class AnnealService:
                 batch=b_live, chunks_run=len(chunk_traces[slot]),
                 chunks_total=n_chunks,
                 chunk_best_cut=np.asarray(chunk_traces[slot]),
+                lane_wall_s=(stop["t_abs"] - t0 if stop is not None else wall),
             )
 
     # ------------------------------------------------------------------
@@ -922,20 +1016,25 @@ class AnnealService:
             sl = slice(c * chunk, (c + 1) * chunk)
             return chunk_fn(stacked, st, all_keys[:, sl], parities[sl])
 
-        state, chunk_traces = self._chunk_loop(
+        state, chunk_traces, stops = self._chunk_loop(
             "ptssa", nb, items, n_chunks, progress, step, state,
-            lambda st: st.best_H, ctx,
+            lambda st: st.best_H, ctx, width=b_bucket,
+            snap=lambda st: (st.best_H, st.best_m),
         )
         best_H = np.asarray(state.best_H)
         best_m = np.asarray(state.best_m)
         wall = time.perf_counter() - t0
 
         for slot, (idx, req, maxcut, model) in enumerate(items):
-            bh = best_H[slot]
+            stop = stops[slot]
+            if stop is not None and stop.get("best_H") is not None:
+                bh, bm_full = stop["best_H"], stop["best_m"]
+            else:
+                bh, bm_full = best_H[slot], best_m[slot]
             result = PTSSAResult(
                 best_cut=np.asarray(finalize_cut(bh, maxcut)),
                 best_energy=bh,
-                best_m=best_m[slot][:, : model.n],
+                best_m=bm_full[:, : model.n],
                 energy_mean=None,
                 energy_min=None,
                 hp=req.hp,
@@ -945,6 +1044,7 @@ class AnnealService:
                 batch=b_live, chunks_run=len(chunk_traces[slot]),
                 chunks_total=n_chunks,
                 chunk_best_cut=np.asarray(chunk_traces[slot]),
+                lane_wall_s=(stop["t_abs"] - t0 if stop is not None else wall),
             )
 
     # ------------------------------------------------------------------
@@ -952,7 +1052,7 @@ class AnnealService:
     # deadline watchdog, non-finite detector, fault hooks
     # ------------------------------------------------------------------
     def _chunk_loop(self, kind, nb, items, n_chunks, progress, step, state,
-                    best_of, ctx):
+                    best_of, ctx, *, width=None, snap=None):
         """Run up to n_chunks ``step(state, c)`` calls from the last
         checkpoint; report per-chunk bests; stop early when every request is
         done (target_cut reached or deadline expired).
@@ -960,8 +1060,15 @@ class AnnealService:
         Chunk boundaries are where all the resilience machinery lives: the
         state snapshot (checkpoint), the kill/nan fault hooks, the
         non-finite detector (quarantine), and the deadline watchdog.  A
-        deadline-expired request's streaming trace freezes at expiry; its
-        final result is whatever the state holds when its group stops.
+        request that stops early — target reached or deadline expired — has
+        its streaming trace *and its result* frozen at its own chunk
+        boundary (the ``snap`` callable reads best_H/best_m there), so
+        per-lane latency and result reporting are honest even while the rest
+        of the group keeps annealing.  The third return value carries one
+        stop record per lane: ``{'chunk', 't_abs'[, 'best_H', 'best_m']}``,
+        or None for a lane that ran to the group's end (its result comes
+        from the final state).  ``width`` is the padded batch width, feeding
+        the slot/live-lane occupancy counters the streaming benchmark reads.
         """
         traces = [[] for _ in items]
         start = 0
@@ -971,7 +1078,12 @@ class AnnealService:
                 traces = restored
         done = [False] * len(items)
         frozen = [False] * len(items)
+        stops: List[Optional[dict]] = [None] * len(items)
         for c in range(start, n_chunks):
+            self.stats["slot_chunks"] += width if width is not None else len(items)
+            self.stats["live_lane_chunks"] += sum(
+                1 for s in range(len(items)) if not done[s]
+            )
             state = step(state, c)
             best_H = np.asarray(best_of(state))  # device sync: the report
             # Non-finite watchdog.  The 'nan' hook corrupts the detector's
@@ -1005,19 +1117,23 @@ class AnnealService:
                     request_indices=tuple(idx for idx, *_ in items),
                     best_cut=tuple(bests),
                 ))
+            now = time.perf_counter()
+            newly: List[int] = []
             if ctx is not None:
                 ctx.save(c + 1, state, traces)
                 ctx.fire("kill", kind=kind, chunk=c)
-                now = time.perf_counter()
                 for slot, (idx, req, _, _) in enumerate(items):
                     if done[slot]:
                         continue
                     if req.target_cut is not None and bests[slot] >= req.target_cut:
-                        done[slot] = True
+                        done[slot] = frozen[slot] = True
+                        stops[slot] = {"chunk": c + 1, "t_abs": now}
+                        newly.append(slot)
                     elif (req.deadline_s is not None
                           and now - ctx.solve_t0 >= req.deadline_s):
-                        done[slot] = True
-                        frozen[slot] = True
+                        done[slot] = frozen[slot] = True
+                        stops[slot] = {"chunk": c + 1, "t_abs": now}
+                        newly.append(slot)
                         ctx.statuses[idx] = STATUS_DEADLINE
                         ctx._event("deadline", request=idx, chunk=c,
                                    best=bests[slot])
@@ -1026,8 +1142,20 @@ class AnnealService:
                 for slot, (idx, req, _, _) in enumerate(items):
                     if (not done[slot] and req.target_cut is not None
                             and bests[slot] >= req.target_cut):
-                        done[slot] = True
+                        done[slot] = frozen[slot] = True
+                        stops[slot] = {"chunk": c + 1, "t_abs": now}
+                        newly.append(slot)
+            group_ends = (c + 1 == n_chunks) or (bool(done) and all(done))
+            if newly and not group_ends and snap is not None:
+                # The group continues past these lanes' stop boundary:
+                # freeze their result here so later chunks (which they no
+                # longer participate in, logically) can't change it.
+                bh_s, bm_s = snap(state)
+                bh_s, bm_s = np.asarray(bh_s), np.asarray(bm_s)
+                for slot in newly:
+                    stops[slot]["best_H"] = bh_s[slot].copy()
+                    stops[slot]["best_m"] = bm_s[slot].copy()
             if done and all(done) and c + 1 < n_chunks:
                 self.stats["early_stops"] += 1
                 break
-        return state, traces
+        return state, traces, stops

@@ -29,7 +29,9 @@ __all__ = [
     "STATUS_DEADLINE",
     "STATUS_QUARANTINED",
     "STATUS_FAILED",
+    "STATUS_SHED",
     "AdmissionError",
+    "QueueFullError",
     "QuarantineFault",
     "ServiceEvent",
     "ResiliencePolicy",
@@ -39,12 +41,14 @@ __all__ = [
     "group_fingerprint",
 ]
 
-# AnnealResponse.status values (DESIGN.md §10).
+# AnnealResponse.status values (DESIGN.md §10, §12).
 STATUS_OK = "ok"                   # solved on the configured backend
 STATUS_FALLBACK = "fallback"       # solved after >=1 backend/j_mode downgrade
 STATUS_DEADLINE = "deadline"       # deadline expired; best-so-far returned
 STATUS_QUARANTINED = "quarantined"  # non-finite detection; solved solo on retry
 STATUS_FAILED = "failed"           # retries exhausted; no result
+STATUS_SHED = "shed"               # streaming: dropped from the queue unstarted
+#                                    (deadline already unmeetable); no result
 
 
 class AdmissionError(ValueError):
@@ -52,6 +56,16 @@ class AdmissionError(ValueError):
 
     Raised before any group starts solving, so a rejected batch does no
     device work at all.
+    """
+
+
+class QueueFullError(AdmissionError):
+    """Streaming admission control: the request queue is at capacity.
+
+    Raised by :meth:`repro.serve.stream.StreamingAnnealService.submit` when
+    the queue's depth or aggregate cost bound is hit — backpressure belongs
+    at the front door, not in an unbounded queue.  Subclasses
+    :class:`AdmissionError` so clients can treat both as "not accepted".
     """
 
 
@@ -73,8 +87,10 @@ class ServiceEvent:
     """One structured resilience event, attached to the responses it touched.
 
     ``kind``: 'fallback' | 'resume' | 'deadline' | 'quarantine' | 'retry'
-    | 'checkpoint_rejected'.  ``t`` is seconds since the ``solve()`` call
-    began.  Events are group-scoped (every response in the group carries the
+    | 'checkpoint_rejected', plus the streaming lifecycle kinds 'seat' |
+    'retire' | 'shed' | 'retries_exhausted' (DESIGN.md §12).  ``t`` is
+    seconds since the ``solve()`` call began (streaming: since submission).
+    Events are group-scoped (every response in the group carries the
     group's events) except quarantine/retry, which are per-request.
     """
 
