@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import SSAHyperParams, anneal, gset
+from repro.core import SolverConfig, SSAHyperParams, anneal, gset
 from repro.kernels import ref, ssa_update
 
 from .common import emit, time_call
@@ -61,7 +61,7 @@ def run(csv_prefix: str = "kernels", smoke: bool = False):
     # launch-overhead canary; the G-set twins make it hermetic).
     hp = SSAHyperParams(n_trials=R, m_shot=1, tau=C, i0_min=1, i0_max=4)
     t0 = time.perf_counter()
-    r = anneal(p, hp, seed=0, backend="pallas", noise="xorshift",
+    r = anneal(p, hp, seed=0, config=SolverConfig(backend="pallas"),
                track_energy=False)
     dt = time.perf_counter() - t0
     emit(f"{csv_prefix}/engine_pallas_backend", dt * 1e6,

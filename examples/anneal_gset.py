@@ -72,11 +72,20 @@ def stream_demo(backend: str = "sparse", full: bool = False):
             r = t.result(timeout=None)
             name = getattr(t.request.problem, "name", None) or \
                 t.request.problem.model.name
+            if r.result is None:
+                # 'shed' (dropped unstarted: deadline already unmeetable)
+                # and 'failed' (retries exhausted) carry no result — report
+                # the status instead of crashing on best_cut=None.
+                print(f"  [{prio:11s}] {name}: {r.status.upper()} — "
+                      "no result")
+                continue
             best = (r.objective if r.objective is not None
                     else r.result.overall_best_cut)
+            note = " (best-so-far at deadline)" if r.status == "deadline" \
+                else ""
             print(f"  [{prio:11s}] {name}: best {best} "
                   f"(queued {r.queued_s:.2f}s, lane {r.lane_wall_s:.2f}s, "
-                  f"status={r.status})")
+                  f"status={r.status}){note}")
     finally:
         ss.stop()
     st = ss.stream_stats()

@@ -4,6 +4,8 @@ Public API:
   IsingModel, MaxCutProblem           — problem substrate (ising.py)
   gset.load                           — benchmark instances (gset.py)
   SSAHyperParams, anneal, solve_maxcut— SSA + HA-SSA (ssa.py)
+  SSQAHyperParams, anneal_ssqa        — Trotter-replica SSQA (ssqa.py)
+  SolverConfig                        — typed solver options (config.py)
   PlateauBackend, make_backend        — plateau engine protocol (engine.py)
   SAHyperParams, anneal_sa            — conventional SA baseline (sa.py)
   PTHyperParams, anneal_pt            — parallel-tempering baseline (pt.py)
@@ -16,6 +18,7 @@ from .autotune import (  # noqa: F401
     resolve_hyperparams,
     sample_local_fields,
 )
+from .config import SolverConfig, legacy_kwargs_to_config  # noqa: F401
 from .engine import (  # noqa: F401
     TILED_J_THRESHOLD,
     BaseResult,
@@ -47,7 +50,13 @@ from .pt import (  # noqa: F401
     anneal_pt_ssa,
 )
 from .sa import SAHyperParams, SAResult, anneal_sa  # noqa: F401
-from .schedule import Schedule, hassa_schedule, n_temp_steps, ssa_schedule  # noqa: F401
+from .schedule import (  # noqa: F401
+    Schedule,
+    hassa_schedule,
+    n_temp_steps,
+    ssa_schedule,
+    ssqa_schedule,
+)
 from .ssa import (  # noqa: F401
     AnnealResult,
     SSAHyperParams,
@@ -57,3 +66,4 @@ from .ssa import (  # noqa: F401
     ssa_cycle_update,
     unpack_spins,
 )
+from .ssqa import SSQAHyperParams, anneal_ssqa  # noqa: F401

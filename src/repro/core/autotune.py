@@ -23,7 +23,17 @@ This module implements that determination, deterministically:
   exactly; I0min stays 1 (the hottest plateau);
 * **per-plateau schedule scaling** — the plateau length τ is rescaled so
   one iteration keeps the caller's cycle budget: more plateaus (larger
-  I0max ⇒ steps = log2(I0max)+1) each run proportionally fewer cycles.
+  I0max ⇒ steps = log2(I0max)+1) each run proportionally fewer cycles;
+* **SSQA quantum knobs** — when the base carries a Trotter dimension
+  (``n_replicas``/``jperp_max`` attributes, i.e.
+  :class:`repro.core.ssqa.SSQAHyperParams`), the same σ fixes both: the
+  replica count R = next_pow2(4σ) (clipped to [2, 16]) so the ring is deep
+  enough that the path-integral coupling can carry information across it at
+  the instance's energy scale, and J⊥max = round(2σ) (clipped to [1, 16])
+  so the coldest-plateau coupling competes with — without dominating — the
+  classical local field.  On G11-class ±1 MAX-CUT (σ = 2) this reproduces
+  the SSQA defaults exactly (R = 8, J⊥max = 4), mirroring how the classical
+  determination reproduces Table II.
 
 On G11-class ±1 MAX-CUT (4-regular): σ = 2, max|z| = 4, so the
 determination reproduces Table II exactly (n_rnd = 2, I0max = 32,
@@ -58,6 +68,9 @@ N_RND_MAX = 1 << 16
 I0_MAX_FLOOR = 8
 I0_MAX_CEIL = 1 << 20
 TAU_FLOOR = 8
+N_REPLICAS_MIN = 2
+N_REPLICAS_MAX = 16
+JPERP_MAX_CEIL = 16
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,6 +85,9 @@ class AutotuneReport:
     i0_min: int
     i0_max: int
     tau: int
+    # SSQA-only (None for classical bases): Trotter depth and Γ0 proxy.
+    n_replicas: Optional[int] = None
+    jperp_max: Optional[int] = None
 
 
 def sample_local_fields(
@@ -117,6 +133,10 @@ def autotune_hyperparams(
     ``base`` supplies the *budget* knobs (n_trials, m_shot, the per-iteration
     cycle budget via tau·steps, beta_shift); the *energy-scale* knobs
     (n_rnd, i0_min, i0_max) and the per-plateau τ are determined here.
+    ``base``'s concrete type is preserved (``dataclasses.replace``): an
+    :class:`~repro.core.ssqa.SSQAHyperParams` base additionally gets its
+    Trotter depth and J⊥ ramp ceiling determined from the same σ, with
+    n_trials rounded up to whole replica rings.
     Deterministic for fixed (model, base, n_samples, seed).
     """
     base = base if base is not None else SSAHyperParams()
@@ -134,15 +154,22 @@ def autotune_hyperparams(
     steps = n_temp_steps(i0_min, i0_max, base.beta_shift)
     tau = int(np.clip(round(steps_base * base.tau / steps), TAU_FLOOR, None))
 
-    hp = SSAHyperParams(
-        n_trials=base.n_trials,
-        m_shot=base.m_shot,
-        n_rnd=n_rnd,
-        i0_min=i0_min,
-        i0_max=i0_max,
-        tau=tau,
-        beta_shift=base.beta_shift,
-    )
+    updates = dict(n_rnd=n_rnd, i0_min=i0_min, i0_max=i0_max, tau=tau)
+    n_replicas = jperp_max = None
+    if hasattr(base, "n_replicas"):
+        # SSQA: the Trotter ring depth and the coldest-plateau coupling are
+        # both functions of the same local-field scale (module docstring).
+        n_replicas = int(np.clip(
+            _next_pow2(max(2, round(4 * sigma))), N_REPLICAS_MIN, N_REPLICAS_MAX
+        ))
+        jperp_max = int(np.clip(round(2 * sigma), 1, JPERP_MAX_CEIL))
+        updates.update(
+            n_replicas=n_replicas,
+            jperp_max=jperp_max,
+            # Round the trial budget up to whole rings.
+            n_trials=-(-base.n_trials // n_replicas) * n_replicas,
+        )
+    hp = dataclasses.replace(base, **updates)
     report = AutotuneReport(
         sigma=sigma,
         z_max=z_max,
@@ -152,6 +179,8 @@ def autotune_hyperparams(
         i0_min=i0_min,
         i0_max=i0_max,
         tau=tau,
+        n_replicas=n_replicas,
+        jperp_max=jperp_max,
     )
     return hp, report
 
@@ -162,6 +191,7 @@ def resolve_hyperparams(
     *,
     base: Optional[SSAHyperParams] = None,
     seed: int = 0,
+    algo: Optional[str] = None,
 ) -> Tuple[SSAHyperParams, Optional[AutotuneReport]]:
     """Resolve a request's hyperparameter spec: pass through or autotune.
 
@@ -170,9 +200,20 @@ def resolve_hyperparams(
     hyperparameter objects pass through untouched.  The autotune draw is
     seeded independently of the anneal seed so identical problems resolve
     to identical hyperparameters and keep batching together in the service.
+
+    ``algo`` selects the default *base* family when none is supplied:
+    ``'ssqa'`` autotunes from :class:`~repro.core.ssqa.SSQAHyperParams`
+    (adding the Trotter-ring determination); anything else — or ``None`` —
+    keeps the classical :class:`~repro.core.ssa.SSAHyperParams` base.
     """
     if isinstance(hp, str):
         if hp != "auto":
             raise ValueError(f"unknown hyperparameter mode {hp!r}; use 'auto'")
+        if base is None and algo == "ssqa":
+            from .ssqa import SSQAHyperParams  # lazy: ssqa imports autotune
+
+            base = SSQAHyperParams()
+        if hasattr(model, "to_ising"):
+            model = model.to_ising()
         return autotune_hyperparams(model, base, seed=seed)
     return hp, None

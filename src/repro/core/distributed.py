@@ -581,6 +581,7 @@ class BatchedSpinShardedBackend(BatchedBackend):
                     field_fn, self._noise_step, h3, self.n_rnd, st, p.i0,
                     length=p.length, eligible=p.eligible,
                     energy_fn=self._energy_local,
+                    jperp=p.jperp, n_replicas=self.n_replicas,
                 )
             return st, None
 
@@ -606,8 +607,8 @@ class BatchedSpinShardedBackend(BatchedBackend):
             check_rep=False,
         )
 
-    def run_plateau(self, problem, state, i0, *, length, eligible):
-        p = Plateau(int(i0), int(length), bool(eligible))
+    def run_plateau(self, problem, state, i0, *, length, eligible, jperp=0):
+        p = Plateau(int(i0), int(length), bool(eligible), int(jperp))
         return self._sharded_chain((p,), 1)(problem, state)
 
     def run_plateau_traced(self, problem, state, plateau: Plateau,
@@ -625,6 +626,7 @@ class BatchedSpinShardedBackend(BatchedBackend):
                 self.n_rnd, st, plateau.i0, length=plateau.length,
                 eligible=plateau.eligible, track_energy=track_energy,
                 energy_fn=self._energy_local,
+                jperp=plateau.jperp, n_replicas=self.n_replicas,
             )
             if packed:
                 st = self._pack_local(st)
@@ -677,6 +679,7 @@ class SpinShardedBackend(PlateauBackend):
             n_rnd=n_rnd, noise=noise, storage_layout=storage_layout, **opts,
         )
         self.mesh = mesh
+        self.n_replicas = self._bk.n_replicas
         self._problem = self._bk.stack([model])
 
     def init_state(self, seed: int):
@@ -684,18 +687,19 @@ class SpinShardedBackend(PlateauBackend):
         return self._bk.init_state(self._problem, noise0)
 
     def run_plateau(self, state, i0, *, length, eligible, track_energy=False,
-                    emit=False):
+                    emit=False, jperp=0):
         if emit:
             raise NotImplementedError(
                 "record='traj' is not supported under partition='spin'; "
                 "use partition='problem' for trajectory capture"
             )
-        p = Plateau(int(i0), int(length), bool(eligible))
+        p = Plateau(int(i0), int(length), bool(eligible), int(jperp))
         if track_energy:
             st, trace = self._bk.run_plateau_traced(self._problem, state, p, True)
             return st, trace, None
         st = self._bk.run_plateau(
-            self._problem, state, p.i0, length=p.length, eligible=p.eligible
+            self._problem, state, p.i0, length=p.length, eligible=p.eligible,
+            jperp=p.jperp,
         )
         return st, None, None
 

@@ -306,20 +306,44 @@ class Plateau:
     ``eligible`` is the storage write-enable for the states this plateau
     *produces*: under HA-SSA (Eq. 6) only the I0 == I0max plateau asserts it;
     conventional SSA (Eq. 5) asserts it everywhere.
+
+    ``jperp`` is the SSQA Trotter-replica ring coupling J⊥ held over this
+    plateau (DESIGN.md §13); 0 — the default, and the only value classical
+    SSA/HA-SSA schedules produce — disables the coupling entirely.
     """
 
     i0: int
     length: int
     eligible: bool
+    jperp: int = 0
 
 
-def _group_runs(i0_seq: np.ndarray, elig_seq: np.ndarray) -> Tuple[Plateau, ...]:
+def _group_runs(
+    i0_seq: np.ndarray, elig_seq: np.ndarray, jperp_seq=None
+) -> Tuple[Plateau, ...]:
+    jp = (
+        np.zeros(len(i0_seq), np.int64)
+        if jperp_seq is None
+        else np.asarray(jperp_seq)
+    )
     out = []
     start = 0
     n = len(i0_seq)
     for k in range(1, n + 1):
-        if k == n or i0_seq[k] != i0_seq[start] or elig_seq[k] != elig_seq[start]:
-            out.append(Plateau(int(i0_seq[start]), k - start, bool(elig_seq[start])))
+        if (
+            k == n
+            or i0_seq[k] != i0_seq[start]
+            or elig_seq[k] != elig_seq[start]
+            or jp[k] != jp[start]
+        ):
+            out.append(
+                Plateau(
+                    int(i0_seq[start]),
+                    k - start,
+                    bool(elig_seq[start]),
+                    int(jp[start]),
+                )
+            )
             start = k
     return tuple(out)
 
@@ -329,6 +353,8 @@ def schedule_plateaus(sched: Schedule, storage: str = "i0max") -> Tuple[Plateau,
 
     storage='i0max' → HA-SSA eligibility (the BRAM write-enable);
     storage='all'   → every plateau eligible (conventional SSA).
+    SSQA schedules additionally carry ``jperp_per_cycle``, split at the
+    same plateau boundaries.
     """
     i0 = np.asarray(sched.i0_per_cycle)
     if storage == "i0max":
@@ -337,7 +363,7 @@ def schedule_plateaus(sched: Schedule, storage: str = "i0max") -> Tuple[Plateau,
         elig = np.ones(len(i0), dtype=bool)
     else:
         raise ValueError(f"unknown storage {storage!r}")
-    return _group_runs(i0, elig)
+    return _group_runs(i0, elig, getattr(sched, "jperp_per_cycle", None))
 
 
 def tile_plateaus(plateaus: Sequence[Plateau], total_cycles: int) -> Tuple[Plateau, ...]:
@@ -353,7 +379,7 @@ def tile_plateaus(plateaus: Sequence[Plateau], total_cycles: int) -> Tuple[Plate
             if remaining <= 0:
                 break
             take = min(p.length, remaining)
-            out.append(Plateau(p.i0, take, p.eligible))
+            out.append(Plateau(p.i0, take, p.eligible, p.jperp))
             remaining -= take
     return tuple(out)
 
@@ -361,24 +387,28 @@ def tile_plateaus(plateaus: Sequence[Plateau], total_cycles: int) -> Tuple[Plate
 def plateau_cycle_schedules(plateaus: Sequence[Plateau]):
     """Per-cycle schedule operands for the multi-plateau resident kernel.
 
-    Flattens a plateau chain into ``(i0_sched (C,), fold_sched (C+1,))``
-    int32 host arrays: ``i0_sched[c]`` is the I0 of cycle c, and
-    ``fold_sched[c]`` the storage write-enable of the plateau that
+    Flattens a plateau chain into ``(i0_sched (C,), fold_sched (C+1,),
+    jperp_sched (C,))`` int32 host arrays: ``i0_sched[c]`` is the I0 of
+    cycle c, ``fold_sched[c]`` the storage write-enable of the plateau that
     *produced* the state current at cycle c — 0 at c = 0 (the chain's
     incoming state belongs to the previous chunk), eligibility of cycle
-    c−1's plateau for c ≥ 1, and ``fold_sched[C]`` covers the final state.
-    Feeding these to `ssa_plateau_popcount[_batched]` reproduces chained
-    per-plateau execution bit-identically in one launch.
+    c−1's plateau for c ≥ 1, and ``fold_sched[C]`` covers the final state —
+    and ``jperp_sched[c]`` the replica coupling applied by cycle c's update
+    (all-zero for classical chains).  Feeding these to
+    `ssa_plateau_popcount[_batched]` reproduces chained per-plateau
+    execution bit-identically in one launch.
     """
-    i0s, elig = [], []
+    i0s, elig, jps = [], [], []
     for p in plateaus:
         i0s.extend([int(p.i0)] * int(p.length))
         elig.extend([int(bool(p.eligible))] * int(p.length))
+        jps.extend([int(p.jperp)] * int(p.length))
     if not i0s:
         raise ValueError("empty plateau chain")
     return (
         np.asarray(i0s, np.int32),
         np.asarray([0] + elig, np.int32),
+        np.asarray(jps, np.int32),
     )
 
 
@@ -434,6 +464,26 @@ def unpack_state(state: PackedEngineState, n: int) -> EngineState:
     )
 
 
+def replica_coupling(m: jnp.ndarray, n_replicas: int) -> jnp.ndarray:
+    """Sum of ring-adjacent Trotter-replica spins, per (trial, spin) lane.
+
+    The trial axis (axis -2 of ``(..., T, N)`` spins) is G = T/R independent
+    rings of R consecutive replicas — the same grouping the resident kernels
+    use (one R-tile per ring), so scan and kernel paths couple identical
+    neighbor pairs.  Returns int32 ``m[k-1] + m[k+1]`` with ring wraparound
+    (for R = 2 the single neighbor is counted from both sides, the standard
+    doubled edge of a 2-cycle).
+    """
+    R = int(n_replicas)
+    shape = m.shape
+    T = shape[-2]
+    if T % R:
+        raise ValueError(f"n_trials {T} not divisible by n_replicas {R}")
+    mr = m.reshape(shape[:-2] + (T // R, R, shape[-1])).astype(jnp.int32)
+    nb = jnp.roll(mr, 1, axis=-2) + jnp.roll(mr, -1, axis=-2)
+    return nb.reshape(shape[:-2] + (T, shape[-1]))
+
+
 def run_plateau_scan(
     field_fn: Callable[[jnp.ndarray], jnp.ndarray],
     noise_step: Callable,
@@ -447,6 +497,8 @@ def run_plateau_scan(
     track_energy: bool = False,
     emit: bool = False,
     energy_fn: Callable = None,
+    jperp: int = 0,
+    n_replicas: int = 0,
 ):
     """One constant-I0 plateau as a `lax.scan` — ONE contraction per cycle.
 
@@ -461,6 +513,13 @@ def run_plateau_scan(
     that psums per-shard partial sums over the model axis (int32 addition is
     exact and order-free, so the fold stays bit-identical; DESIGN.md §11).
 
+    ``jperp``/``n_replicas`` enable SSQA's Trotter-replica ring coupling
+    (DESIGN.md §13): the Eq. (2a) *update* field gains
+    ``jperp · (m[k-1] + m[k+1])`` over :func:`replica_coupling` rings on the
+    trial axis, while the best-fold/trace energies keep the BASE field — the
+    coupling steers the dynamics, the reported energy stays the classical
+    per-replica Ising energy.
+
     Returns (state', trace, planes) where trace is (mean_H (C,), min_H (C,))
     aligned to the produced states m(t0+1..t0+C) when ``track_energy``, and
     planes is the (C, T, ceil(N/32)) bit-packed trajectory when ``emit``.
@@ -472,6 +531,8 @@ def run_plateau_scan(
     track_energy = bool(track_energy)
     emit = bool(emit)
     need_H = eligible or track_energy
+    jperp = int(jperp)
+    couple = bool(jperp) and int(n_replicas) > 0
 
     def cyc(carry, not_first):
         ns, m, itanh, best_H, best_m = carry
@@ -487,7 +548,12 @@ def run_plateau_scan(
                 ys["mean"] = jnp.mean(H.astype(jnp.float32))
                 ys["min"] = jnp.min(H)
         ns, r = noise_step(ns)
-        m_new, it_new = ssa_cycle_update(field, itanh, r, i0, n_rnd)
+        upd = field
+        if couple:
+            upd = field + (
+                jperp * replica_coupling(m, n_replicas)
+            ).astype(field.dtype)
+        m_new, it_new = ssa_cycle_update(upd, itanh, r, i0, n_rnd)
         if emit:
             ys["plane"] = pack_spins(m_new)
         return (ns, m_new, it_new, best_H, best_m), ys
@@ -538,6 +604,7 @@ class PlateauBackend:
         n_rnd: int = 2,
         noise: str = "threefry",
         storage_layout: str = "dense",
+        n_replicas: int = 0,
     ):
         if storage_layout not in ("dense", "packed"):
             raise ValueError(f"unknown storage_layout {storage_layout!r}")
@@ -546,6 +613,15 @@ class PlateauBackend:
         self.n_rnd = int(n_rnd)
         self.noise = noise
         self.storage_layout = storage_layout
+        self.n_replicas = int(n_replicas)
+        if self.n_replicas:
+            if self.n_replicas < 2:
+                raise ValueError("n_replicas must be >= 2 (or 0 to disable)")
+            if self.n_trials % self.n_replicas:
+                raise ValueError(
+                    f"n_trials {self.n_trials} not divisible by "
+                    f"n_replicas {self.n_replicas}"
+                )
         self.h = jnp.asarray(model.h, jnp.int32)
         lanes = (self.n_trials, model.n)
         if noise == "xorshift":
@@ -587,24 +663,26 @@ class PlateauBackend:
         eligible: bool,
         track_energy: bool = False,
         emit: bool = False,
+        jperp: int = 0,
     ):
         """Advance one plateau in this backend's storage layout.
 
         The packed layout wraps the dense implementation in the exact
         pack/unpack codec (spins are ±1, so the round trip is bit-exact);
         the Pallas backend overrides this to keep the HBM-facing kernel
-        refs packed end-to-end.
+        refs packed end-to-end.  ``jperp`` is the SSQA replica coupling
+        (requires a backend built with ``n_replicas > 0``).
         """
         if self.storage_layout == "packed":
             st = unpack_state(state, self.model.n)
             st, trace, planes = self._run_plateau_dense(
                 st, i0, length=length, eligible=eligible,
-                track_energy=track_energy, emit=emit,
+                track_energy=track_energy, emit=emit, jperp=jperp,
             )
             return pack_state(st), trace, planes
         return self._run_plateau_dense(
             state, i0, length=length, eligible=eligible,
-            track_energy=track_energy, emit=emit,
+            track_energy=track_energy, emit=emit, jperp=jperp,
         )
 
     def run_plateaus(self, state, plateaus: Sequence[Plateau]):
@@ -618,11 +696,12 @@ class PlateauBackend:
         for p in plateaus:
             state, _, _ = self.run_plateau(
                 state, p.i0, length=p.length, eligible=p.eligible,
+                jperp=p.jperp,
             )
         return state
 
     def _run_plateau_dense(self, state, i0, *, length, eligible,
-                           track_energy=False, emit=False):
+                           track_energy=False, emit=False, jperp=0):
         raise NotImplementedError
 
     def finalize(self, state) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -635,7 +714,8 @@ class PlateauBackend:
     def _field(self, m: jnp.ndarray) -> jnp.ndarray:
         raise NotImplementedError
 
-    def _run_plateau_scan(self, state, i0, *, length, eligible, track_energy, emit):
+    def _run_plateau_scan(self, state, i0, *, length, eligible, track_energy,
+                          emit, jperp=0):
         return run_plateau_scan(
             self._field,
             self._noise_step,
@@ -647,6 +727,8 @@ class PlateauBackend:
             eligible=eligible,
             track_energy=track_energy,
             emit=emit,
+            jperp=jperp,
+            n_replicas=self.n_replicas,
         )
 
 
@@ -663,10 +745,10 @@ class SparseBackend(PlateauBackend):
         return local_fields_sparse(m.astype(jnp.int32), self.h, self.nbr_idx, self.nbr_w)
 
     def _run_plateau_dense(self, state, i0, *, length, eligible,
-                           track_energy=False, emit=False):
+                           track_energy=False, emit=False, jperp=0):
         return self._run_plateau_scan(
             state, i0, length=length, eligible=eligible,
-            track_energy=track_energy, emit=emit,
+            track_energy=track_energy, emit=emit, jperp=jperp,
         )
 
 
@@ -821,10 +903,10 @@ class DenseBackend(PlateauBackend):
         return local_fields_dense(m, self.h, self.J)
 
     def _run_plateau_dense(self, state, i0, *, length, eligible,
-                           track_energy=False, emit=False):
+                           track_energy=False, emit=False, jperp=0):
         return self._run_plateau_scan(
             state, i0, length=length, eligible=eligible,
-            track_energy=track_energy, emit=emit,
+            track_energy=track_energy, emit=emit, jperp=jperp,
         )
 
 
@@ -878,7 +960,9 @@ class PallasBackend(PlateauBackend):
 
         self._kops = kops
         self._kssa = kssa
-        self.block_r = int(block_r)
+        # SSQA (n_replicas > 0) pins the R-tile to the replica ring so each
+        # kernel tile holds exactly one ring (the roll stays tile-local).
+        self.block_r = self.n_replicas if self.n_replicas else int(block_r)
         self.interpret = interpret
         self.noise_mode = resolve_noise_mode(noise_mode, self.noise)
         self.field_mode = resolve_field_mode(
@@ -905,7 +989,8 @@ class PallasBackend(PlateauBackend):
             return local_fields_popcount(pack_spins(m), self.h, self.packed_j)
         return self._kops.local_field(m.astype(jnp.float32), self.h, self.J)
 
-    def _popcount_call(self, mp, itanh, rng, i0_sched, fold_sched, bh, bmp):
+    def _popcount_call(self, mp, itanh, rng, i0_sched, fold_sched, bh, bmp,
+                       jperp_sched=None):
         pj = self.packed_j
         return self._kssa.ssa_plateau_popcount(
             mp, itanh, pj.sign, pj.mags, pj.base, self.h, rng,
@@ -915,6 +1000,11 @@ class PallasBackend(PlateauBackend):
             n_rnd=self.n_rnd,
             block_r=self.block_r,
             interpret=self.interpret,
+            jperp_sched=(
+                None if jperp_sched is None
+                else jnp.asarray(jperp_sched, jnp.int32)
+            ),
+            n_replicas=self.n_replicas,
         )
 
     def run_plateaus(self, state, plateaus: Sequence[Plateau]):
@@ -929,10 +1019,11 @@ class PallasBackend(PlateauBackend):
         packed = self.storage_layout == "packed"
         mp = state.m_packed if packed else pack_spins(state.m)
         bmp = state.best_m_packed if packed else pack_spins(state.best_m)
-        i0_sched, fold_sched = plateau_cycle_schedules(plateaus)
+        i0_sched, fold_sched, jperp_sched = plateau_cycle_schedules(plateaus)
         mp_o, it_o, rng_o, bh_o, bmp_o = self._popcount_call(
             mp, state.itanh, state.noise_state, i0_sched, fold_sched,
             state.best_H, bmp,
+            jperp_sched=jperp_sched if jperp_sched.any() else None,
         )
         if packed:
             return PackedEngineState(rng_o, mp_o, it_o, bh_o, bmp_o)
@@ -948,13 +1039,21 @@ class PallasBackend(PlateauBackend):
 
         return jax.lax.scan(draw, ns, None, length=length)
 
-    def run_plateau(self, state, i0, *, length, eligible, track_energy=False, emit=False):
+    def run_plateau(self, state, i0, *, length, eligible, track_energy=False,
+                    emit=False, jperp=0):
         packed = self.storage_layout == "packed"
-        if emit or track_energy:
+        jperp = int(jperp)
+        # The pregen kernel is not jperp-extended: SSQA plateaus on the
+        # pregen path (threefry, or opt-in xorshift pregen) run the
+        # bit-identical scan fallback over the Pallas field kernel.
+        scan_fallback = emit or track_energy or (
+            jperp and self.noise_mode != "streamed"
+        )
+        if scan_fallback:
             st = unpack_state(state, self.model.n) if packed else state
             st, trace, planes = self._run_plateau_scan(
                 st, i0, length=length, eligible=eligible,
-                track_energy=track_energy, emit=emit,
+                track_energy=track_energy, emit=emit, jperp=jperp,
             )
             return (pack_state(st) if packed else st), trace, planes
         if self.field_mode == "popcount":
@@ -968,9 +1067,12 @@ class PallasBackend(PlateauBackend):
             fold_sched = np.asarray(
                 [0] + [int(bool(eligible))] * int(length), np.int32
             )
+            jperp_sched = (
+                np.full(int(length), jperp, np.int32) if jperp else None
+            )
             mp_o, it_o, rng_o, bh_o, bmp_o = self._popcount_call(
                 mp, state.itanh, state.noise_state, i0_sched, fold_sched,
-                state.best_H, bmp,
+                state.best_H, bmp, jperp_sched=jperp_sched,
             )
             if packed:
                 return PackedEngineState(rng_o, mp_o, it_o, bh_o, bmp_o), None, None
@@ -1000,6 +1102,8 @@ class PallasBackend(PlateauBackend):
                 eligible=bool(eligible),
                 block_r=self.block_r,
                 interpret=self.interpret,
+                jperp=jperp,
+                n_replicas=self.n_replicas if jperp else 0,
             )
             if packed:
                 return PackedEngineState(rng_o, mp_o, it_o, bh_o, bmp_o), None, None
@@ -1043,15 +1147,16 @@ BACKENDS = {
 
 
 def make_backend(
-    backend: Union[str, PlateauBackend, type],
-    model: IsingModel,
+    backend: Union[str, PlateauBackend, type, None] = None,
+    model: IsingModel = None,
     *,
     n_trials: int,
     n_rnd: int = 2,
-    noise: str = "threefry",
-    partition: str = "problem",
+    noise: str = None,
+    partition: str = None,
     mesh=None,
     partition_axis: str = "model",
+    config=None,
     **opts,
 ) -> PlateauBackend:
     """Resolve a backend spec: name, PlateauBackend subclass, or instance.
@@ -1060,7 +1165,31 @@ def make_backend(
     spin-sharded shard_map backend (DESIGN.md §11); ``backend`` then names
     the *field contraction* the shards run (sparse gather / tiled f32 /
     popcount via field_mode), not a single-device execution engine.
+
+    ``config=SolverConfig(...)`` supplies backend/noise/partition/mesh and
+    the engine opts in one typed object (DESIGN.md §13); the loose kwargs
+    remain as a deprecated shim (warning once per process).
     """
+    if config is not None:
+        from .config import legacy_kwargs_to_config
+
+        cfg = legacy_kwargs_to_config(
+            "make_backend", config,
+            backend=backend if isinstance(backend, str) else None,
+            noise=noise, partition=partition,
+        )
+        backend = cfg.backend if backend is None else backend
+        noise, partition = cfg.noise, cfg.partition
+        mesh = cfg.mesh if mesh is None else mesh
+        merged = cfg.engine_opts()
+        merged.update(opts)
+        opts = merged
+    if backend is None:
+        backend = "sparse"
+    if noise is None:
+        noise = "threefry"
+    if partition is None:
+        partition = "problem"
     part = resolve_partition(partition, model.n, mesh, axis=partition_axis)
     if part == "spin":
         from .distributed import SpinShardedBackend  # lazy: circular import
@@ -1127,14 +1256,14 @@ def run_schedule(
         if record == "traj":
             state, _, pl = backend.run_plateau(
                 state, p.i0, length=p.length, eligible=False,
-                track_energy=False, emit=p.eligible,
+                track_energy=False, emit=p.eligible, jperp=p.jperp,
             )
             if pl is not None:
                 planes.append(pl)
         elif record == "best":
             state, tr, _ = backend.run_plateau(
                 state, p.i0, length=p.length, eligible=p.eligible,
-                track_energy=track_energy, emit=False,
+                track_energy=track_energy, emit=False, jperp=p.jperp,
             )
             if tr is not None:
                 tr_mean.append(tr[0])
@@ -1286,6 +1415,7 @@ class BatchedBackend:
         n_rnd: int = 2,
         noise: str = "xorshift",
         storage_layout: str = "dense",
+        n_replicas: int = 0,
     ):
         if storage_layout not in ("dense", "packed"):
             raise ValueError(f"unknown storage_layout {storage_layout!r}")
@@ -1294,6 +1424,17 @@ class BatchedBackend:
         self.n_rnd = int(n_rnd)
         self.noise = noise
         self.storage_layout = storage_layout
+        self.n_replicas = int(n_replicas)
+        if self.n_replicas:
+            if self.n_replicas < 2:
+                raise ValueError(
+                    f"n_replicas must be >= 2, got {self.n_replicas}"
+                )
+            if self.n_trials % self.n_replicas:
+                raise ValueError(
+                    f"n_trials={self.n_trials} not divisible by "
+                    f"n_replicas={self.n_replicas}"
+                )
         lanes = (self.n_trials, self.n_bucket)
         if noise == "xorshift":
             self._noise_step_one = xorshift_next_bits
@@ -1332,15 +1473,16 @@ class BatchedBackend:
         st = EngineState(ns, m0, itanh0, best_H, m0)
         return pack_state(st) if self.storage_layout == "packed" else st
 
-    def run_plateau(self, problem: dict, state, i0, *, length, eligible):
+    def run_plateau(self, problem: dict, state, i0, *, length, eligible,
+                    jperp=0):
         if self.storage_layout == "packed":
             st = unpack_state(state, self.n_bucket)
             st = self._run_plateau_dense(
-                problem, st, i0, length=length, eligible=eligible
+                problem, st, i0, length=length, eligible=eligible, jperp=jperp
             )
             return pack_state(st)
         return self._run_plateau_dense(
-            problem, state, i0, length=length, eligible=eligible
+            problem, state, i0, length=length, eligible=eligible, jperp=jperp
         )
 
     def run_shots(self, problem: dict, state, plateaus, n_shots: int):
@@ -1358,7 +1500,7 @@ class BatchedBackend:
         return self._run_shots_dense(problem, state, plateaus, n_shots)
 
     def _run_plateau_dense(self, problem: dict, state: EngineState, i0, *,
-                           length, eligible):
+                           length, eligible, jperp=0):
         raise NotImplementedError
 
     def _run_shots_dense(self, problem: dict, state: EngineState, plateaus,
@@ -1383,11 +1525,13 @@ class _VmapBatchedBackend(BatchedBackend):
             st, _, _ = run_plateau_scan(
                 field_fn, self._noise_step_one, prob["h"], self.n_rnd, st,
                 p.i0, length=p.length, eligible=p.eligible,
+                jperp=p.jperp, n_replicas=self.n_replicas,
             )
         return st
 
-    def _run_plateau_dense(self, problem, state, i0, *, length, eligible):
-        p = (Plateau(int(i0), int(length), bool(eligible)),)
+    def _run_plateau_dense(self, problem, state, i0, *, length, eligible,
+                           jperp=0):
+        p = (Plateau(int(i0), int(length), bool(eligible), int(jperp)),)
         return jax.vmap(lambda pr, st: self._run_one_plateaus(pr, st, p))(
             problem, state
         )
@@ -1613,7 +1757,9 @@ class BatchedPallasBackend(BatchedBackend):
 
         self._kssa = kssa
         self.j_dtype = j_dtype
-        self.block_r = int(block_r)
+        # SSQA: replica rings demand whole rings per R-tile (the ring roll
+        # happens over the tile's trial axis), so n_replicas pins block_r.
+        self.block_r = self.n_replicas if self.n_replicas else int(block_r)
         self.interpret = interpret
         self.noise_mode = resolve_noise_mode(noise_mode, self.noise)
         self.j_bits = int(j_bits)
@@ -1622,6 +1768,12 @@ class BatchedPallasBackend(BatchedBackend):
             raise ValueError(
                 "field_mode='popcount' on the batched pallas backend "
                 "requires noise_mode='streamed' (noise='xorshift')"
+            )
+        if self.n_replicas and self.noise_mode != "streamed":
+            raise ValueError(
+                "SSQA (n_replicas > 0) on the batched pallas backend "
+                "requires noise_mode='streamed' (noise='xorshift'); the "
+                "pregen kernel has no replica-coupling path"
             )
 
     def stack(self, models):
@@ -1637,7 +1789,8 @@ class BatchedPallasBackend(BatchedBackend):
         return jax.lax.scan(draw, ns, None, length=length)
 
     def _plateau_packed(self, problem, st: PackedEngineState, i0, length,
-                        eligible) -> PackedEngineState:
+                        eligible, jperp=0) -> PackedEngineState:
+        jperp = int(jperp)
         mp_o, it_o, rng_o, bh_o, bmp_o = self._kssa.ssa_plateau_packed_batched(
             st.m_packed,
             st.itanh,
@@ -1652,11 +1805,13 @@ class BatchedPallasBackend(BatchedBackend):
             eligible=bool(eligible),
             block_r=self.block_r,
             interpret=self.interpret,
+            jperp=jperp,
+            n_replicas=self.n_replicas if jperp else 0,
         )
         return PackedEngineState(rng_o, mp_o, it_o, bh_o, bmp_o)
 
     def _chain_popcount(self, problem, st: PackedEngineState, i0_sched,
-                        fold_sched) -> PackedEngineState:
+                        fold_sched, jperp_sched=None) -> PackedEngineState:
         mp_o, it_o, rng_o, bh_o, bmp_o = self._kssa.ssa_plateau_popcount_batched(
             st.m_packed,
             st.itanh,
@@ -1672,13 +1827,19 @@ class BatchedPallasBackend(BatchedBackend):
             n_rnd=self.n_rnd,
             block_r=self.block_r,
             interpret=self.interpret,
+            jperp_sched=(
+                None if jperp_sched is None
+                else jnp.asarray(jperp_sched, jnp.int32)
+            ),
+            n_replicas=self.n_replicas,
         )
         return PackedEngineState(rng_o, mp_o, it_o, bh_o, bmp_o)
 
-    def run_plateau(self, problem, state, i0, *, length, eligible):
+    def run_plateau(self, problem, state, i0, *, length, eligible, jperp=0):
         if self.noise_mode != "streamed":
             return super().run_plateau(
-                problem, state, i0, length=length, eligible=eligible
+                problem, state, i0, length=length, eligible=eligible,
+                jperp=jperp,
             )
         packed_in = self.storage_layout == "packed"
         st = state if packed_in else pack_state(state)
@@ -1689,9 +1850,14 @@ class BatchedPallasBackend(BatchedBackend):
             fold_sched = np.asarray(
                 [0] + [int(bool(eligible))] * int(length), np.int32
             )
-            st = self._chain_popcount(problem, st, i0_sched, fold_sched)
+            jperp_sched = (
+                np.full(int(length), int(jperp), np.int32) if jperp else None
+            )
+            st = self._chain_popcount(
+                problem, st, i0_sched, fold_sched, jperp_sched
+            )
         else:
-            st = self._plateau_packed(problem, st, i0, length, eligible)
+            st = self._plateau_packed(problem, st, i0, length, eligible, jperp)
         return st if packed_in else unpack_state(st, self.n_bucket)
 
     def run_shots(self, problem, state, plateaus, n_shots):
@@ -1704,21 +1870,33 @@ class BatchedPallasBackend(BatchedBackend):
         if self.field_mode == "popcount":
             # Multi-plateau residency: one launch per iteration, the whole
             # plateau chain carried inside the kernel.
-            i0_sched, fold_sched = plateau_cycle_schedules(plateaus)
+            i0_sched, fold_sched, jperp_sched = plateau_cycle_schedules(plateaus)
+            if not jperp_sched.any():
+                jperp_sched = None  # classical chain: keep the v1 jaxpr
 
             def iteration(st, _):
-                return self._chain_popcount(problem, st, i0_sched, fold_sched), None
+                return self._chain_popcount(
+                    problem, st, i0_sched, fold_sched, jperp_sched
+                ), None
         else:
 
             def iteration(st, _):
                 for p in plateaus:
-                    st = self._plateau_packed(problem, st, p.i0, p.length, p.eligible)
+                    st = self._plateau_packed(
+                        problem, st, p.i0, p.length, p.eligible, p.jperp
+                    )
                 return st, None
 
         st, _ = jax.lax.scan(iteration, st, None, length=n_shots)
         return st if packed_in else unpack_state(st, self.n_bucket)
 
-    def _run_plateau_dense(self, problem, state, i0, *, length, eligible):
+    def _run_plateau_dense(self, problem, state, i0, *, length, eligible,
+                           jperp=0):
+        if jperp:
+            raise ValueError(
+                "SSQA requires noise_mode='streamed' on the batched pallas "
+                "backend (pregen kernel has no replica-coupling path)"
+            )
         ns, noise = self._pregen(state.noise_state, length)  # (C, B, T, N)
         noise = jnp.swapaxes(noise, 0, 1)                    # (B, C, T, N)
         m_o, it_o, bh_o, bm_o = self._kssa.ssa_plateau_batched(
@@ -1741,7 +1919,8 @@ class BatchedPallasBackend(BatchedBackend):
         def iteration(st, _):
             for p in plateaus:
                 st = self._run_plateau_dense(
-                    problem, st, p.i0, length=p.length, eligible=p.eligible
+                    problem, st, p.i0, length=p.length, eligible=p.eligible,
+                    jperp=p.jperp,
                 )
             return st, None
 
@@ -1757,17 +1936,36 @@ BATCHED_BACKENDS = {
 
 
 def make_batched_backend(
-    backend: str,
+    backend: str = None,
     *,
     n_bucket: int,
     n_trials: int,
     n_rnd: int = 2,
-    noise: str = "xorshift",
-    partition: str = "problem",
+    noise: str = None,
+    partition: str = None,
     mesh=None,
     partition_axis: str = "model",
+    config=None,
     **opts,
 ) -> BatchedBackend:
+    if config is not None:
+        from .config import legacy_kwargs_to_config
+
+        cfg = legacy_kwargs_to_config(
+            "make_batched_backend", config,
+            backend=backend, noise=noise, partition=partition,
+        )
+        backend, noise, partition = cfg.backend, cfg.noise, cfg.partition
+        mesh = cfg.mesh if mesh is None else mesh
+        merged = cfg.engine_opts()
+        merged.update(opts)
+        opts = merged
+    if backend is None:
+        backend = "sparse"
+    if noise is None:
+        noise = "xorshift"
+    if partition is None:
+        partition = "problem"
     part = resolve_partition(partition, n_bucket, mesh, axis=partition_axis)
     if part == "spin":
         from .distributed import BatchedSpinShardedBackend  # lazy: circular

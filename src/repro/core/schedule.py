@@ -19,10 +19,17 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+from typing import Optional
 
 import numpy as np
 
-__all__ = ["Schedule", "hassa_schedule", "ssa_schedule", "n_temp_steps"]
+__all__ = [
+    "Schedule",
+    "hassa_schedule",
+    "ssa_schedule",
+    "ssqa_schedule",
+    "n_temp_steps",
+]
 
 
 def n_temp_steps(i0_min: int, i0_max: int, beta_shift: int = 1) -> int:
@@ -52,12 +59,19 @@ class Schedule:
       store_mask: bool[cycles_per_iter] — True where the HA-SSA hardware
         asserts the BRAM write-enable (I0 == I0max).  Conventional SSA stores
         every cycle (mask of all-True is used instead by the caller).
+      jperp_per_cycle: optional int32[cycles_per_iter] transverse-field
+        coupling J⊥(t) between adjacent Trotter replicas (SSQA,
+        arXiv:2302.12454; DESIGN.md §13).  ``None`` for classical SSA/HA-SSA
+        — and the signature payload of a jperp-free schedule is *exactly*
+        the historical v1 payload, so pre-SSQA executable caches and
+        checkpoint fingerprints stay valid.
     """
 
     i0_per_cycle: np.ndarray
     tau: int
     steps: int
     store_mask: np.ndarray
+    jperp_per_cycle: Optional[np.ndarray] = None
 
     @property
     def cycles_per_iter(self) -> int:
@@ -80,6 +94,14 @@ class Schedule:
             tuple(bool(x) for x in np.asarray(self.store_mask)),
             int(self.tau),
         )
+        if self.jperp_per_cycle is not None:
+            # SSQA schedules carry the replica coupling; a distinct version
+            # tag guarantees no collision with any classical v1 signature.
+            payload = (
+                "Schedule/v2-ssqa",
+                payload,
+                tuple(int(x) for x in np.asarray(self.jperp_per_cycle)),
+            )
         return hashlib.sha256(repr(payload).encode()).hexdigest()[:16]
 
 
@@ -119,6 +141,42 @@ def ssa_schedule(i0_min: int, i0_max: int, tau: int, beta: float = 0.5) -> Sched
     i0 = np.repeat(plateaus, tau)
     mask = np.repeat(plateaus == i0_max, tau)
     return Schedule(i0_per_cycle=i0, tau=tau, steps=len(plateaus), store_mask=mask)
+
+
+def ssqa_schedule(
+    i0_min: int,
+    i0_max: int,
+    tau: int,
+    beta_shift: int = 1,
+    *,
+    jperp_max: int = 4,
+) -> Schedule:
+    """SSQA plateau sequence (arXiv:2302.12454): HA-SSA's I0 ramp plus a
+    transverse-field coupling ramp J⊥(t).
+
+    The physical schedule anneals the transverse field Γ(t) from Γ0 down to
+    ~0; the effective replica coupling J⊥ ∝ -½·T·ln tanh(Γ/(R·T)) *rises* as
+    Γ falls, so on the integer datapath we carry J⊥ directly: 0 at the
+    hottest plateau (free replicas ≙ large Γ) ramping linearly to
+    ``jperp_max`` at the coldest (I0 == I0max, replicas locked ≙ Γ→0).
+    Integer J⊥ keeps the update field exact int32 like every other term.
+    """
+    base = hassa_schedule(i0_min, i0_max, tau, beta_shift)
+    steps = base.steps
+    if steps == 1:
+        per_plateau = np.asarray([int(jperp_max)], dtype=np.int32)
+    else:
+        per_plateau = np.asarray(
+            [round(int(jperp_max) * s / (steps - 1)) for s in range(steps)],
+            dtype=np.int32,
+        )
+    return Schedule(
+        i0_per_cycle=base.i0_per_cycle,
+        tau=base.tau,
+        steps=base.steps,
+        store_mask=base.store_mask,
+        jperp_per_cycle=np.repeat(per_plateau, tau),
+    )
 
 
 def sa_temperature_ladder(t_start: float, t_end: float, n_cycles: int) -> np.ndarray:

@@ -147,14 +147,15 @@ def anneal(
     *,
     storage: str = "i0max",        # 'i0max' (HA-SSA) | 'all' (conventional SSA)
     record: str = "best",          # 'best' | 'traj'
-    backend="sparse",              # 'sparse' | 'dense' | 'pallas' | PlateauBackend
-    noise: str = "threefry",       # 'threefry' | 'xorshift'
+    backend=None,                  # legacy: 'sparse' | 'dense' | 'pallas' | inst
+    noise: Optional[str] = None,   # legacy: 'threefry' | 'xorshift'
     track_energy: bool = True,
     schedule_kind: str = "hassa",  # 'hassa' Eq.(4) | 'ssa' Eq.(3)
     total_cycles: Optional[int] = None,  # cycle-count duration (Fig. 12 mode)
-    storage_layout: str = "dense",  # 'dense' | 'packed' bitplane state
-    backend_opts: Optional[dict] = None,  # extra backend kwargs (block_r, …)
+    storage_layout: Optional[str] = None,  # legacy: 'dense' | 'packed'
+    backend_opts: Optional[dict] = None,   # legacy extra backend kwargs
     auto_base: Optional[SSAHyperParams] = None,  # budget knobs for hp='auto'
+    config=None,                   # SolverConfig — the typed option surface
 ) -> AnnealResult:
     """Run SSA/HA-SSA on a MAX-CUT, raw Ising, or encoded problem instance.
 
@@ -169,6 +170,17 @@ def anneal(
     (:mod:`repro.core.autotune`), taking the budget knobs from
     ``auto_base`` (default: Table II).
 
+    Execution-surface options come in one typed object:
+    ``config=SolverConfig(backend=..., storage_layout=..., ...)``
+    (DESIGN.md §13).  The loose ``backend``/``noise``/``storage_layout``/
+    ``backend_opts`` kwargs keep working as a deprecated shim (one
+    ``DeprecationWarning`` per process) with their historical defaults
+    (sparse backend, threefry noise, dense layout).
+
+    An :class:`~repro.core.ssqa.SSQAHyperParams` ``hp`` switches the run to
+    SSQA (DESIGN.md §13): the schedule carries the J⊥ ramp and the backend
+    is built with the hp's Trotter-replica count.
+
     The hot loop iterates ``m_shot × steps`` plateaus over the selected
     backend; ``backend='pallas'`` executes each plateau as a single resident
     ``pallas_call``.  Per-cycle energy traces (``track_energy``) and
@@ -176,17 +188,36 @@ def anneal(
     resident kernel does not produce — those plateaus run the bit-identical
     scan path instead.
     """
+    from .config import legacy_kwargs_to_config
+
     maxcut, model = normalize_problem(problem)
     if isinstance(hp, str):
         # Lazy import: autotune imports SSAHyperParams from this module.
         from .autotune import resolve_hyperparams
 
         hp, _ = resolve_hyperparams(hp, model, base=auto_base)
+    cfg = legacy_kwargs_to_config(
+        "repro.core.ssa.anneal", config,
+        backend=backend if isinstance(backend, str) else None,
+        noise=noise, storage_layout=storage_layout,
+        backend_opts=dict(backend_opts) if backend_opts else None,
+    )
+    if config is None and noise is None:
+        # anneal()'s historical noise default is threefry, not the
+        # SolverConfig default (xorshift) — preserved for the legacy path.
+        cfg = cfg.replace(noise="threefry")
     sched = hp.schedule(schedule_kind)
-    opts = dict(backend_opts or {})
-    opts.setdefault("storage_layout", storage_layout)
+    opts = cfg.engine_opts()
+    # SSQA hyper-params carry the Trotter-replica count; duck-typed so this
+    # module needs no import of core.ssqa (which imports us).
+    nr = int(getattr(hp, "n_replicas", 0) or 0)
+    if nr:
+        opts.setdefault("n_replicas", nr)
     bk = make_backend(
-        backend, model, n_trials=hp.n_trials, n_rnd=hp.n_rnd, noise=noise,
+        backend if backend is not None and not isinstance(backend, str)
+        else cfg.backend,
+        model, n_trials=hp.n_trials, n_rnd=hp.n_rnd, noise=cfg.noise,
+        partition=cfg.partition, mesh=cfg.mesh,
         **opts,
     )
     plateaus = schedule_plateaus(sched, storage)

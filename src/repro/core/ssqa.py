@@ -1,0 +1,111 @@
+"""Stochastic simulated *quantum* annealing — SSQA (arXiv:2302.12454).
+
+SSQA is the source-paper authors' Trotter-replica variant of SSA: the
+path-integral decomposition of a transverse-field Ising model maps the
+quantum system onto R coupled classical replicas, and the p-bit update
+(Eq. 2a-2c) acquires one extra term — the nearest-neighbor replica coupling
+
+    I_i^k(t+1) = h_i + Σ_j J_ij m_j^k + J⊥(t)·(m_i^{k-1} + m_i^{k+1})
+                 + n_rnd·r + Itanh_i^k(t)
+
+with the replica ring closed (k ± 1 mod R) and the coupling J⊥(t) *rising*
+as the transverse field Γ(t) anneals to zero (J⊥ ∝ -½·T·ln tanh(Γ/(R·T))).
+Everything else — the saturating Itanh counter, the sign update, the
+plateau-structured I0 ramp, HA-SSA's storage policy — is unchanged, which
+is exactly why the whole existing engine serves SSQA (DESIGN.md §13):
+
+* the replica axis **is the trial axis**: ``n_trials`` holds
+  ``n_trials/n_replicas`` independent rings of ``n_replicas`` consecutive
+  replicas, so batching, bit-packing, bucket padding, spin sharding, and
+  the service's slot splice/extract all carry it untouched;
+* the J⊥ ramp rides the schedule: :func:`repro.core.schedule.ssqa_schedule`
+  attaches ``jperp_per_cycle`` to the plateau program and
+  ``Schedule.signature()`` distinguishes it (executable-cache soundness);
+* the coupling folds into the *update* field only — best-tracking and
+  energy traces keep the classical per-replica energy, so the reported
+  solution is a genuine classical state (the standard SQA convention).
+
+Reported cuts/energies are per-trial exactly like SSA: every replica is a
+candidate solution (R× the candidate pool per ring), and ``m_shot`` /
+schedules mean the same thing — SSQA vs SSA comparisons at equal
+``n_trials`` × ``total_cycles`` are compute-fair (benchmarks/pt_compare.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+from .ising import IsingModel, MaxCutProblem
+from .schedule import Schedule, ssqa_schedule
+from .ssa import AnnealResult, SSAHyperParams, anneal
+
+__all__ = ["SSQAHyperParams", "anneal_ssqa"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SSQAHyperParams(SSAHyperParams):
+    """SSQA hyper-parameters: SSA's Table II knobs + the Trotter dimension.
+
+    ``n_trials`` must be a multiple of ``n_replicas``; the trial axis holds
+    ``n_trials / n_replicas`` independent Trotter rings.  ``jperp_max`` is
+    the integer J⊥ at the coldest plateau (Γ → 0); the ramp is linear in
+    plateau index from 0 (free replicas at I0min, large Γ) — see
+    :func:`repro.core.schedule.ssqa_schedule`.
+    """
+
+    n_trials: int = 96
+    n_replicas: int = 8
+    jperp_max: int = 4
+
+    def __post_init__(self):
+        if self.n_replicas < 2:
+            raise ValueError(
+                f"n_replicas must be >= 2, got {self.n_replicas}"
+            )
+        if self.n_trials % self.n_replicas:
+            raise ValueError(
+                f"n_trials={self.n_trials} must be divisible by "
+                f"n_replicas={self.n_replicas} (whole Trotter rings)"
+            )
+        if self.jperp_max < 0:
+            raise ValueError(f"jperp_max must be >= 0, got {self.jperp_max}")
+
+    def schedule(self, kind: str = "hassa") -> Schedule:
+        # SSQA's plateau ramp is the shift-based HA-SSA sequence with the
+        # J⊥ ramp attached; 'ssqa' and 'hassa' both name it so the driver's
+        # default schedule_kind works unchanged.
+        if kind in ("hassa", "ssqa"):
+            return ssqa_schedule(
+                self.i0_min, self.i0_max, self.tau, self.beta_shift,
+                jperp_max=self.jperp_max,
+            )
+        raise ValueError(
+            f"SSQA supports schedule_kind 'hassa'/'ssqa', got {kind!r}"
+        )
+
+
+def anneal_ssqa(
+    problem: Union[MaxCutProblem, IsingModel],
+    hp: Union[SSQAHyperParams, str] = SSQAHyperParams(),
+    seed: int = 0,
+    *,
+    auto_base: Optional[SSQAHyperParams] = None,
+    **kw,
+) -> AnnealResult:
+    """Run SSQA — :func:`repro.core.ssa.anneal` with Trotter-ring coupling.
+
+    This is literally ``anneal`` with an :class:`SSQAHyperParams` (the
+    driver keys the replica machinery off the hp type); it exists so the
+    launch/CLI/benchmark surfaces have an explicit SSQA entry point.
+    ``hp='auto'`` autotunes Γ0 (via jperp_max) and the replica count from
+    the instance's local-field distribution (:mod:`repro.core.autotune`).
+    """
+    if isinstance(hp, str):
+        from .autotune import resolve_hyperparams  # lazy: circular import
+
+        hp, _ = resolve_hyperparams(
+            hp, problem, base=auto_base or SSQAHyperParams(), algo="ssqa"
+        )
+    if not isinstance(hp, SSQAHyperParams):
+        raise TypeError(f"anneal_ssqa needs SSQAHyperParams, got {type(hp)}")
+    return anneal(problem, hp, seed, **kw)

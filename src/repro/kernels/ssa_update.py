@@ -327,28 +327,30 @@ def _pack_pm1(m: jnp.ndarray) -> jnp.ndarray:
 
 
 def _plateau_streamed_kernel(
-    i0_ref,      # (1, 1) int32 scalar
-    mp_ref,      # (1, bR, Nw) uint32   spins, packed sign bits
-    it_ref,      # (1, bR, N)  int32    Itanh state
-    j_ref,       # (1, N, N)   J dtype  resident couplings of THIS problem
-    h_ref,       # (1, 1, N)   int32    biases
-    rng_ref,     # (1, 4, bR, N) uint32 xorshift128 lanes (carried)
-    bh_ref,      # (1, bR, 1)  int32    running best energy (input)
-    bmp_ref,     # (1, bR, Nw) uint32   running best spins, packed (input)
-    mp_out,      # (1, bR, Nw) uint32
-    it_out,      # (1, bR, N)  int32
-    rng_out,     # (1, 4, bR, N) uint32
-    bh_out,      # (1, bR, 1)  int32
-    bmp_out,     # (1, bR, Nw) uint32
-    m_s,         # scratch (bR, N) float32
-    it_s,        # scratch (bR, N) int32
-    rng_s,       # scratch (4, bR, N) uint32
-    bh_s,        # scratch (bR, 1) float32 (exact ints)
-    bm_s,        # scratch (bR, N) float32 (±1)
-    *,
+    *refs,
+    # i0_ref,    # (1, 1) int32 scalar
+    # [jperp_ref]  (1, 1) int32 scalar — ONLY when n_replicas > 0 (SSQA)
+    # mp_ref,    # (1, bR, Nw) uint32   spins, packed sign bits
+    # it_ref,    # (1, bR, N)  int32    Itanh state
+    # j_ref,     # (1, N, N)   J dtype  resident couplings of THIS problem
+    # h_ref,     # (1, 1, N)   int32    biases
+    # rng_ref,   # (1, 4, bR, N) uint32 xorshift128 lanes (carried)
+    # bh_ref,    # (1, bR, 1)  int32    running best energy (input)
+    # bmp_ref,   # (1, bR, Nw) uint32   running best spins, packed (input)
+    # mp_out,    # (1, bR, Nw) uint32
+    # it_out,    # (1, bR, N)  int32
+    # rng_out,   # (1, 4, bR, N) uint32
+    # bh_out,    # (1, bR, 1)  int32
+    # bmp_out,   # (1, bR, Nw) uint32
+    # m_s,       # scratch (bR, N) float32
+    # it_s,      # scratch (bR, N) int32
+    # rng_s,     # scratch (4, bR, N) uint32
+    # bh_s,      # scratch (bR, 1) float32 (exact ints)
+    # bm_s,      # scratch (bR, N) float32 (±1)
     n_cycles: int,
     n_rnd: int,
     eligible: bool,
+    n_replicas: int = 0,
 ):
     """All C cycles of a plateau with packed HBM refs and in-kernel noise.
 
@@ -358,7 +360,23 @@ def _plateau_streamed_kernel(
     so no (C, R, N) noise buffer exists anywhere.  Per-plateau HBM traffic
     drops from O(C·R·N) int8 noise to O(R·N) uint32 lanes + O(R·N/32)
     packed spins.
+
+    ``n_replicas > 0`` is the SSQA mode (DESIGN.md §13): the R-tile is one
+    Trotter ring (block_r == n_replicas enforced by the wrapper) and a
+    ``jperp_ref`` scalar operand adds the nearest-replica coupling
+    ``J⊥·(m[k-1] + m[k+1])`` — a roll over the tile's trial axis — to the
+    *update* field only; best-tracking keeps the classical per-replica
+    energy.  ``n_replicas == 0`` compiles the exact classical body (no
+    extra operand, identical jaxpr).
     """
+    if n_replicas:
+        (i0_ref, jperp_ref, mp_ref, it_ref, j_ref, h_ref, rng_ref, bh_ref,
+         bmp_ref, mp_out, it_out, rng_out, bh_out, bmp_out,
+         m_s, it_s, rng_s, bh_s, bm_s) = refs
+    else:
+        (i0_ref, mp_ref, it_ref, j_ref, h_ref, rng_ref, bh_ref,
+         bmp_ref, mp_out, it_out, rng_out, bh_out, bmp_out,
+         m_s, it_s, rng_s, bh_s, bm_s) = refs
     m_s[...] = _unpack_pm1_f32(mp_ref[0])
     it_s[...] = it_ref[0]
     rng_s[...] = rng_ref[0]
@@ -402,7 +420,15 @@ def _plateau_streamed_kernel(
         rng_s[3] = w_new
         r = jnp.where((w_new >> jnp.uint32(31)) & one, 1, -1).astype(jnp.int32)
 
-        I = field.astype(jnp.int32) + n_rnd * r + it_s[...]  # noqa: E741
+        upd = field.astype(jnp.int32)
+        if n_replicas:
+            # Trotter-ring coupling over the tile's trial axis (one ring per
+            # R-tile): m is ±1 f32, the sum of two neighbors is exact.
+            coup = (
+                jnp.roll(m_s[...], 1, axis=0) + jnp.roll(m_s[...], -1, axis=0)
+            ).astype(jnp.int32)
+            upd = upd + jperp_ref[0, 0] * coup
+        I = upd + n_rnd * r + it_s[...]  # noqa: E741
         it_new = jnp.clip(I, -i0, i0 - 1)
         it_s[...] = it_new
         m_s[...] = jnp.where(it_new >= 0, 1.0, -1.0).astype(jnp.float32)
@@ -422,7 +448,9 @@ def _plateau_streamed_kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n_cycles", "n_rnd", "eligible", "block_r", "interpret"),
+    static_argnames=(
+        "n_cycles", "n_rnd", "eligible", "block_r", "interpret", "n_replicas"
+    ),
 )
 def ssa_plateau_packed_batched(
     m_packed: jnp.ndarray,   # (B, R, Nw) uint32 packed ±1 spins
@@ -439,6 +467,8 @@ def ssa_plateau_packed_batched(
     eligible: bool = True,
     block_r: int = 8,
     interpret: Optional[bool] = None,
+    jperp=0,                 # scalar int32 replica coupling (SSQA)
+    n_replicas: int = 0,     # 0 = classical; >0 = SSQA Trotter-ring mode
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Streamed-noise resident plateau for B stacked problems, packed refs.
 
@@ -452,6 +482,16 @@ def ssa_plateau_packed_batched(
     """
     interpret = DEFAULT_INTERPRET if interpret is None else interpret
     B, R, N = itanh.shape
+    if n_replicas:
+        if block_r != n_replicas:
+            raise ValueError(
+                f"SSQA needs block_r == n_replicas (one Trotter ring per "
+                f"R-tile), got block_r={block_r}, n_replicas={n_replicas}"
+            )
+        if R % n_replicas:
+            raise ValueError(
+                f"n_trials={R} not divisible by n_replicas={n_replicas}"
+            )
     LANE = 128
     Np = N + (-N) % LANE
     Nwp = Np // 32
@@ -471,13 +511,18 @@ def ssa_plateau_packed_batched(
 
     kernel = functools.partial(
         _plateau_streamed_kernel, n_cycles=n_cycles, n_rnd=n_rnd,
-        eligible=eligible,
+        eligible=eligible, n_replicas=n_replicas,
     )
+    jperp_specs, jperp_args = [], []
+    if n_replicas:
+        jperp_specs = [pl.BlockSpec((1, 1), lambda b, i: (0, 0))]
+        jperp_args = [jnp.asarray(jperp, jnp.int32).reshape(1, 1)]
     mp_o, it_o, rng_o, bh_o, bmp_o = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1), lambda b, i: (0, 0)),
+            *jperp_specs,
             pl.BlockSpec((1, block_r, Nwp), lambda b, i: (b, i, 0)),
             pl.BlockSpec((1, block_r, Np), lambda b, i: (b, i, 0)),
             pl.BlockSpec((1, Np, Np), lambda b, i: (b, 0, 0)),
@@ -508,7 +553,7 @@ def ssa_plateau_packed_batched(
             pltpu.VMEM((block_r, Np), jnp.float32),
         ],
         interpret=interpret,
-    )(i0a, mp, itp, Jp.astype(J.dtype), hp, rngp, bhp, bmp)
+    )(i0a, *jperp_args, mp, itp, Jp.astype(J.dtype), hp, rngp, bhp, bmp)
     nw = (N + 31) // 32
     return (
         mp_o[:, :R, :nw],
@@ -534,6 +579,8 @@ def ssa_plateau_packed(
     eligible: bool = True,
     block_r: int = 8,
     interpret: Optional[bool] = None,
+    jperp=0,
+    n_replicas: int = 0,
 ):
     """B=1 slice of :func:`ssa_plateau_packed_batched` (one kernel body)."""
     mp, it, rs, bh, bmp = ssa_plateau_packed_batched(
@@ -550,6 +597,8 @@ def ssa_plateau_packed(
         eligible=eligible,
         block_r=block_r,
         interpret=interpret,
+        jperp=jperp,
+        n_replicas=n_replicas,
     )
     return mp[0], it[0], rs[0], bh[0], bmp[0]
 
@@ -617,32 +666,35 @@ def _pack_bits(bits: jnp.ndarray) -> jnp.ndarray:
 
 
 def _plateau_popcount_kernel(
-    i0_ref,      # (1, C)   int32   per-cycle I0 schedule (whole chain)
-    fold_ref,    # (1, C+1) int32   per-state storage write-enable
-    mp_ref,      # (1, bR, Nwp) uint32  spins, packed sign bits
-    it_ref,      # (1, bR, Np)  int32   Itanh state
-    sign_ref,    # (1, Np, Nwp) uint32  packed-J sign plane of THIS problem
-    mags_ref,    # (1, nb, Np, Nwp) uint32  packed-J magnitude bitplanes
-    base_ref,    # (1, 1, Np)  int32   −Σ_b 2^b·deg_b (PackedJ.base)
-    h_ref,       # (1, 1, Np)  int32   biases
-    rng_ref,     # (1, 4, bR, Np) uint32 xorshift128 lanes (carried)
-    bh_ref,      # (1, bR, 1)  int32   running best energy (input)
-    bmp_ref,     # (1, bR, Nwp) uint32 running best spins, packed (input)
-    mp_out,      # (1, bR, Nwp) uint32
-    it_out,      # (1, bR, Np)  int32
-    rng_out,     # (1, 4, bR, Np) uint32
-    bh_out,      # (1, bR, 1)  int32
-    bmp_out,     # (1, bR, Nwp) uint32
-    mw_s,        # scratch (bR, Nwp) uint32  packed current spins
-    m_s,         # scratch (bR, Np) int32    ±1 current spins (energy dots)
-    it_s,        # scratch (bR, Np) int32
-    rng_s,       # scratch (4, bR, Np) uint32
-    bh_s,        # scratch (bR, 1) int32
-    bmw_s,       # scratch (bR, Nwp) uint32  packed best spins
-    *,
+    *refs,
+    # i0_ref,    # (1, C)   int32   per-cycle I0 schedule (whole chain)
+    # [jperp_ref]  (1, C)  int32   per-cycle J⊥ — ONLY when n_replicas > 0
+    # fold_ref,  # (1, C+1) int32   per-state storage write-enable
+    # mp_ref,    # (1, bR, Nwp) uint32  spins, packed sign bits
+    # it_ref,    # (1, bR, Np)  int32   Itanh state
+    # sign_ref,  # (1, Np, Nwp) uint32  packed-J sign plane of THIS problem
+    # mags_ref,  # (1, nb, Np, Nwp) uint32  packed-J magnitude bitplanes
+    # base_ref,  # (1, 1, Np)  int32   −Σ_b 2^b·deg_b (PackedJ.base)
+    # h_ref,     # (1, 1, Np)  int32   biases
+    # rng_ref,   # (1, 4, bR, Np) uint32 xorshift128 lanes (carried)
+    # bh_ref,    # (1, bR, 1)  int32   running best energy (input)
+    # bmp_ref,   # (1, bR, Nwp) uint32 running best spins, packed (input)
+    # mp_out,    # (1, bR, Nwp) uint32
+    # it_out,    # (1, bR, Np)  int32
+    # rng_out,   # (1, 4, bR, Np) uint32
+    # bh_out,    # (1, bR, 1)  int32
+    # bmp_out,   # (1, bR, Nwp) uint32
+    # mw_s,      # scratch (bR, Nwp) uint32  packed current spins
+    # m_s,       # scratch (bR, Np) int32    ±1 current spins (energy dots)
+    # it_s,      # scratch (bR, Np) int32
+    # rng_s,     # scratch (4, bR, Np) uint32
+    # bh_s,      # scratch (bR, 1) int32
+    # bmw_s,     # scratch (bR, Nwp) uint32  packed best spins
+    # [ring_s]   # scratch (2, bR, Np) int32 — ONLY when n_replicas > 0
     n_cycles: int,
     n_rnd: int,
     field_tile: int,
+    n_replicas: int = 0,
 ):
     """A whole plateau *chain* with the field computed on bitplanes.
 
@@ -659,13 +711,34 @@ def _plateau_popcount_kernel(
       covers the final state, folded in the epilogue).  Bit-identical to
       chaining one launch per plateau, minus the per-boundary re-dispatch
       and duplicate field evaluation.
+
+    ``n_replicas > 0`` is the SSQA chain mode (DESIGN.md §13): the R-tile
+    is one Trotter ring and a per-cycle ``jperp_ref`` schedule adds the
+    nearest-replica coupling to the update field.  The replica planes are
+    **double-buffered** through a two-plane ``ring_s`` scratch (the
+    dual-BRAM layout of arXiv:2602.16143): cycle c reads plane c%2 and
+    writes the updated spins to plane (c+1)%2, so the coupling always sees
+    the coherent previous-cycle ring while the new one streams in.
     """
+    if n_replicas:
+        (i0_ref, jperp_ref, fold_ref, mp_ref, it_ref, sign_ref, mags_ref,
+         base_ref, h_ref, rng_ref, bh_ref, bmp_ref,
+         mp_out, it_out, rng_out, bh_out, bmp_out,
+         mw_s, m_s, it_s, rng_s, bh_s, bmw_s, ring_s) = refs
+    else:
+        (i0_ref, fold_ref, mp_ref, it_ref, sign_ref, mags_ref,
+         base_ref, h_ref, rng_ref, bh_ref, bmp_ref,
+         mp_out, it_out, rng_out, bh_out, bmp_out,
+         mw_s, m_s, it_s, rng_s, bh_s, bmw_s) = refs
     mw_s[...] = mp_ref[0]
     m_s[...] = _unpack_pm1_i32(mp_ref[0])
     it_s[...] = it_ref[0]
     rng_s[...] = rng_ref[0]
     bh_s[...] = bh_ref[0]
     bmw_s[...] = bmp_ref[0]
+    if n_replicas:
+        ring_s[0] = m_s[...]
+        ring_s[1] = m_s[...]
     sg = sign_ref[0]          # (Np, Nwp)
     mg = mags_ref[0]          # (nb, Np, Nwp)
     hf = h_ref[0]             # (1, Np) int32
@@ -726,12 +799,31 @@ def _plateau_popcount_kernel(
         r = jnp.where((w_new >> jnp.uint32(31)) & one, 1, -1).astype(jnp.int32)
 
         i0 = i0_ref[0, c]
-        I = field + n_rnd * r + it_s[...]  # noqa: E741 — Eq. (2a)
+        upd = field
+        if n_replicas:
+            # Double-buffered replica planes: read the coherent ring of the
+            # cycle parity, write the updated plane to the other buffer.
+            even = (c % 2) == 0
+            ring = jnp.where(even, ring_s[0], ring_s[1])
+            coup = jnp.roll(ring, 1, axis=0) + jnp.roll(ring, -1, axis=0)
+            upd = field + jperp_ref[0, c] * coup
+        I = upd + n_rnd * r + it_s[...]  # noqa: E741 — Eq. (2a)
         it_new = jnp.clip(I, -i0, i0 - 1)
         it_s[...] = it_new
         bits = it_new >= 0
-        m_s[...] = jnp.where(bits, 1, -1).astype(jnp.int32)
+        m_new = jnp.where(bits, 1, -1).astype(jnp.int32)
+        m_s[...] = m_new
         mw_s[...] = _pack_bits(bits)
+        if n_replicas:
+
+            @pl.when(even)
+            def _wr_odd():
+                ring_s[1] = m_new
+
+            @pl.when(~even)
+            def _wr_even():
+                ring_s[0] = m_new
+
         return 0
 
     jax.lax.fori_loop(0, n_cycles, body, 0)
@@ -748,7 +840,9 @@ def _plateau_popcount_kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n_rnd", "block_r", "field_tile", "interpret"),
+    static_argnames=(
+        "n_rnd", "block_r", "field_tile", "interpret", "n_replicas"
+    ),
 )
 def ssa_plateau_popcount_batched(
     m_packed: jnp.ndarray,   # (B, R, Nw) uint32 packed ±1 spins
@@ -767,6 +861,8 @@ def ssa_plateau_popcount_batched(
     block_r: int = 8,
     field_tile: int = 128,
     interpret: Optional[bool] = None,
+    jperp_sched: Optional[jnp.ndarray] = None,  # (C,) int32 per-cycle J⊥
+    n_replicas: int = 0,     # 0 = classical; >0 = SSQA Trotter-ring mode
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Bit-parallel resident chain for B stacked problems (multi-plateau).
 
@@ -783,6 +879,22 @@ def ssa_plateau_popcount_batched(
     interpret = DEFAULT_INTERPRET if interpret is None else interpret
     B, R, N = itanh.shape
     C = i0_sched.shape[0]
+    if jperp_sched is None:
+        # Classical chain: no coupling operand, no ring scratch — the exact
+        # pre-SSQA jaxpr (asserted in tests/test_popcount.py).
+        n_replicas = 0
+    elif n_replicas:
+        if block_r != n_replicas:
+            raise ValueError(
+                f"SSQA needs block_r == n_replicas (one Trotter ring per "
+                f"R-tile), got block_r={block_r}, n_replicas={n_replicas}"
+            )
+        if R % n_replicas:
+            raise ValueError(
+                f"n_trials={R} not divisible by n_replicas={n_replicas}"
+            )
+    else:
+        raise ValueError("jperp_sched given but n_replicas == 0")
     nb = mags.shape[1]
     LANE = 128
     Np = N + (-N) % LANE
@@ -809,13 +921,19 @@ def ssa_plateau_popcount_batched(
 
     kernel = functools.partial(
         _plateau_popcount_kernel, n_cycles=C, n_rnd=n_rnd,
-        field_tile=field_tile,
+        field_tile=field_tile, n_replicas=n_replicas,
     )
+    jperp_specs, jperp_args, ring_scratch = [], [], []
+    if n_replicas:
+        jperp_specs = [pl.BlockSpec((1, C), lambda b, i: (0, 0))]
+        jperp_args = [jnp.asarray(jperp_sched, jnp.int32).reshape(1, C)]
+        ring_scratch = [pltpu.VMEM((2, block_r, Np), jnp.int32)]
     mp_o, it_o, rng_o, bh_o, bmp_o = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, C), lambda b, i: (0, 0)),
+            *jperp_specs,
             pl.BlockSpec((1, C + 1), lambda b, i: (0, 0)),
             pl.BlockSpec((1, block_r, Nwp), lambda b, i: (b, i, 0)),
             pl.BlockSpec((1, block_r, Np), lambda b, i: (b, i, 0)),
@@ -848,9 +966,10 @@ def ssa_plateau_popcount_batched(
             pltpu.VMEM((4, block_r, Np), jnp.uint32),
             pltpu.VMEM((block_r, 1), jnp.int32),
             pltpu.VMEM((block_r, Nwp), jnp.uint32),
+            *ring_scratch,
         ],
         interpret=interpret,
-    )(i0a, folda, mp, itp, signp, magsp, basep, hp, rngp, bhp, bmp)
+    )(i0a, *jperp_args, folda, mp, itp, signp, magsp, basep, hp, rngp, bhp, bmp)
     nw = (N + 31) // 32
     return (
         mp_o[:, :R, :nw],
@@ -878,6 +997,8 @@ def ssa_plateau_popcount(
     block_r: int = 8,
     field_tile: int = 128,
     interpret: Optional[bool] = None,
+    jperp_sched: Optional[jnp.ndarray] = None,
+    n_replicas: int = 0,
 ):
     """B=1 slice of :func:`ssa_plateau_popcount_batched` (one kernel body)."""
     mp, it, rs, bh, bmp = ssa_plateau_popcount_batched(
@@ -896,5 +1017,7 @@ def ssa_plateau_popcount(
         block_r=block_r,
         field_tile=field_tile,
         interpret=interpret,
+        jperp_sched=jperp_sched,
+        n_replicas=n_replicas,
     )
     return mp[0], it[0], rs[0], bh[0], bmp[0]

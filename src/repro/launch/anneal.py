@@ -37,7 +37,15 @@ import argparse
 import time
 
 from repro.configs import ANNEAL_PROBLEMS
-from repro.core import SSAHyperParams, anneal, autotune_hyperparams, gset, memory
+from repro.core import (
+    SolverConfig,
+    SSAHyperParams,
+    SSQAHyperParams,
+    anneal,
+    autotune_hyperparams,
+    gset,
+    memory,
+)
 
 
 def _resilience_policy(args):
@@ -75,7 +83,7 @@ def _run_service(problem_names, hp, args):
         AnnealRequest(problem=p, hp="auto" if args.auto_tune else hp,
                       seed=args.seed + i, storage=args.storage,
                       target_cut=args.target_cut, auto_base=hp,
-                      deadline_s=args.deadline_s)
+                      deadline_s=args.deadline_s, algo=args.algo)
         for i, p in enumerate(problems)
     ]
     partition, mesh = _partition_mesh(args)
@@ -99,9 +107,12 @@ def _run_service(problem_names, hp, args):
     dt = time.time() - t0
     total_spin_cycles = 0
     for p, r in zip(problems, responses):
-        if r.result is None:  # retries exhausted (status='failed')
-            print(f"{p.name}: FAILED "
-                  f"({'; '.join(e.kind for e in r.events)})")
+        if r.result is None:
+            # No result to report: distinguish 'shed'/'deadline' (the
+            # service declined or timed the work out) from 'failed'
+            # (retries exhausted) instead of labeling everything a failure.
+            print(f"{p.name}: {r.status.upper()} — no result "
+                  f"({'; '.join(e.kind for e in r.events) or 'no events'})")
             continue
         rhp = r.request.hp  # resolved (autotuned hp differs from the base)
         shots = r.chunks_run * (rhp.m_shot // r.chunks_total)
@@ -157,18 +168,30 @@ def _run_stream(problem_names, hp, args):
                 problem=p, hp="auto" if args.auto_tune else hp,
                 seed=args.seed + i, storage=args.storage,
                 target_cut=args.target_cut, auto_base=hp,
-                deadline_s=args.deadline_s)
+                deadline_s=args.deadline_s, algo=args.algo)
             tickets.append(ss.submit(req, priority=args.priority))
+        shed = deadline = 0
         for p, t in zip(problems, tickets):
             r = t.result(timeout=None)
-            if r.result is None:
-                print(f"{p.name}: {r.status.upper()} "
-                      f"({'; '.join(e.kind for e in r.events)})")
+            if r.status == "shed":
+                # Dropped unstarted (deadline already unmeetable) — not a
+                # solver failure; count it separately in the summary.
+                shed += 1
+                print(f"{p.name}: SHED — dropped from the queue unstarted "
+                      f"(deadline_s={r.request.deadline_s})")
                 continue
+            if r.result is None:
+                print(f"{p.name}: {r.status.upper()} — no result "
+                      f"({'; '.join(e.kind for e in r.events) or 'no events'})")
+                continue
+            if r.status == "deadline":
+                deadline += 1
             print(f"{p.name}: best cut {r.result.overall_best_cut} "
                   f"[chunks={r.chunks_run}/{r.chunks_total} "
                   f"queued {r.queued_s:.2f}s lane {r.lane_wall_s:.2f}s] "
-                  f"status={r.status}")
+                  f"status={r.status}"
+                  + (" (best-so-far at deadline)"
+                     if r.status == "deadline" else ""))
     finally:
         ss.stop()
     dt = time.time() - t0
@@ -177,7 +200,8 @@ def _run_stream(problem_names, hp, args):
           f"occupancy={st['occupancy']:.2f} "
           f"backfills={st['stream_backfills']} "
           f"tables={st['stream_tables_created']} "
-          f"quanta={st['stream_quanta']}")
+          f"quanta={st['stream_quanta']} "
+          f"shed={shed} deadline={deadline}")
 
 
 def _run_problem_kind(hp, args):
@@ -205,9 +229,9 @@ def _run_problem_kind(hp, args):
     responses = svc.solve(requests)
     dt = time.time() - t0
     for enc, r in zip(encs, responses):
-        if r.result is None:  # retries exhausted (status='failed')
-            print(f"{enc.model.name}: FAILED "
-                  f"({'; '.join(e.kind for e in r.events)})")
+        if r.result is None:
+            print(f"{enc.model.name}: {r.status.upper()} — no result "
+                  f"({'; '.join(e.kind for e in r.events) or 'no events'})")
             continue
         rhp = r.request.hp
         tuned = (f" auto[n_rnd={rhp.n_rnd} i0_max={rhp.i0_max} "
@@ -266,6 +290,16 @@ def main():
     ap.add_argument("--no-fallback", action="store_true",
                     help="service mode: disable the backend fallback chain "
                          "(pallas→dense→sparse) — faults propagate instead")
+    ap.add_argument("--algo", choices=("ssa", "ssqa"), default="ssa",
+                    help="algorithm family: 'ssqa' runs the Trotter-replica "
+                         "quantum variant (DESIGN.md §13) — the replica ring "
+                         "lives on the trial axis, so --trials must be a "
+                         "multiple of --replicas")
+    ap.add_argument("--replicas", type=int, default=8,
+                    help="--algo ssqa: Trotter replicas per ring (>= 2)")
+    ap.add_argument("--jperp-max", type=int, default=4,
+                    help="--algo ssqa: integer replica coupling at the "
+                         "coldest plateau (the Γ→0 end of the ramp)")
     ap.add_argument("--trials", type=int, default=16)
     ap.add_argument("--m-shot", type=int, default=20)
     ap.add_argument("--tau", type=int, default=100)
@@ -306,11 +340,19 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    hp = SSAHyperParams(
-        n_trials=args.trials, m_shot=args.m_shot, n_rnd=args.n_rnd,
-        i0_min=args.i0_min, i0_max=args.i0_max, tau=args.tau,
-        beta_shift=args.beta_shift,
-    )
+    if args.algo == "ssqa":
+        hp = SSQAHyperParams(
+            n_trials=args.trials, m_shot=args.m_shot, n_rnd=args.n_rnd,
+            i0_min=args.i0_min, i0_max=args.i0_max, tau=args.tau,
+            beta_shift=args.beta_shift, n_replicas=args.replicas,
+            jperp_max=args.jperp_max,
+        )
+    else:
+        hp = SSAHyperParams(
+            n_trials=args.trials, m_shot=args.m_shot, n_rnd=args.n_rnd,
+            i0_min=args.i0_min, i0_max=args.i0_max, tau=args.tau,
+            beta_shift=args.beta_shift,
+        )
     if args.problem_kind != "gset":
         return _run_problem_kind(hp, args)
     names = args.problem.split(",")
@@ -324,19 +366,24 @@ def main():
         hp, rep = autotune_hyperparams(p.to_ising(), hp)
         print(f"auto-tune: sigma={rep.sigma:.2f} |z|max={rep.z_max} → "
               f"n_rnd={hp.n_rnd} I0:{hp.i0_min}→{hp.i0_max} tau={hp.tau}")
+    algo_name = ("SSQA" if args.algo == "ssqa"
+                 else "HA-SSA" if args.storage == "i0max" else "SSA")
+    extra = (f"; R={hp.n_replicas} jperp_max={hp.jperp_max}"
+             if args.algo == "ssqa" else "")
     print(f"{p.name}: N={p.n} |E|={len(p.edges)}; {hp.total_cycles} cycles "
           f"× {hp.n_trials} trials; backend={args.backend}; "
-          f"storage={args.storage} ({'HA-SSA' if args.storage == 'i0max' else 'SSA'})")
+          f"storage={args.storage} ({algo_name}){extra}")
     partition, mesh = _partition_mesh(args)
-    bopts = _backend_opts(args)
-    if partition != "problem":
-        bopts.update(partition=partition, mesh=mesh)
+    cfg = SolverConfig(
+        backend=args.backend, noise=args.noise,
+        storage_layout=args.storage_layout,
+        field_mode=(args.field_mode
+                    if args.backend != "sparse" else "auto"),
+        partition=partition, mesh=mesh,
+    )
     t0 = time.time()
     r = anneal(p, hp, seed=args.seed, storage=args.storage, record=args.record,
-               backend=args.backend, noise=args.noise,
-               storage_layout=args.storage_layout,
-               backend_opts=bopts,
-               track_energy=args.track_energy)
+               config=cfg, track_energy=args.track_energy)
     dt = time.time() - t0
     spin_cycles = hp.total_cycles * hp.n_trials
     print(f"best cut {r.overall_best_cut}  avg {r.mean_best_cut:.1f}  "

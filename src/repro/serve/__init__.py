@@ -12,6 +12,12 @@ from .anneal_service import (  # noqa: F401
     AnnealResponse,
     AnnealService,
 )
+from .registry import (  # noqa: F401
+    AlgoFamily,
+    family_for,
+    register_algo,
+    registered_algos,
+)
 from .resilience import (  # noqa: F401
     STATUS_DEADLINE,
     STATUS_FAILED,

@@ -76,6 +76,15 @@ early-stopped identically — SA through the vmapped Metropolis core,
 PT-SSA through :func:`repro.core.pt.pt_ssa_rounds` with the replica ladder
 on the engine's trial axis.  (SA groups never need the backend fallback
 chain: their Metropolis core is backend-independent.)
+
+SSQA (:class:`~repro.core.ssqa.SSQAHyperParams`, ``algo='ssqa'``) is the
+fourth family (DESIGN.md §13): it rides the SSA plateau path with the
+Trotter-replica ring on the trial axis — the group solver injects
+``n_replicas`` into the backend opts (program-structural: ring width per
+R-tile) and the J⊥ ramp rides the schedule signature, so SSQA groups get
+their own cached executables while sharing every line of the batching,
+chunking, checkpointing and fallback machinery.  Family dispatch and the
+per-family admission rules live in :mod:`repro.serve.registry`.
 """
 from __future__ import annotations
 
@@ -110,15 +119,19 @@ from repro.core.engine import (
     schedule_plateaus,
     validate_model,
 )
+from repro.core.config import SolverConfig
 from repro.core.ising import IsingModel, MaxCutProblem
 from repro.core.pt import PTSSAHyperParams, PTSSAResult, pt_ssa_rounds
 from repro.core.rng import xorshift_lanes_ok
 from repro.core.sa import SAHyperParams, SAResult, sa_cycles, sa_init
 from repro.core.schedule import sa_temperature_ladder
 from repro.core.ssa import AnnealResult, SSAHyperParams
+from repro.core.ssqa import SSQAHyperParams
 from repro.ft.faults import FaultInjector
 from repro.problems import ProblemEncoding
 from repro.sharding import mesh_fingerprint
+
+from .registry import family_for, registered_algos
 
 from .resilience import (
     STATUS_DEADLINE,
@@ -143,7 +156,8 @@ __all__ = [
     "AnnealService",
 ]
 
-HyperParams = Union[SSAHyperParams, SAHyperParams, PTSSAHyperParams]
+HyperParams = Union[SSAHyperParams, SAHyperParams, PTSSAHyperParams,
+                    SSQAHyperParams]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -155,15 +169,25 @@ class AnnealRequest:
     — encoded problems come back with a decoded, feasibility-verified domain
     solution on the response.
 
-    ``hp`` selects the algorithm: SSAHyperParams → SSA/HA-SSA (the paper's
-    annealer), SAHyperParams → Metropolis SA, PTSSAHyperParams → PT on the
-    plateau engine.  The string ``'auto'`` requests local-energy-distribution
-    autotuning (:mod:`repro.core.autotune`).  ``target_cut`` arms chunk-level
-    early stop.  ``deadline_s`` is the per-request wall-clock budget,
-    measured from the ``solve()`` call: once it elapses, the request stops
-    participating in its group's continuation and its response returns
-    best-so-far with ``status='deadline'`` at the next chunk boundary —
-    it never raises.
+    ``hp`` selects the algorithm family through the registry
+    (:mod:`repro.serve.registry`): SSAHyperParams → SSA/HA-SSA (the paper's
+    annealer), SSQAHyperParams → Trotter-replica SSQA, SAHyperParams →
+    Metropolis SA, PTSSAHyperParams → PT on the plateau engine.  ``algo``
+    optionally names the family explicitly (``'ssa'``/``'sa'``/``'ptssa'``/
+    ``'ssqa'``): it is validated against the hp type, and with ``hp='auto'``
+    it selects which family the autotuner targets (``algo='ssqa'`` tunes
+    the Trotter ring too).  The string ``'auto'`` requests
+    local-energy-distribution autotuning (:mod:`repro.core.autotune`).
+    ``config`` is a per-request :class:`~repro.core.config.SolverConfig`
+    override of the service's backend/backend-option defaults (its
+    ``noise``/``storage_layout`` must match the service's — those axes are
+    service-wide contracts); its ``signature()`` joins the batching key so
+    differently-configured requests never share a compiled program.
+    ``target_cut`` arms chunk-level early stop.  ``deadline_s`` is the
+    per-request wall-clock budget, measured from the ``solve()`` call: once
+    it elapses, the request stops participating in its group's continuation
+    and its response returns best-so-far with ``status='deadline'`` at the
+    next chunk boundary — it never raises.
     """
 
     problem: Union[MaxCutProblem, IsingModel, ProblemEncoding]
@@ -174,6 +198,8 @@ class AnnealRequest:
     target_cut: Optional[int] = None
     auto_base: Optional[SSAHyperParams] = None  # budget knobs for hp='auto'
     deadline_s: Optional[float] = None  # wall-clock budget from solve() entry
+    algo: Optional[str] = None     # explicit family name (registry-validated)
+    config: Optional[SolverConfig] = None  # per-request solver-option override
 
 
 @dataclasses.dataclass
@@ -202,7 +228,7 @@ class AnnealResponse:
 class AnnealProgress:
     """One streaming progress report (per group, per chunk)."""
 
-    kind: str                      # 'ssa' | 'sa' | 'ptssa'
+    kind: str                      # 'ssa' | 'sa' | 'ptssa' | 'ssqa'
     bucket: int
     chunk: int
     chunks_total: int
@@ -389,6 +415,7 @@ class AnnealService:
         partition: str = "problem",
         mesh=None,
         max_cached_executables: int = 64,
+        config: Optional[SolverConfig] = None,
     ):
         """``storage_layout='packed'`` keeps the HBM-resident engine state
         between chunk launches as uint32 spin bitplanes (DESIGN.md §4).
@@ -414,7 +441,21 @@ class AnnealService:
         ``noise='xorshift'`` (shard-local lane seeding is what makes sharded
         runs bit-identical to single-device runs).  SA and PT-SSA groups
         always run problem-partitioned.
+
+        ``config`` supplies the whole knob set from one
+        :class:`~repro.core.config.SolverConfig` — its backend, noise,
+        storage_layout, field/J/noise-mode options, partition and mesh
+        replace the corresponding individual kwargs (which remain for
+        compatibility and are ignored when ``config`` is given).
         """
+        if config is not None:
+            backend = config.backend
+            noise = config.noise
+            storage_layout = config.storage_layout
+            backend_opts = config.engine_opts()
+            backend_opts.pop("storage_layout", None)  # passed apart below
+            partition = config.partition
+            mesh = config.mesh if config.mesh is not None else mesh
         if storage_layout not in ("dense", "packed"):
             raise ValueError(f"unknown storage_layout {storage_layout!r}")
         if partition not in ("problem", "spin", "auto"):
@@ -439,11 +480,13 @@ class AnnealService:
     def partition_for(self, kind: str, nb: int) -> str:
         """Effective partition for one group: 'problem' or 'spin'.
 
-        Spin sharding applies only to the SSA plateau path — SA and PT-SSA
-        run through per-problem field closures the shard_map backend doesn't
-        expose, so they stay problem-partitioned regardless of the knob.
+        Spin sharding applies only to the plateau path (SSA and SSQA — the
+        replica ring lives on the shard-local trial axis, so sharding the
+        spin axis needs no extra collectives) — SA and PT-SSA run through
+        per-problem field closures the shard_map backend doesn't expose, so
+        they stay problem-partitioned regardless of the knob.
         """
-        if kind != "ssa":
+        if kind not in ("ssa", "ssqa"):
             return "problem"
         return resolve_partition(self.partition, nb, self.mesh)
 
@@ -482,15 +525,17 @@ class AnnealService:
                 self._admit(idx, req, model)
             if isinstance(req.hp, str):
                 hp, reports[idx] = resolve_hyperparams(
-                    req.hp, model, base=req.auto_base, seed=self.autotune_seed
+                    req.hp, model, base=req.auto_base, seed=self.autotune_seed,
+                    algo=req.algo,
                 )
                 req = dataclasses.replace(req, hp=hp)
                 self.stats["autotuned"] += 1
-            if isinstance(req.hp, PTSSAHyperParams) and self.backend == "pallas":
-                raise AdmissionError(
-                    "pt-ssa needs per-replica I0 columns; run the service with "
-                    "backend='sparse' or 'dense' for PTSSAHyperParams requests"
-                )
+            fam = family_for(req.hp, algo=req.algo)  # raises AdmissionError
+            if fam.validate is not None:
+                # Family-owned admission rules are correctness (a backend
+                # the family cannot run on), not optional hygiene — they
+                # fire even with policy.validate_admission off.
+                fam.validate(self, idx, req, req.hp)
             nb = bucket_n(model.n, self.min_bucket)
             groups[self._group_key(req, nb)].append((idx, req, maxcut, model))
         self.stats["groups"] += len(groups)
@@ -532,6 +577,23 @@ class AnnealService:
             raise AdmissionError(
                 f"request {idx}: deadline_s must be > 0, got {req.deadline_s}"
             )
+        if req.config is not None:
+            # Per-request configs may retarget backend/field options, but
+            # noise and storage layout are service-wide contracts (they key
+            # checkpoint fingerprints and the packed-state carry format).
+            if req.config.noise != self.noise:
+                self.stats["admission_rejects"] += 1
+                raise AdmissionError(
+                    f"request {idx}: config.noise={req.config.noise!r} "
+                    f"differs from the service's noise={self.noise!r}"
+                )
+            if req.config.storage_layout != self.storage_layout:
+                self.stats["admission_rejects"] += 1
+                raise AdmissionError(
+                    f"request {idx}: config.storage_layout="
+                    f"{req.config.storage_layout!r} differs from the "
+                    f"service's storage_layout={self.storage_layout!r}"
+                )
         if model.n > MAX_UNSHARDED_SPINS:
             # Giant instances are admissible only when they will actually
             # route to the spin-sharded SSA path (DESIGN.md §11) — on the
@@ -553,15 +615,15 @@ class AnnealService:
     # Grouping
     # ------------------------------------------------------------------
     def _group_key(self, req: AnnealRequest, nb: int):
-        hp = req.hp
-        if isinstance(hp, SSAHyperParams):
-            sig = hp.schedule(req.schedule_kind).signature()
-            return ("ssa", nb, hp.n_trials, hp.n_rnd, hp.m_shot, req.storage, sig)
-        if isinstance(hp, SAHyperParams):
-            return ("sa", nb, hp)
-        if isinstance(hp, PTSSAHyperParams):
-            return ("ptssa", nb, hp)
-        raise TypeError(f"unsupported hyperparameter type {type(hp).__name__}")
+        """Family key from the registry + the per-request config signature.
+
+        Requests batch together only when the family's own key components
+        match AND they carry the same (or no) :class:`SolverConfig` — two
+        requests pinned to different backends must never share a program.
+        """
+        fam = family_for(req.hp, algo=req.algo)
+        cfg_sig = req.config.signature() if req.config is not None else None
+        return fam.group_key(req, req.hp, nb) + (cfg_sig,)
 
     def _resolve_field_opts(self, backend: str, opts: dict, items) -> dict:
         """Resolve field_mode='auto' + group ``j_bits`` for one request group.
@@ -608,10 +670,18 @@ class AnnealService:
         re-run as a fresh group, offenders retry solo with backoff.  Kills
         and unclassified errors propagate.
         """
-        solver = {"ssa": self._solve_ssa_group,
-                  "sa": self._solve_sa_group,
-                  "ptssa": self._solve_ptssa_group}[kind]
-        backend, opts = self.backend, dict(self.backend_opts)
+        solver = getattr(self, registered_algos()[kind].solver)
+        cfg = items[0][1].config
+        if cfg is not None:
+            # Per-request SolverConfig override: backend + engine options
+            # come from the config (noise/storage_layout were admission-
+            # checked to match the service, and the group key carries the
+            # config signature, so every item in the group agrees).
+            backend = cfg.backend
+            opts = cfg.engine_opts()
+            opts.pop("storage_layout", None)  # service-wide, passed apart
+        else:
+            backend, opts = self.backend, dict(self.backend_opts)
         if backend == "auto":
             # Resolve per bucket (MIN_RESIDENT_N rule) and drop any opts the
             # chosen backend doesn't accept — 'auto' users pass a union.
@@ -664,7 +734,7 @@ class AnnealService:
     def _chunk_of(self, kind, items) -> int:
         """The group's chunk width (part of its checkpoint fingerprint)."""
         hp = items[0][1].hp
-        if kind == "ssa":
+        if kind in ("ssa", "ssqa"):
             return _largest_divisor_leq(hp.m_shot, self.chunk_shots)
         if kind == "ptssa":
             return _largest_divisor_leq(hp.n_rounds, self.chunk_shots)
@@ -744,27 +814,30 @@ class AnnealService:
     # SSA / HA-SSA groups (the tentpole hot path)
     # ------------------------------------------------------------------
     def _ssa_programs(self, *, nb, b_bucket, hp, storage, schedule_kind,
-                      backend, opts, chunk, fire=None):
-        """Compiled SSA plateau programs for one (bucket, batch) shape.
+                      backend, opts, chunk, fire=None, kind="ssa"):
+        """Compiled SSA/SSQA plateau programs for one (bucket, batch) shape.
 
         Returns ``(bk, init_fn, chunk_fn, plateaus)`` from the bounded
         executable cache, compiling on miss.  Shared by the one-shot group
         solver and the streaming slot tables (:mod:`repro.serve.stream`) —
         the cache key deliberately excludes ``m_shot``: the plateau chain per
         iteration is budget-independent, so a slot table can serve mixed
-        chunk budgets through one program.
+        chunk budgets through one program.  SSQA groups arrive with
+        ``kind='ssqa'`` and ``opts['n_replicas']`` set; the schedule
+        signature (which carries the J⊥ ramp) plus the opts key keep them on
+        distinct programs from classical groups.
         """
         plateaus = schedule_plateaus(hp.schedule(schedule_kind), storage)
         sig = hp.schedule(schedule_kind).signature()
-        part = self.partition_for("ssa", nb)
-        cache_key = ("ssa", backend, _opts_key(opts), self.storage_layout, nb,
+        part = self.partition_for(kind, nb)
+        cache_key = (kind, backend, _opts_key(opts), self.storage_layout, nb,
                      b_bucket, hp.n_trials, hp.n_rnd, self.noise, storage,
                      sig, chunk, part,
                      mesh_fingerprint(self.mesh) if part == "spin" else ())
         ent = self._programs.get(cache_key)
         if ent is None:
             if fire is not None:
-                fire("compile", backend=backend, kind="ssa", bucket=nb)
+                fire("compile", backend=backend, kind=kind, bucket=nb)
             self.stats["program_cache_misses"] += 1
             bk = make_batched_backend(
                 backend, n_bucket=nb, n_trials=hp.n_trials,
@@ -797,10 +870,20 @@ class AnnealService:
         padded, b_live, b_bucket = self._pad_group(items)
         backend, opts = ctx.backend, ctx.backend_opts
         opts = self._resolve_field_opts(backend, opts, items)
+        nr = int(getattr(hp, "n_replicas", 0) or 0)
+        if nr:
+            # SSQA: the Trotter depth is program-structural (ring width per
+            # R-tile), so it rides opts into the backend ctor AND the
+            # executable-cache key; pallas replica rings exist only in the
+            # streamed-noise kernel.
+            opts = dict(opts)
+            opts["n_replicas"] = nr
+            if backend == "pallas":
+                opts.setdefault("noise_mode", "streamed")
         bk, init_fn, chunk_fn, plateaus = self._ssa_programs(
             nb=nb, b_bucket=b_bucket, hp=hp, storage=req0.storage,
             schedule_kind=req0.schedule_kind, backend=backend, opts=opts,
-            chunk=chunk, fire=ctx.fire,
+            chunk=chunk, fire=ctx.fire, kind=ctx.kind,
         )
         stored_per_iter = sum(p.length for p in plateaus if p.eligible)
 
@@ -814,7 +897,7 @@ class AnnealService:
         state = init_fn(stacked, ns0)
 
         state, chunk_traces, stops = self._chunk_loop(
-            "ssa", nb, items, n_chunks, progress,
+            ctx.kind, nb, items, n_chunks, progress,
             lambda st, c: chunk_fn(stacked, st), state,
             lambda st: st.best_H, ctx, width=b_bucket,
             snap=lambda st: bk.finalize(st),

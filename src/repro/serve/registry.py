@@ -1,0 +1,183 @@
+"""Algorithm-family registry for the annealing services (DESIGN.md §13).
+
+The service used to dispatch on a hand-maintained ``{"ssa": ..., "sa": ...,
+"ptssa": ...}`` dict inside :meth:`AnnealService._solve_group_resilient`,
+with family-specific admission rules (the PT-SSA×pallas rejection) inlined
+in ``solve()``.  Adding SSQA as a fourth family made that sprawl the bug
+surface: every new algorithm had to edit three far-apart switch sites.
+
+This module replaces the switches with one table.  Each family registers:
+
+* ``name`` — the wire name (``AnnealRequest(algo=...)``, group keys,
+  checkpoint fingerprints, progress reports);
+* ``hp_type`` — the hyperparameter dataclass that *implies* the family when
+  ``algo`` is not given.  Resolution is most-specific-type-first:
+  :class:`~repro.core.ssqa.SSQAHyperParams` subclasses
+  :class:`~repro.core.ssa.SSAHyperParams`, so an SSQA hp lands on the
+  ``ssqa`` family even though it is also an SSA instance;
+* ``solver`` — the name of the ``AnnealService`` group-solver method (bound
+  late so the registry has no import cycle with the service);
+* ``group_key`` — the family's contribution to the batching key (what must
+  match for two requests to share one compiled program);
+* ``validate`` — admission-time rejection that lives *next to the family*
+  instead of inside the service (e.g. PT-SSA rejects the pallas backend,
+  SSQA×pallas demands the streamed-noise kernel).
+
+Third parties can :func:`register_algo` additional families; the built-in
+four (ssa, sa, ptssa, ssqa) register at import.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+from repro.core.pt import PTSSAHyperParams
+from repro.core.sa import SAHyperParams
+from repro.core.ssa import SSAHyperParams
+from repro.core.ssqa import SSQAHyperParams
+
+from .resilience import AdmissionError
+
+__all__ = [
+    "AlgoFamily",
+    "register_algo",
+    "registered_algos",
+    "family_for",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class AlgoFamily:
+    """One served algorithm family (see module docstring)."""
+
+    name: str
+    hp_type: type
+    solver: str                    # AnnealService method name (late-bound)
+    group_key: Callable            # (req, hp, nb) -> hashable batching key
+    validate: Optional[Callable] = None  # (service, idx, req, hp) -> None
+    chunk_unit: str = "m_shot"     # hp attribute the chunk width divides
+
+
+_REGISTRY: Dict[str, AlgoFamily] = {}
+
+
+def register_algo(
+    name: str,
+    hp_type: type,
+    *,
+    solver: str,
+    group_key: Callable,
+    validate: Optional[Callable] = None,
+    chunk_unit: str = "m_shot",
+) -> AlgoFamily:
+    """Register (or replace) an algorithm family under ``name``."""
+    fam = AlgoFamily(str(name), hp_type, solver, group_key, validate,
+                     chunk_unit)
+    _REGISTRY[fam.name] = fam
+    return fam
+
+
+def registered_algos() -> Dict[str, AlgoFamily]:
+    return dict(_REGISTRY)
+
+
+def _family_for_type(hp) -> AlgoFamily:
+    """Most-specific registered family whose hp_type matches ``hp``."""
+    best: Optional[AlgoFamily] = None
+    for fam in _REGISTRY.values():
+        if isinstance(hp, fam.hp_type):
+            if best is None or issubclass(fam.hp_type, best.hp_type):
+                best = fam
+    if best is None:
+        raise TypeError(
+            f"unsupported hyperparameter type {type(hp).__name__}; "
+            f"registered families: {sorted(_REGISTRY)}"
+        )
+    return best
+
+
+def family_for(hp, algo: Optional[str] = None) -> AlgoFamily:
+    """Resolve the family for a request: explicit ``algo`` or hp type.
+
+    An explicit ``algo`` must agree with what the hp type implies — an
+    ``algo='ssa'`` request carrying SSQA hyperparameters (or vice versa)
+    is a caller bug, rejected at admission rather than silently run as
+    whichever family the solver table happens to pick.
+    """
+    tfam = _family_for_type(hp)
+    if algo is None:
+        return tfam
+    fam = _REGISTRY.get(algo)
+    if fam is None:
+        raise AdmissionError(
+            f"unknown algo {algo!r}; registered: {sorted(_REGISTRY)}"
+        )
+    if fam is not tfam:
+        raise AdmissionError(
+            f"algo={algo!r} does not match hyperparameter type "
+            f"{type(hp).__name__} (which selects family {tfam.name!r})"
+        )
+    return fam
+
+
+# ----------------------------------------------------------------------
+# Built-in families
+# ----------------------------------------------------------------------
+def _plateau_group_key(name):
+    def key(req, hp, nb):
+        sig = hp.schedule(req.schedule_kind).signature()
+        return (name, nb, hp.n_trials, hp.n_rnd, hp.m_shot, req.storage, sig)
+    return key
+
+
+def _validate_ptssa(service, idx, req, hp):
+    if service.backend == "pallas":
+        raise AdmissionError(
+            "pt-ssa needs per-replica I0 columns; run the service with "
+            "backend='sparse' or 'dense' for PTSSAHyperParams requests"
+        )
+
+
+def _validate_ssqa(service, idx, req, hp):
+    # The batched pallas SSQA path is the streamed-noise resident kernel
+    # (the pregen/threefry chains have no replica ring) — reject at
+    # admission instead of letting the backend ctor fault mid-batch.
+    if service.backend == "pallas":
+        if service.noise != "xorshift":
+            raise AdmissionError(
+                f"request {idx}: ssqa on backend='pallas' requires "
+                "noise='xorshift' (streamed-noise replica-ring kernel), "
+                f"got noise={service.noise!r}"
+            )
+        if service.backend_opts.get("noise_mode") == "pregen":
+            raise AdmissionError(
+                f"request {idx}: ssqa on backend='pallas' requires "
+                "noise_mode='streamed'; drop noise_mode='pregen' from "
+                "backend_opts"
+            )
+
+
+register_algo(
+    "ssa", SSAHyperParams,
+    solver="_solve_ssa_group",
+    group_key=_plateau_group_key("ssa"),
+)
+register_algo(
+    "sa", SAHyperParams,
+    solver="_solve_sa_group",
+    group_key=lambda req, hp, nb: ("sa", nb, hp),
+    chunk_unit="n_cycles",
+)
+register_algo(
+    "ptssa", PTSSAHyperParams,
+    solver="_solve_ptssa_group",
+    group_key=lambda req, hp, nb: ("ptssa", nb, hp),
+    validate=_validate_ptssa,
+    chunk_unit="n_rounds",
+)
+register_algo(
+    "ssqa", SSQAHyperParams,
+    solver="_solve_ssa_group",   # SSQA rides the SSA plateau path
+    group_key=_plateau_group_key("ssqa"),
+    validate=_validate_ssqa,
+)

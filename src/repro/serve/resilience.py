@@ -131,22 +131,25 @@ class ResiliencePolicy:
 # fallback must drop e.g. pallas block_r when downgrading to dense.  Both
 # field-capable backends carry field_mode/j_bits, so a pallas→dense
 # downgrade keeps the XNOR-popcount arithmetic (and its bit-exactness).
+# n_replicas (the SSQA Trotter depth) is accepted everywhere: the replica
+# ring is a trial-axis property, so every backend in the fallback chain
+# must preserve it — dropping it would silently turn SSQA into SSA.
 _BACKEND_OPT_KEYS = {
-    "sparse": frozenset(),
+    "sparse": frozenset({"n_replicas"}),
     "dense": frozenset(
         {"j_dtype", "j_mode", "tile_n", "field_mode", "j_bits",
-         "double_buffer"}
+         "double_buffer", "n_replicas"}
     ),
     "pallas": frozenset(
         {"j_dtype", "block_r", "interpret", "noise_mode", "field_mode",
-         "j_bits"}
+         "j_bits", "n_replicas"}
     ),
     # partition='spin': the shard_map backend wraps any base field style and
     # tolerates (ignores) the single-device resident-kernel knobs, so the
     # fallback chain can walk pallas→dense→sparse under spin sharding too.
     "spinshard": frozenset(
         {"j_dtype", "j_mode", "tile_n", "field_mode", "j_bits",
-         "double_buffer", "block_r", "interpret", "noise_mode"}
+         "double_buffer", "block_r", "interpret", "noise_mode", "n_replicas"}
     ),
 }
 
@@ -239,8 +242,11 @@ def group_fingerprint(kind: str, n_bucket: int, backend: str,
     hsh.update(repr((kind, n_bucket, backend, storage_layout, noise,
                      chunk, partition, mesh_fp)).encode())
     for _idx, req, _maxcut, model in items:
+        cfg = getattr(req, "config", None)
         hsh.update(repr((req.seed, req.storage, req.schedule_kind,
-                         req.target_cut, req.hp)).encode())
+                         req.target_cut, req.hp,
+                         cfg.signature() if cfg is not None else None,
+                         getattr(req, "algo", None))).encode())
         for arr in (model.h, model.nbr_idx, model.nbr_w):
             a = np.ascontiguousarray(np.asarray(arr))
             hsh.update(str(a.dtype).encode())

@@ -77,6 +77,7 @@ from .anneal_service import (
     _largest_divisor_leq,
     _opts_key,
 )
+from .registry import family_for
 from .resilience import (
     STATUS_DEADLINE,
     STATUS_FAILED,
@@ -188,7 +189,7 @@ class _SlotTable:
     """One resident compiled batch: stacked problems + engine state + slots."""
 
     def __init__(self, key, nb, d_bucket, chunk, backend, opts, part,
-                 storage, schedule_kind, hp0):
+                 storage, schedule_kind, hp0, kind="ssa"):
         self.key = key
         self.nb = nb
         self.d_bucket = d_bucket
@@ -196,6 +197,7 @@ class _SlotTable:
         self.backend = backend          # effective (may walk fallback chain)
         self.opts = dict(opts)
         self.part = part
+        self.kind = kind                # family name: 'ssa' | 'ssqa'
         self.storage = storage
         self.schedule_kind = schedule_kind
         self.hp0 = hp0                  # exemplar: n_trials/n_rnd/schedule
@@ -231,9 +233,11 @@ class StreamingAnnealService:
     — shares its executable cache, resilience policy and fault hooks) or
     pass :class:`AnnealService` constructor keywords directly.  Drive it
     synchronously (``submit()`` + ``run_until_idle()`` / ``pump()``) or as a
-    background loop (``start()`` / ``stop()``).  Only SSA-family requests
-    are admitted: the slot tables are plateau programs (SA / PT-SSA requests
-    belong on the one-shot path).
+    background loop (``start()`` / ``stop()``).  Only plateau-family
+    requests (SSA and SSQA — SSQA slot tables carry the Trotter-replica
+    axis through splice/extract untouched, since it lives on the trial
+    axis) are admitted: the slot tables are plateau programs (SA / PT-SSA
+    requests belong on the one-shot path).
     """
 
     def __init__(self, service: Optional[AnnealService] = None, *,
@@ -280,15 +284,19 @@ class StreamingAnnealService:
         if isinstance(request.hp, str):
             hp, report = resolve_hyperparams(
                 request.hp, model, base=request.auto_base,
-                seed=svc.autotune_seed,
+                seed=svc.autotune_seed, algo=request.algo,
             )
             request = dataclasses.replace(request, hp=hp)
             self.stats["autotuned"] += 1
-        if not isinstance(request.hp, SSAHyperParams):
+        fam = family_for(request.hp, algo=request.algo)
+        if fam.solver != "_solve_ssa_group":
             raise AdmissionError(
-                "the streaming service serves SSA-family requests only; "
-                f"got {type(request.hp).__name__} (use AnnealService.solve)"
+                "the streaming service serves plateau-family requests only "
+                f"(ssa/ssqa); got {type(request.hp).__name__} "
+                "(use AnnealService.solve)"
             )
+        if fam.validate is not None:
+            fam.validate(svc, seq, request, request.hp)
         cost = float(request.hp.total_cycles) * request.hp.n_trials * model.n
         ticket = StreamTicket(seq, request, priority, time.monotonic(), cost,
                               autotune=report)
@@ -426,28 +434,45 @@ class StreamingAnnealService:
     def _stream_key(self, ticket: StreamTicket):
         """The slot-table identity of one request (all program-structural
         statics): requests share a table iff they can share its compiled
-        chunk program *and* its stacked problem representation."""
+        chunk program *and* its stacked problem representation.  SSQA
+        requests key (and run) with their family name, replica count folded
+        into the opts, exactly mirroring the one-shot group solver; a
+        per-request :class:`SolverConfig` re-derives backend/opts and joins
+        the key via its signature."""
         svc = self.service
         req = ticket.request
         hp: SSAHyperParams = req.hp
+        kind = family_for(hp, algo=req.algo).name
         model = ticket._model
         nb = bucket_n(model.n, svc.min_bucket)
         d_bucket = next_pow2(max(1, model.max_degree))
         chunk = _largest_divisor_leq(hp.m_shot, svc.chunk_shots)
-        backend = svc.backend
-        opts = dict(svc.backend_opts)
-        part = svc.partition_for("ssa", nb)
+        cfg = req.config
+        if cfg is not None:
+            backend = cfg.backend
+            opts = cfg.engine_opts()
+            opts.pop("storage_layout", None)
+        else:
+            backend = svc.backend
+            opts = dict(svc.backend_opts)
+        part = svc.partition_for(kind, nb)
         if backend == "auto":
             from repro.core.engine import resolve_backend
             backend = resolve_backend(backend, nb)
             opts = filter_backend_opts(backend, opts, partition=part)
         opts = svc._resolve_field_opts(backend, opts,
                                        [(ticket.seq, req, None, model)])
+        nr = int(getattr(hp, "n_replicas", 0) or 0)
+        if nr:
+            opts["n_replicas"] = nr
+            if backend == "pallas":
+                opts.setdefault("noise_mode", "streamed")
         sig = hp.schedule(req.schedule_kind).signature()
-        return ("stream-ssa", nb, d_bucket, hp.n_trials, hp.n_rnd,
+        return ("stream-" + kind, nb, d_bucket, hp.n_trials, hp.n_rnd,
                 req.storage, sig, chunk, backend, _opts_key(opts), part,
-                mesh_fingerprint(svc.mesh) if part == "spin" else ()), \
-            (nb, d_bucket, chunk, backend, opts, part)
+                mesh_fingerprint(svc.mesh) if part == "spin" else (),
+                cfg.signature() if cfg is not None else None), \
+            (nb, d_bucket, chunk, backend, opts, part, kind)
 
     def _seat_queued(self):
         """Fill free slots (and open new tables) from the queue in rank
@@ -488,12 +513,13 @@ class StreamingAnnealService:
             nb=table.nb, b_bucket=self.policy.slots_per_table, hp=table.hp0,
             storage=table.storage, schedule_kind=table.schedule_kind,
             backend=table.backend, opts=table.opts, chunk=table.chunk,
-            fire=fire,
+            fire=fire, kind=table.kind,
         )
         bk1, init1, _, _ = svc._ssa_programs(
             nb=table.nb, b_bucket=1, hp=table.hp0,
             storage=table.storage, schedule_kind=table.schedule_kind,
             backend=table.backend, opts=table.opts, chunk=table.chunk,
+            kind=table.kind,
         )
         table.bk, table.chunk_fn, table.plateaus = bk, chunk_fn, plateaus
         table.bk1, table.init1 = bk1, init1
@@ -502,7 +528,7 @@ class StreamingAnnealService:
         )
 
     def _create_table(self, key, params, ticket: StreamTicket) -> _SlotTable:
-        nb, d_bucket, chunk, backend, opts, part = params
+        nb, d_bucket, chunk, backend, opts, part, kind = params
         svc = self.service
         req = ticket.request
         S = self.policy.slots_per_table
@@ -514,7 +540,8 @@ class StreamingAnnealService:
             # keeps the ORIGINAL stream key — the key routes requests, the
             # table records the effective backend.
             table = _SlotTable(key, nb, d_bucket, chunk, backend, opts, part,
-                               req.storage, req.schedule_kind, req.hp)
+                               req.storage, req.schedule_kind, req.hp,
+                               kind=kind)
             table.model0 = model0
             table.events = list(carried)
             table.degraded = bool(carried)
@@ -522,7 +549,7 @@ class StreamingAnnealService:
                 self._programs_for(table)
                 if svc.faults is not None:
                     svc.faults.fire(
-                        "oom", backend=backend, kind="ssa", bucket=nb,
+                        "oom", backend=backend, kind=kind, bucket=nb,
                         batch=S, j_mode=getattr(table.bk, "j_mode", None),
                     )
                 table.stacked = table.bk.stack([model0] * S)
@@ -555,7 +582,7 @@ class StreamingAnnealService:
         slot checkpoints and solo-group checkpoints are interchangeable."""
         svc = self.service
         return group_fingerprint(
-            "ssa", table.nb, table.backend, svc.storage_layout, svc.noise,
+            table.kind, table.nb, table.backend, svc.storage_layout, svc.noise,
             table.chunk, [(0, ticket.request, ticket._maxcut, ticket._model)],
             partition=table.part,
             mesh_fp=(mesh_fingerprint(svc.mesh)
@@ -661,7 +688,7 @@ class StreamingAnnealService:
         # The 'nan' hook corrupts the detector's float view (chaos parity
         # with the one-shot path); detection itself is the production check.
         readings = best_H.astype(np.float64)
-        spec = (svc.faults.fire("nan", kind="ssa", chunk=table.quanta - 1)
+        spec = (svc.faults.fire("nan", kind=table.kind, chunk=table.quanta - 1)
                 if svc.faults is not None else None)
         if spec is not None:
             for sl in (spec.slots or range(len(table.slots))):
@@ -694,7 +721,7 @@ class StreamingAnnealService:
             items = [(i, s) for i, s in enumerate(table.slots)
                      if s is not None and i in bests]
             progress(AnnealProgress(
-                kind="ssa", bucket=table.nb, chunk=table.quanta - 1,
+                kind=table.kind, bucket=table.nb, chunk=table.quanta - 1,
                 chunks_total=0,
                 request_indices=tuple(s.ticket.seq for _, s in items),
                 best_cut=tuple(bests[i] for i, _ in items),
@@ -712,7 +739,7 @@ class StreamingAnnealService:
                     meta={"traces": [s.trace]},
                 )
         if svc.faults is not None:
-            svc.faults.fire("kill", kind="ssa", chunk=table.quanta - 1)
+            svc.faults.fire("kill", kind=table.kind, chunk=table.quanta - 1)
 
         if retired:
             bh_dev, bm_dev = table.bk.finalize(table.state)
